@@ -1,0 +1,50 @@
+"""Paper Figs 15-16 + Tables 2/5: data-dependency sweeps and Eq.-2 fits."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fitted_vampire, row, timer
+from repro.core import params as P
+from repro.core.characterize import IL_MODES
+
+
+def run() -> list[str]:
+    out = []
+    with timer() as t:
+        model = fitted_vampire()
+    for v in range(3):
+        vc = model.by_vendor[v]
+        # Fig 15: swing of read/write current over the full ones range
+        rd = vc.ones_sweep[("none", "RD")]
+        wr = vc.ones_sweep[("none", "WR")]
+        rd_swing = float(rd["current"].max() - rd["current"].min())
+        wr_swing = float(wr["current"].max() - wr["current"].min())
+        out.append(row(f"datadep.ones_swing.{'ABC'[v]}", t.us / 3,
+                       f"read_swing_mA={rd_swing:.1f};"
+                       f"write_swing_mA={wr_swing:.1f};"
+                       f"paper_A_read=434;paper_A_write=311"))
+        # Table 2/5 recovery per interleave mode (column mode == Table 2)
+        for mi, mode in enumerate(IL_MODES):
+            fit = vc.datadep[mi]
+            truth = P.TABLE5[v][mi]
+            err0 = abs(fit[0][0] - truth[0][0]) / truth[0][0] * 100
+            out.append(row(
+                f"datadep.table5.{'ABC'[v]}.{mode}", t.us / 12,
+                f"rd_Izero={fit[0][0]:.1f}(true {truth[0][0]:.1f});"
+                f"rd_dIone={fit[0][1]:.3f}(true {truth[0][1]:.3f});"
+                f"wr_dIone={fit[1][1]:.3f}(true {truth[1][1]:.3f});"
+                f"Izero_err%={err0:.1f}"))
+        # model-vs-measurement error (paper: <=1.40%, avg 0.34%)
+        errs = []
+        for (mode, op), sweep in vc.ones_sweep.items():
+            mi = IL_MODES.index(mode)
+            oi = 0 if op == "RD" else 1
+            pred = (vc.datadep[mi, oi, 0]
+                    + vc.datadep[mi, oi, 1] * sweep["ones"]
+                    + vc.datadep[mi, oi, 2] * sweep["toggles"])
+            errs += list(np.abs(pred - sweep["corrected"])
+                         / np.abs(sweep["corrected"]) * 100)
+        out.append(row(f"datadep.model_err.{'ABC'[v]}", t.us / 3,
+                       f"max%={np.max(errs):.2f};mean%={np.mean(errs):.2f};"
+                       f"paper_max=1.40;paper_mean=0.34"))
+    return out

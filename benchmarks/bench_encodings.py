@@ -1,0 +1,36 @@
+"""Paper Fig 26 / Section 10: DRAM energy under the four cache-line
+encodings, normalized to Baseline. Target: OWI ~ -12.2% mean (up to
+-28.6%), Optimized ~ 0, BDI ~ 0."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fitted_vampire, row, timer
+from repro.core import encodings, traces
+
+
+def run() -> list[str]:
+    out = []
+    with timer() as t:
+        model = fitted_vampire()
+        ratios = {e: [] for e in encodings.ENCODINGS}
+        for app in traces.SPEC_APPS:
+            tr = traces.app_trace(app, n_requests=1000)
+            base = None
+            for enc in encodings.ENCODINGS:
+                te = encodings.encode_trace(tr, enc)
+                # average across vendors, as in Fig 26
+                e = float(np.mean([model.estimate(te, v).energy_pj
+                                   for v in range(3)]))
+                if enc == "baseline":
+                    base = e
+                ratios[enc].append(e / base)
+    paper = {"baseline": (1.0, 1.0), "bdi": (1.0, 1.0),
+             "optimized": (1.0, 1.0), "owi": (0.878, 0.714)}
+    for enc in encodings.ENCODINGS:
+        r = np.array(ratios[enc])
+        out.append(row(
+            f"encodings.{enc}", t.us / 4,
+            f"mean={np.mean(r):.3f};min={np.min(r):.3f};max={np.max(r):.3f};"
+            f"paper_mean={paper[enc][0]:.3f};paper_best={paper[enc][1]:.3f}"))
+    return out

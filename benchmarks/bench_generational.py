@@ -1,0 +1,49 @@
+"""Paper Fig 23 / Section 7: generational power trends (Vendor C
+2011/2012/2015) — measured savings are far below datasheet savings."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timer
+from repro.core import device_sim, idd_loops
+from repro.core import params as P
+from repro.core.characterize import derive_datasheets
+
+
+def _measure(year: int, key: str) -> float:
+    specs = ([P.ModuleSpec(2, 100 + i, year) for i in range(3)]
+             if year == 2011 else
+             [P.ModuleSpec(2, 200 + i, year) for i in range(4)]
+             if year == 2012 else
+             [P.ModuleSpec(2, i, 2015) for i in range(6)])
+    mods = device_sim.make_fleet(specs)
+    loop = idd_loops.IDD_LOOPS[key]()
+    return float(np.mean([m.measure_current(loop) for m in mods]))
+
+
+def run() -> list[str]:
+    paper = {"IDD0": (192.1, 64.0), "IDD4R": (212.2, 140.6),
+             "IDD4W": (200.2, 147.4)}
+    results = []
+    with timer() as t:
+        ds2015 = derive_datasheets()[2]
+        for key in ("IDD2N", "IDD0", "IDD4R", "IDD4W"):
+            m = {y: _measure(y, key) for y in (2011, 2012, 2015)}
+            gen_ds = P.GEN_DATASHEET_SCALE.get(
+                key, P.GEN_DATASHEET_SCALE["IDD2N"])
+            ds = {y: ds2015[key] * gen_ds[i]
+                  for i, y in enumerate((2011, 2012, 2015))}
+            results.append((key, m[2011] - m[2015], ds[2011] - ds[2015]))
+    out = []
+    for key, meas_saving, ds_saving in results:
+        frac = meas_saving / ds_saving if ds_saving else float("nan")
+        extra = ""
+        if key in paper:
+            extra = (f";paper_promised={paper[key][0]:.0f}"
+                     f";paper_measured={paper[key][1]:.0f}")
+        out.append(row(
+            f"generational.{key}.C", t.us / 4,
+            f"measured_saving_mA={meas_saving:.1f};"
+            f"datasheet_saving_mA={ds_saving:.1f};"
+            f"achieved_frac={frac:.2f}" + extra))
+    return out

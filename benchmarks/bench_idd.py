@@ -1,0 +1,37 @@
+"""Paper Figs 5-14 / Section 4: measured IDD values vs datasheet.
+
+For every IDD loop and vendor: the per-module measured distribution
+(mean/min/max), the measured/datasheet ratio, and the paper's reported
+ratio for comparison."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fitted_vampire, row, timer
+from repro.core import params as P
+from repro.core.characterize import IDD_KEYS
+
+
+def run() -> list[str]:
+    out = []
+    with timer() as t:
+        model = fitted_vampire()
+    for key in IDD_KEYS:
+        for v in range(3):
+            vc = model.by_vendor[v]
+            meas = vc.idd_measured[key]
+            ds = vc.idd_datasheet[key]
+            ratio = float(np.mean(meas)) / ds
+            paper = P.MEASURED_OVER_DATASHEET[key][v]
+            rng = (np.max(meas) - np.min(meas)) / ds
+            out.append(row(
+                f"idd.{key}.{'ABC'[v]}", t.us / 27,
+                f"mean_mA={np.mean(meas):.1f};datasheet_mA={ds:.1f};"
+                f"ratio={ratio:.3f};paper_ratio={paper:.3f};"
+                f"norm_range={rng:.3f}"))
+    # Section 4 frequency-extrapolation goodness of fit
+    worst = min(min(vc.idd_extrapolation_r2.values())
+                for vc in model.by_vendor.values())
+    out.append(row("idd.extrapolation_r2", t.us / 27,
+                   f"worst_r2={worst:.4f};paper_worst=0.9783"))
+    return out

@@ -1,0 +1,37 @@
+"""Roofline summary (deliverable g): reads the dry-run artifacts and emits
+per-cell roofline terms. The full table lives in EXPERIMENTS.md; this
+benchmark asserts the artifacts exist and surfaces the key aggregates."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import row, timer
+from repro.launch import roofline
+
+
+def run() -> list[str]:
+    out = []
+    art_dir = os.path.join(os.path.dirname(__file__), "..",
+                           "artifacts", "dryrun")
+    if not os.path.isdir(art_dir):
+        return [row("roofline.missing", 0,
+                    "run python -m repro.launch.dryrun --all first")]
+    with timer() as t:
+        rows = roofline.load_artifacts(art_dir, mesh_tag="16x16")
+    if not rows:
+        return [row("roofline.missing", t.us, "no 16x16 artifacts")]
+    for r in rows:
+        out.append(row(
+            f"roofline.{r.arch}.{r.shape}", t.us / len(rows),
+            f"compute_s={r.compute_s:.3e};memory_s={r.memory_s:.3e};"
+            f"collective_s={r.collective_s:.3e};dominant={r.dominant};"
+            f"roofline_frac={r.roofline_fraction:.3f};"
+            f"model_over_hlo_flops={r.flops_ratio:.2f};"
+            f"peak_GiB={r.peak_gib:.2f}"))
+    by_dom = {}
+    for r in rows:
+        by_dom[r.dominant] = by_dom.get(r.dominant, 0) + 1
+    out.append(row("roofline.summary", t.us,
+                   f"cells={len(rows)};" + ";".join(
+                       f"{k}_bound={v}" for k, v in sorted(by_dom.items()))))
+    return out

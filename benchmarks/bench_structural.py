@@ -1,0 +1,37 @@
+"""Paper Figs 19-22 / Section 6: structural variation across banks & rows."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fitted_vampire, row, timer
+from repro.core import params as P
+
+
+def run() -> list[str]:
+    out = []
+    with timer() as t:
+        model = fitted_vampire()
+    for v in range(3):
+        vc = model.by_vendor[v]
+        # Fig 19: one-bank-open idle current normalized to bank 0
+        idle = vc.i2n + vc.bank_open_delta
+        norm = idle / idle[0]
+        out.append(row(
+            f"structural.bank_idle.{'ABC'[v]}", t.us / 9,
+            f"max_vs_bank0={np.max(norm) - 1:.3f};"
+            f"mean_vs_bank0={np.mean(norm[1:] - 1):.3f};"
+            f"paper_C_max=0.236;paper_C_avg=0.154"))
+        # Fig 20/21: read/write current variation across banks
+        out.append(row(
+            f"structural.bank_rw.{'ABC'[v]}", t.us / 9,
+            f"read_spread={np.ptp(vc.bank_read_factor):.3f}"
+            f"(true {np.ptp(P.BANK_READ_FACTORS[v]):.3f});"
+            f"write_spread={np.ptp(vc.bank_write_factor):.3f}(true 0)"))
+        # Fig 22: activation current vs ones in the row address
+        frac_at_15 = vc.row_ones_slope * 15
+        out.append(row(
+            f"structural.row_ones.{'ABC'[v]}", t.us / 9,
+            f"increase_at_15_ones={frac_at_15:.3f}"
+            f"(true {P.ROW_ONES_SLOPE[v] * 15:.3f});"
+            f"fit_r2={vc.row_sweep['r2']:.3f};paper_B=0.146"))
+    return out

@@ -1,0 +1,47 @@
+"""VAMPIRE evaluation throughput (ours): commands/second of the scan
+oracle vs the vectorized path vs the Pallas-fused path on a large
+application trace. Fleet-scale use means 1e9+ command traces; the paper's
+own tooling is a serial C++ program."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import fitted_vampire, row, timer
+from repro.core import traces
+from repro.core.energy_model import (trace_energy_scan,
+                                     trace_energy_vectorized)
+from repro.kernels.vampire_energy.ops import trace_energy_kernel
+
+
+def _bench(fn, tr, pp, reps=3):
+    r = fn(tr, pp)  # compile
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(tr, pp)
+        jax.block_until_ready(r)
+    dt = (time.perf_counter() - t0) / reps
+    return dt, float(r.avg_current_ma)
+
+
+def run() -> list[str]:
+    out = []
+    model = fitted_vampire()
+    pp = model.params(0)
+    tr = traces.app_trace(traces.SPEC_APPS[3], n_requests=30_000)
+    n = int(tr.n)
+    with timer() as t:
+        dt_scan, i_scan = _bench(trace_energy_scan, tr, pp, reps=1)
+        dt_vec, i_vec = _bench(trace_energy_vectorized, tr, pp)
+        dt_ker, i_ker = _bench(trace_energy_kernel, tr, pp)
+    out.append(row("throughput.scan", dt_scan * 1e6,
+                   f"cmds_per_s={n/dt_scan:.3e};I={i_scan:.1f}mA"))
+    out.append(row("throughput.vectorized", dt_vec * 1e6,
+                   f"cmds_per_s={n/dt_vec:.3e};speedup_vs_scan="
+                   f"{dt_scan/dt_vec:.1f}x;I={i_vec:.1f}mA"))
+    out.append(row("throughput.pallas_fused", dt_ker * 1e6,
+                   f"cmds_per_s={n/dt_ker:.3e};speedup_vs_scan="
+                   f"{dt_scan/dt_ker:.1f}x;I={i_ker:.1f}mA"))
+    return out

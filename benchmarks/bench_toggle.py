@@ -1,0 +1,24 @@
+"""Paper Fig 18: toggle sensitivity (mA per toggling wire) per interleave
+mode — must be much smaller than the ones effect, and bank+col < col."""
+from __future__ import annotations
+
+from benchmarks.common import fitted_vampire, row, timer
+from repro.core import params as P
+
+
+def run() -> list[str]:
+    out = []
+    with timer() as t:
+        model = fitted_vampire()
+    for v in range(3):
+        vc = model.by_vendor[v]
+        col_rd = float(vc.datadep[1, 0, 2])
+        bankcol_rd = float(vc.datadep[3, 0, 2])
+        ones_rd = float(vc.datadep[1, 0, 1])
+        out.append(row(
+            f"toggle.sensitivity.{'ABC'[v]}", t.us / 3,
+            f"col_mA_per_bit={col_rd:.4f}(true {P.TABLE5[v][1][0][2]:.4f});"
+            f"bankcol_mA_per_bit={bankcol_rd:.4f}"
+            f"(true {P.TABLE5[v][3][0][2]:.4f});"
+            f"ones_effect_x={abs(ones_rd / max(col_rd, 1e-6)):.1f}"))
+    return out

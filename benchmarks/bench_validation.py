@@ -1,0 +1,23 @@
+"""Paper Fig 24 / Section 9.1: model validation MAPE — VAMPIRE vs
+DRAMPower vs the Micron power calculator against 'measured' current."""
+from __future__ import annotations
+
+from benchmarks.common import fitted_vampire, full_fleet, row, timer
+from repro.core.validate import run_validation
+
+PAPER = {"vampire": 6.8, "drampower": 32.4, "micron": 160.6}
+
+
+def run() -> list[str]:
+    out = []
+    with timer() as t:
+        model = fitted_vampire()
+        res = run_validation(model, fleet=full_fleet())
+    for name in ("vampire", "drampower", "micron"):
+        per_v = res.mape[name]
+        out.append(row(
+            f"validation.mape.{name}", t.us / 3,
+            f"A={per_v.get(0, 0):.1f}%;B={per_v.get(1, 0):.1f}%;"
+            f"C={per_v.get(2, 0):.1f}%;mean={res.mape_mean[name]:.1f}%;"
+            f"paper={PAPER[name]:.1f}%"))
+    return out

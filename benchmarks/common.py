@@ -1,0 +1,60 @@
+"""Shared benchmark infrastructure: the full-fleet characterization is
+expensive (it is the paper's entire measurement campaign), so it is cached
+on disk and reused across benchmark modules."""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+CACHE = os.path.join(ARTIFACTS, "vampire_fit.pkl")
+
+_model = None
+_fleet = None
+
+
+def full_fleet():
+    global _fleet
+    if _fleet is None:
+        from repro.core import device_sim
+        _fleet = device_sim.make_fleet()
+    return _fleet
+
+
+def fitted_vampire(refit: bool = False):
+    """The paper's 50-module campaign, cached."""
+    global _model
+    if _model is not None and not refit:
+        return _model
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    if os.path.exists(CACHE) and not refit:
+        try:
+            with open(CACHE, "rb") as f:
+                _model = pickle.load(f)
+            return _model
+        except Exception:
+            pass
+    from repro.core.vampire import Vampire
+    t0 = time.time()
+    _model = Vampire.fit(full_fleet(), probe_modules=5, probe_reps=128,
+                         n_rows=16)
+    print(f"# characterization campaign: {time.time()-t0:.0f}s")
+    for vc in _model.by_vendor.values():
+        vc.build_params()
+    with open(CACHE, "wb") as f:
+        pickle.dump(_model, f)
+    return _model
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.0f},{derived}"

@@ -1,0 +1,56 @@
+"""Quickstart: the paper's pipeline end to end, in miniature.
+
+1. Build a small simulated DRAM module fleet (the measurement rig).
+2. Run the characterization campaign and fit VAMPIRE.
+3. Validate against held-out measurements vs DRAMPower / Micron.
+4. Estimate the energy of an application trace and of a framework tensor.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import device_sim, encodings, params as P, traces
+from repro.core.validate import run_validation
+from repro.core.vampire import Vampire
+
+
+def main():
+    print("== 1. simulated fleet (9 modules, 3 vendors) ==")
+    fleet = device_sim.make_fleet(
+        [P.ModuleSpec(v, i, 2015) for v in range(3) for i in range(3)])
+
+    print("== 2. characterization campaign + VAMPIRE fit ==")
+    model = Vampire.fit(fleet, probe_modules=2, probe_reps=64, n_rows=8)
+    for v, vc in model.by_vendor.items():
+        print(f"  vendor {'ABC'[v]}: col-interleaved read fit "
+          f"I = {vc.datadep[1,0,0]:.1f} + {vc.datadep[1,0,1]:.3f}*ones "
+          f"+ {vc.datadep[1,0,2]:.4f}*toggles  (paper Table 2: "
+          f"{P.TABLE5[v][1][0][0]:.1f}, {P.TABLE5[v][1][0][1]:.3f}, "
+          f"{P.TABLE5[v][1][0][2]:.4f})")
+
+    print("== 3. validation vs baselines (paper Fig 24) ==")
+    res = run_validation(model, fleet=fleet,
+                         n_values=(0, 2, 8, 32, 128, 512, 764))
+    print(res.summary())
+
+    print("== 4. energy of an app trace, per encoding ==")
+    tr = traces.app_trace(traces.SPEC_APPS[7], n_requests=500)  # libquantum
+    for enc in encodings.ENCODINGS:
+        te = encodings.encode_trace(tr, enc)
+        e = np.mean([float(model.estimate(te, v).energy_pj)
+                     for v in range(3)])
+        print(f"  {enc:10s}: {e/1e6:.2f} uJ")
+
+    print("== 5. TPU/HBM adaptation: tensor read energy ==")
+    import jax
+    from repro.core import hbm
+    m = hbm.HbmEnergyModel.from_vampire(model.params(0))
+    x = jax.random.normal(jax.random.key(0), (1024, 1024), jax.numpy.bfloat16)
+    ones, togg = hbm.tensor_stats(x)
+    pj = m.read_energy_pj(x.size * 2, ones, togg)
+    print(f"  bf16 activation tensor: ones={ones:.3f} toggle={togg:.3f} "
+          f"-> {pj/1e6:.2f} uJ per full read of {x.size*2/1e6:.1f} MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Batched serving example: prefill + decode with KV caches on a small
+model, reporting latency percentiles and throughput.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2.5-3b
+"""
+import argparse
+
+from repro.launch.serve import ServeJob, run
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen2.5-3b")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=64)
+    p.add_argument("--decode-tokens", type=int, default=48)
+    args = p.parse_args()
+    res = run(ServeJob(arch=args.arch, smoke=True, batch=args.batch,
+                       prompt_len=args.prompt_len,
+                       decode_tokens=args.decode_tokens))
+    print(f"prefill: {res['prefill_s']:.2f}s")
+    print(f"decode:  p50={res['decode_p50_ms']:.1f}ms "
+          f"p99={res['decode_p99_ms']:.1f}ms  "
+          f"{res['tokens_per_s']:.1f} tok/s")
+    print("sample token ids:", res["tokens"][0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Checkpoint manager: atomic, keep-K, optionally asynchronous, reshardable.
+
+Layout: ``<dir>/step_<n>/ {manifest.json, arrays.npz}`` written to a temp
+directory and atomically renamed (a partially-written checkpoint can never
+be restored). Restore takes a target pytree of ShapeDtypeStructs + shardings
+and re-shards on load, which is what elastic rescaling uses (train on one
+mesh, resume on another).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: dict | None = None):
+        arrays = _flatten_with_paths(tree)
+        host_arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_arrays, extra or {}))
+            self._thread.start()
+        else:
+            self._write(step, host_arrays, extra or {})
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_arrays: dict, extra: dict):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), **host_arrays)
+            manifest = {"step": step, "time": time.time(), "extra": extra,
+                        "keys": sorted(host_arrays)}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """target_tree: pytree of arrays or ShapeDtypeStructs (the template).
+        shardings: matching pytree of NamedSharding (optional -> resharded
+        on load; this is the elastic-rescale path)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+        shard_flat = (treedef.flatten_up_to(shardings)
+                      if shardings is not None else [None] * len(leaves_p))
+        out = []
+        for (pth, template), shd in zip(leaves_p, shard_flat):
+            key = jax.tree_util.keystr(pth)
+            arr = data[key]
+            target = np.dtype(template.dtype)
+            if arr.dtype.kind == "V" and arr.dtype.itemsize == \
+                    target.itemsize:
+                # npz round-trips ml_dtypes (bfloat16, int8 variants...) as
+                # raw void records; reinterpret in place
+                arr = arr.view(target)
+            arr = arr.astype(target)
+            if shd is not None:
+                out.append(jax.device_put(arr, shd))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_manifest(self, step: int) -> dict:
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)

@@ -1,0 +1,104 @@
+"""Architecture registry + assigned input shapes.
+
+Every assigned (architecture x shape) cell is enumerable through
+``all_cells()``; ``input_specs()`` produces ShapeDtypeStruct stand-ins for
+each step function's inputs (no device allocation), which is what the
+multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import LM
+from repro.models.meta import abstractify
+
+_MODULES = {
+    "qwen2.5-3b": "qwen2_5_3b",
+    "granite-8b": "granite_8b",
+    "qwen2-7b": "qwen2_7b",
+    "yi-34b": "yi_34b",
+    "mamba2-780m": "mamba2_780m",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "whisper-small": "whisper_small",
+    "jamba-1.5-large-398b": "jamba15_large_398b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_applicable(arch: str, shape: str) -> bool:
+    """long_500k needs sub-quadratic attention: run only for SSM/hybrid
+    (see DESIGN.md Arch-applicability)."""
+    if shape == "long_500k":
+        return get_config(arch).subquadratic
+    return True
+
+
+def all_cells():
+    return [(a, s) for a in ARCH_NAMES for s in SHAPES
+            if cell_applicable(a, s)]
+
+
+def skipped_cells():
+    return [(a, s) for a in ARCH_NAMES for s in SHAPES
+            if not cell_applicable(a, s)]
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; weak-type-correct, shardable)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                batch_override: int | None = None) -> dict:
+    """Step-function inputs for the given (arch, shape) cell."""
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        specs = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32)}
+        if cfg.aux_seq:
+            specs["aux"] = _sds((b, cfg.aux_seq, cfg.d_model), dt)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.aux_seq:
+            specs["aux"] = _sds((b, cfg.aux_seq, cfg.d_model), dt)
+        return specs
+    if shape.kind == "decode":
+        lm = LM(cfg)
+        cache_meta = lm.init_cache_meta(b, s)
+        return {"tokens": _sds((b, 1), jnp.int32),
+                "caches": abstractify(cache_meta)}
+    raise ValueError(shape.kind)

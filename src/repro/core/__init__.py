@@ -1,0 +1,10 @@
+"""repro.core — the paper's contribution: measurement-grounded DRAM power
+modeling (VAMPIRE), its characterization pipeline, baselines, and the data
+encoding case study, plus the TPU/HBM adaptation used by the framework."""
+
+from repro.core.dram import (CommandTrace, Timing, TIMING, VDD,  # noqa: F401
+                             make_trace, concat_traces, tile_trace)
+from repro.core.energy_model import (PowerParams, EnergyReport,  # noqa: F401
+                                     trace_energy_scan,
+                                     trace_energy_vectorized)
+from repro.core.vampire import Vampire, reference_vampire  # noqa: F401

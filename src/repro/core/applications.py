@@ -1,0 +1,190 @@
+"""The paper's Section 9.3 example applications, implemented.
+
+The paper names three uses VAMPIRE enables; Section 10 develops the third
+(data encodings — see `encodings.py`). This module implements the first two:
+
+1. **Variation-aware physical page allocation**: using the fitted
+   structural model (per-bank idle/read factors, row-address-ones
+   activation slope), place frequently-accessed pages in the
+   cheapest (bank, row) locations and quantify the energy saved vs. a
+   variation-oblivious allocator.
+
+2. **Power-down scheduling**: from the fitted idle / power-down currents
+   and entry/exit overheads, derive the break-even idle time per vendor
+   and evaluate a timeout-based PDE policy on application traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import dram, traces
+from repro.core.dram import PDE, PDX, PRE, PREA, NOP, RD, WR, ACT, TIMING
+from repro.core.energy_model import PowerParams
+
+_T = TIMING
+
+
+# ---------------------------------------------------------------------------
+# 1. Variation-aware page allocation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PagePlan:
+    bank_order: np.ndarray      # banks sorted cheapest-first for reads
+    row_classes: np.ndarray     # row-address popcount per candidate row
+    est_saving_frac: float
+
+
+def rank_banks_for_reads(pp: PowerParams) -> np.ndarray:
+    """Banks sorted by (read factor, idle increment): the allocator targets
+    read-heavy hot pages, then open-page residency cost."""
+    rf = np.asarray(pp.bank_read_factor)
+    idle = np.asarray(pp.bank_open_delta)
+    score = rf + idle / max(float(np.max(idle)), 1e-9) * 0.01
+    return np.argsort(score)
+
+
+def cheap_rows(n_rows: int, total_rows: int = 1 << dram.ROW_BITS
+               ) -> np.ndarray:
+    """Rows sorted by address popcount (activation energy grows with it)."""
+    rows = np.arange(total_rows, dtype=np.int64)
+    pops = np.zeros(total_rows, dtype=np.int16)
+    for b in range(dram.ROW_BITS):
+        pops += ((rows >> b) & 1).astype(np.int16)
+    order = np.argsort(pops, kind="stable")
+    return rows[order[:n_rows]]
+
+
+def remap_trace(trace, pp: PowerParams, hot_frac: float = 0.25):
+    """Re-map the hottest (bank,row) pages of a trace onto the cheapest
+    banks/rows per the structural model. Returns the re-mapped trace.
+
+    The remap is a pure address transformation (data untouched): exactly
+    what an OS page allocator could do with VAMPIRE's structural tables.
+    """
+    cmd = np.asarray(trace.cmd)
+    bank = np.asarray(trace.bank).copy()
+    row = np.asarray(trace.row).copy()
+
+    rw = (cmd == RD) | (cmd == WR) | (cmd == ACT)
+    pages, counts = np.unique(
+        np.stack([bank[rw], row[rw]], axis=1), axis=0, return_counts=True)
+    hot_idx = np.argsort(-counts)[:max(1, int(len(pages) * hot_frac))]
+    hot_pages = pages[hot_idx]
+
+    bank_order = rank_banks_for_reads(pp)
+    target_rows = cheap_rows(len(hot_pages))
+    mapping = {}
+    for i, (b, r) in enumerate(hot_pages):
+        nb = int(bank_order[i % len(bank_order)])
+        nr = int(target_rows[i])
+        mapping[(int(b), int(r))] = (nb, nr)
+
+    # apply; non-hot pages keep their location (collisions with relocated
+    # hot rows are acceptable for the study: same row ids in other banks)
+    for i in range(len(cmd)):
+        key = (int(bank[i]), int(row[i]))
+        if key in mapping:
+            bank[i], row[i] = mapping[key]
+
+    import jax.numpy as jnp
+    return trace._replace(bank=jnp.asarray(bank, jnp.int32),
+                          row=jnp.asarray(row, jnp.int32))
+
+
+def page_allocation_study(model, app: traces.AppSpec, vendor: int,
+                          n_requests: int = 800) -> dict:
+    tr = traces.app_trace(app, n_requests=n_requests)
+    base = float(model.estimate(tr, vendor).energy_pj)
+    remapped = remap_trace(tr, model.params(vendor))
+    opt = float(model.estimate(remapped, vendor).energy_pj)
+    return {"app": app.name, "vendor": "ABC"[vendor],
+            "baseline_pj": base, "remapped_pj": opt,
+            "saving_frac": 1 - opt / base}
+
+
+# ---------------------------------------------------------------------------
+# 2. Power-down scheduling
+# ---------------------------------------------------------------------------
+def breakeven_idle_cycles(pp: PowerParams) -> float:
+    """Idle cycles beyond which entering fast power-down wins.
+
+    Cost of powering down: the PRE-all + PDE/PDX overhead cycles spent at
+    i2n plus losing the open rows (one extra ACT on resume, amortized
+    pessimistically as one full activate charge). Benefit: (i2n - i_pd)
+    per idle cycle.
+    """
+    i2n = float(pp.i2n)
+    i_pd = float(pp.i_pd)
+    overhead_cycles = _T.tRP + 2 * _T.tCKE
+    overhead_charge = overhead_cycles * i2n + float(pp.q_actpre)
+    per_cycle_gain = max(i2n - i_pd, 1e-6)
+    return overhead_charge / per_cycle_gain
+
+
+def apply_powerdown_policy(trace, timeout_cycles: int):
+    """Insert {PREA, PDE, ..., PDX} into idle gaps >= timeout (a classic
+    timeout policy); gaps already powered down are left untouched."""
+    import jax.numpy as jnp
+    cmd = list(np.asarray(trace.cmd))
+    bank = list(np.asarray(trace.bank))
+    row = list(np.asarray(trace.row))
+    col = list(np.asarray(trace.col))
+    data = list(np.asarray(trace.data))
+    dt = list(np.asarray(trace.dt))
+    z = np.zeros(dram.LINE_WORDS, dtype=np.uint32)
+
+    out = {k: [] for k in ("cmd", "bank", "row", "col", "data", "dt")}
+
+    def emit(c, b, r, co, d, t):
+        out["cmd"].append(c); out["bank"].append(b); out["row"].append(r)
+        out["col"].append(co); out["data"].append(d); out["dt"].append(t)
+
+    i = 0
+    while i < len(cmd):
+        c = cmd[i]
+        gap = int(dt[i]) - (_T.tBURST if c in (RD, WR) else 0)
+        if c in (RD, WR, NOP) and gap >= timeout_cycles \
+                and c != PDE and (i + 1 >= len(cmd) or cmd[i + 1] != PDE):
+            # truncate this slot to its busy part, spend the gap in PD
+            busy = int(dt[i]) - gap
+            emit(c, bank[i], row[i], col[i], data[i], max(busy, 1))
+            emit(PREA, 0, 0, 0, z, _T.tRP)
+            emit(PDE, 0, 0, 0, z, max(gap - _T.tRP - _T.tCKE, 1))
+            emit(PDX, 0, 0, 0, z, _T.tCKE)
+        else:
+            emit(c, bank[i], row[i], col[i], data[i], int(dt[i]))
+        i += 1
+
+    return trace.__class__(
+        jnp.asarray(out["cmd"], jnp.int32),
+        jnp.asarray(out["bank"], jnp.int32),
+        jnp.asarray(out["row"], jnp.int32),
+        jnp.asarray(out["col"], jnp.int32),
+        jnp.asarray(np.stack(out["data"]).astype(np.uint32)),
+        jnp.asarray(out["dt"], jnp.int32))
+
+
+def powerdown_study(model, app: traces.AppSpec, vendor: int,
+                    n_requests: int = 800) -> dict:
+    """Evaluate the VAMPIRE-derived break-even timeout vs. naive timeouts.
+
+    NOTE: energies are compared at equal work; the PD trace is longer in
+    wall-clock (exit latencies), which the paper's second example is
+    precisely about pricing correctly.
+    """
+    pp = model.params(vendor)
+    be = breakeven_idle_cycles(pp)
+    tr = traces.app_trace(app, n_requests=n_requests)
+    base = float(model.estimate(tr, vendor).energy_pj)
+    results = {"app": app.name, "vendor": "ABC"[vendor],
+               "breakeven_cycles": be, "baseline_pj": base}
+    for name, timeout in (("aggressive", max(int(be * 0.25), 8)),
+                          ("breakeven", max(int(be), 8)),
+                          ("lazy", max(int(be * 8), 8))):
+        ptr = apply_powerdown_policy(tr, timeout)
+        e = float(model.estimate(ptr, vendor).energy_pj)
+        results[f"{name}_pj"] = e
+        results[f"{name}_saving"] = 1 - e / base
+    return results

@@ -1,0 +1,178 @@
+"""DRAM geometry, commands, timing, and command-trace representation.
+
+Everything here models the exact device class characterized by the paper:
+DDR3L-800 SO-DIMMs, one rank, 8 banks, 64-byte cache lines (512 bits),
+nominal VDD = 1.35 V. Traces are JAX pytrees so the whole power pipeline
+(ground-truth simulation, VAMPIRE, baselines) is jit/vmap-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Device constants (DDR3L-800, matching Table 1 of the paper)
+# ---------------------------------------------------------------------------
+VDD = 1.35                  # volts (DDR3L nominal)
+N_BANKS = 8
+LINE_BYTES = 64             # one cache line per RD/WR across the rank
+LINE_BITS = LINE_BYTES * 8  # 512
+LINE_WORDS = LINE_BYTES // 4  # 16 uint32 words
+ROW_BITS = 15               # 32k rows per bank (2 GB single-rank module)
+COLS_PER_ROW = 128          # 128 cache lines per 8 kB row
+MT_PER_S = 800e6            # transfer rate used for all tests (FPGA limit)
+CLOCK_HZ = MT_PER_S / 2     # 400 MHz DRAM clock
+TCK_NS = 1e9 / CLOCK_HZ     # 2.5 ns
+
+
+class Timing(NamedTuple):
+    """DDR3L-800 timing parameters, in DRAM clock cycles (tCK = 2.5 ns)."""
+    tRCD: int = 6    # 13.75 ns
+    tRP: int = 6     # 13.75 ns
+    tRAS: int = 14   # 35 ns
+    tRC: int = 20    # tRAS + tRP
+    tCCD: int = 4    # column-to-column (== burst length / 2 at DDR)
+    tBURST: int = 4  # 8 beats DDR -> 4 clocks on the bus
+    tRFC: int = 64   # 160 ns (2 Gb parts)
+    tREFI: int = 3120  # 7.8 us
+    tWR: int = 6     # 15 ns write recovery
+    tRTP: int = 4    # read-to-precharge
+    tCKE: int = 3    # power-down entry/exit
+
+TIMING = Timing()
+
+# ---------------------------------------------------------------------------
+# Commands
+# ---------------------------------------------------------------------------
+NOP = 0
+ACT = 1
+PRE = 2   # precharge one bank
+RD = 3
+WR = 4
+REF = 5
+PDE = 6   # fast power-down entry (DLL on)
+PDX = 7   # power-down exit
+PREA = 8  # precharge all banks
+
+CMD_NAMES = {NOP: "NOP", ACT: "ACT", PRE: "PRE", RD: "RD", WR: "WR",
+             REF: "REF", PDE: "PDE", PDX: "PDX", PREA: "PREA"}
+
+# Interleaving modes for the data-dependency model (paper Table 5).
+IL_NONE = 0      # same bank & same column as previous RD/WR
+IL_COL = 1       # same bank, different column
+IL_BANK = 2      # different bank, same column as that bank's last access
+IL_BANKCOL = 3   # different bank, different column
+N_IL_MODES = 4
+IL_NAMES = {IL_NONE: "none", IL_COL: "col", IL_BANK: "bank",
+            IL_BANKCOL: "bank+col"}
+
+
+class CommandTrace(NamedTuple):
+    """A DRAM command trace as a structure of arrays.
+
+    ``dt`` is the number of DRAM clock cycles from this command's issue slot
+    to the next command's issue slot (i.e. the duration "owned" by this
+    command); the trace's total duration is ``sum(dt)`` cycles. This is the
+    same information content as DRAMPower-style timestamped traces but
+    integrates trivially.
+    """
+    cmd: jax.Array    # (N,) int32, one of the command codes above
+    bank: jax.Array   # (N,) int32 in [0, 8)
+    row: jax.Array    # (N,) int32 in [0, 2^15)
+    col: jax.Array    # (N,) int32 in [0, 128)
+    data: jax.Array   # (N, 16) uint32 -- 64-byte line; zeros for non-RD/WR
+    dt: jax.Array     # (N,) int32 cycles
+
+    @property
+    def n(self) -> int:
+        return self.cmd.shape[0]
+
+    def total_cycles(self):
+        # int32 is plenty per trace chunk (<2^31 cycles ~ 5s of DRAM time);
+        # long application traces are evaluated in chunks (see traces.py).
+        return jnp.sum(self.dt, dtype=jnp.int32)
+
+    def total_ns(self):
+        return self.total_cycles() * TCK_NS
+
+
+def make_trace(cmds, banks=None, rows=None, cols=None, data=None, dts=None,
+               default_dt: int = 1) -> CommandTrace:
+    """Build a CommandTrace from (possibly python-list) fields."""
+    cmd = jnp.asarray(cmds, dtype=jnp.int32)
+    n = cmd.shape[0]
+    z = jnp.zeros(n, dtype=jnp.int32)
+    bank = z if banks is None else jnp.asarray(banks, dtype=jnp.int32)
+    row = z if rows is None else jnp.asarray(rows, dtype=jnp.int32)
+    col = z if cols is None else jnp.asarray(cols, dtype=jnp.int32)
+    if data is None:
+        dat = jnp.zeros((n, LINE_WORDS), dtype=jnp.uint32)
+    else:
+        dat = jnp.asarray(data, dtype=jnp.uint32)
+        if dat.ndim == 1:
+            dat = jnp.broadcast_to(dat[None, :], (n, LINE_WORDS))
+    dt = (jnp.full(n, default_dt, dtype=jnp.int32) if dts is None
+          else jnp.asarray(dts, dtype=jnp.int32))
+    return CommandTrace(cmd, bank, row, col, dat, dt)
+
+
+def concat_traces(*traces: CommandTrace) -> CommandTrace:
+    return CommandTrace(*[jnp.concatenate(f) for f in zip(*traces)])
+
+
+def tile_trace(trace: CommandTrace, reps: int) -> CommandTrace:
+    """Repeat a command loop ``reps`` times (paper's loop-until-measured)."""
+    return CommandTrace(
+        jnp.tile(trace.cmd, reps), jnp.tile(trace.bank, reps),
+        jnp.tile(trace.row, reps), jnp.tile(trace.col, reps),
+        jnp.tile(trace.data, (reps, 1)), jnp.tile(trace.dt, reps))
+
+
+# ---------------------------------------------------------------------------
+# Data-pattern helpers
+# ---------------------------------------------------------------------------
+def line_from_byte(byte_value: int) -> np.ndarray:
+    """64-byte line where every byte equals ``byte_value`` (JEDEC style)."""
+    b = byte_value & 0xFF
+    w = b | (b << 8) | (b << 16) | (b << 24)
+    return np.full(LINE_WORDS, w, dtype=np.uint32)
+
+
+def line_with_n_ones(n_ones: int, rng: np.random.Generator | None = None) -> np.ndarray:
+    """A 512-bit line with exactly ``n_ones`` ones (random positions)."""
+    assert 0 <= n_ones <= LINE_BITS
+    bits = np.zeros(LINE_BITS, dtype=np.uint8)
+    if rng is None:
+        bits[:n_ones] = 1  # deterministic: low bits first
+    else:
+        idx = rng.choice(LINE_BITS, size=n_ones, replace=False)
+        bits[idx] = 1
+    words = np.zeros(LINE_WORDS, dtype=np.uint32)
+    for w in range(LINE_WORDS):
+        chunk = bits[w * 32:(w + 1) * 32]
+        words[w] = np.uint32(sum(int(b) << i for i, b in enumerate(chunk)))
+    return words
+
+
+def popcount_u32(x: jax.Array) -> jax.Array:
+    """Per-element population count of a uint32 array (pure jnp)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def line_ones(data: jax.Array) -> jax.Array:
+    """Number of ones per 64-byte line. data: (..., 16) uint32 -> (...) int32."""
+    return jnp.sum(popcount_u32(data), axis=-1)
+
+
+def line_toggles(data: jax.Array, prev: jax.Array) -> jax.Array:
+    """Number of bus wires that toggle between two consecutive lines."""
+    return line_ones(jnp.bitwise_xor(data.astype(jnp.uint32),
+                                     prev.astype(jnp.uint32)))

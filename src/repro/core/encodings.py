@@ -1,0 +1,192 @@
+"""Cache-line data encodings (paper Section 10).
+
+Four encodings applied to line data before it is written to DRAM:
+
+* ``baseline``  — identity.
+* ``bdi``       — Base-Delta-Immediate compression [127]: the encoded line is
+  the packed (base, deltas) representation padded with zeros; incompressible
+  lines pass through unchanged.
+* ``optimized`` — per-application byte-frequency LUT: the most frequent byte
+  values get the codes with the fewest ones (code assignment sorted by
+  (popcount, value)). Lowers read power (read current grows with ones).
+* ``owi``       — Optimized-with-Write-Inversion: stored cells hold the
+  Optimized encoding; the bus carries its bitwise complement on *writes*
+  (write current falls with ones), the plain encoding on reads.
+
+Each encoding provides ``encode_lines`` (numpy, offline trace transform) and
+an energy-evaluation entry point that rewrites a trace's RD/WR data and adds
+the one-cycle LUT latency for optimized/owi (Section 10.1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dram
+from repro.core.dram import RD, WR, CommandTrace, LINE_BYTES, LINE_WORDS
+
+ENCODINGS = ("baseline", "bdi", "optimized", "owi")
+
+
+# ---------------------------------------------------------------------------
+# byte <-> word helpers (numpy, vectorized over lines)
+# ---------------------------------------------------------------------------
+def words_to_bytes(lines: np.ndarray) -> np.ndarray:
+    """(n, 16) uint32 -> (n, 64) uint8."""
+    lines = np.asarray(lines, dtype=np.uint32)
+    out = np.empty(lines.shape[:-1] + (LINE_BYTES,), dtype=np.uint8)
+    for i in range(4):
+        out[..., i::4] = (lines >> (8 * i)) & 0xFF
+    return out
+
+
+def bytes_to_words(b: np.ndarray) -> np.ndarray:
+    """(n, 64) uint8 -> (n, 16) uint32."""
+    b = np.asarray(b, dtype=np.uint32)
+    return (b[..., 0::4] | (b[..., 1::4] << 8) | (b[..., 2::4] << 16)
+            | (b[..., 3::4] << 24)).astype(np.uint32)
+
+
+def byte_histogram(lines: np.ndarray) -> np.ndarray:
+    return np.bincount(words_to_bytes(lines).reshape(-1), minlength=256)
+
+
+# ---------------------------------------------------------------------------
+# Optimized / OWI
+# ---------------------------------------------------------------------------
+def popcount_sorted_codes() -> np.ndarray:
+    """All byte values sorted by (popcount, value): the code alphabet."""
+    vals = np.arange(256)
+    pc = np.array([bin(v).count("1") for v in range(256)])
+    return vals[np.lexsort((vals, pc))].astype(np.uint8)
+
+
+def optimized_lut(hist: np.ndarray) -> np.ndarray:
+    """byte value -> encoded byte, most frequent value gets fewest ones."""
+    order = np.argsort(-np.asarray(hist), kind="stable")  # freq desc
+    codes = popcount_sorted_codes()
+    lut = np.empty(256, dtype=np.uint8)
+    lut[order] = codes
+    return lut
+
+
+def apply_lut(lines: np.ndarray, lut: np.ndarray) -> np.ndarray:
+    return bytes_to_words(np.asarray(lut)[words_to_bytes(lines)])
+
+
+def invert_lines(lines: np.ndarray) -> np.ndarray:
+    return (~np.asarray(lines, dtype=np.uint32)).astype(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# BDI (Base-Delta-Immediate) [127]
+# schemes evaluated per 64 B line, smallest encoded size wins:
+#   zeros(1B) | rep8(8B) | b8d1(16B) | b8d2(24B) | b8d4(40B)
+#   | b4d1(20B) | b4d2(36B) | b2d1(34B) | raw(64B)
+# ---------------------------------------------------------------------------
+def _fits(deltas: np.ndarray, nbytes: int) -> np.ndarray:
+    lim = 1 << (8 * nbytes - 1)
+    return np.all((deltas >= -lim) & (deltas < lim), axis=-1)
+
+
+def bdi_encode_lines(lines: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Encode each line with the best BDI scheme.
+
+    Returns (encoded_lines (n,16) uint32, encoded_size_bytes (n,) int32).
+    The encoded line is the compressed representation packed at the start
+    and zero padding after (what would sit on the bus / in the cells).
+    """
+    lines = np.asarray(lines, dtype=np.uint32)
+    n = lines.shape[0]
+    by = words_to_bytes(lines)                       # (n, 64)
+    best = np.full(n, 64, dtype=np.int32)
+    out = by.copy()
+
+    def consider(mask, size, encoded_bytes):
+        nonlocal best, out
+        mask = mask & (size < best)
+        if not np.any(mask):
+            return
+        buf = np.zeros((int(mask.sum()), LINE_BYTES), dtype=np.uint8)
+        eb = encoded_bytes[mask]
+        buf[:, :eb.shape[1]] = eb
+        out[mask] = buf
+        best[mask] = size
+
+    # all-zeros
+    consider(np.all(by == 0, axis=1), 1, np.zeros((n, 1), dtype=np.uint8))
+
+    for base_bytes, delta_bytes in ((8, 1), (8, 2), (8, 4),
+                                    (4, 1), (4, 2), (2, 1)):
+        k = LINE_BYTES // base_bytes
+        vals = np.zeros((n, k), dtype=np.int64)
+        for i in range(base_bytes):
+            vals |= by[:, i::base_bytes].astype(np.int64) << (8 * i)
+        # interpret as signed for delta arithmetic
+        sign = np.int64(1) << (8 * base_bytes - 1)
+        if base_bytes < 8:
+            vals = (vals ^ sign) - sign
+        base = vals[:, :1]
+        deltas = vals - base
+        ok = _fits(deltas, delta_bytes)
+        size = base_bytes + k * delta_bytes
+        # also the repeated-value special case (all deltas zero)
+        rep = np.all(deltas == 0, axis=1)
+        enc = np.zeros((n, size), dtype=np.uint8)
+        for i in range(base_bytes):
+            enc[:, i] = (base[:, 0] >> (8 * i)) & 0xFF
+        d = deltas.astype(np.int64)
+        for j in range(k):
+            for i in range(delta_bytes):
+                enc[:, base_bytes + j * delta_bytes + i] = (
+                    (d[:, j] >> (8 * i)) & 0xFF)
+        consider(rep, base_bytes,
+                 enc[:, :base_bytes].reshape(n, base_bytes))
+        consider(ok & ~rep, size, enc)
+
+    return bytes_to_words(out), best
+
+
+# ---------------------------------------------------------------------------
+# Trace-level application
+# ---------------------------------------------------------------------------
+def encode_trace(trace: CommandTrace, encoding: str,
+                 lut: np.ndarray | None = None) -> CommandTrace:
+    """Rewrite RD/WR data per the encoding; optimized/owi add one cycle of
+    LUT latency to every RD/WR (Section 10.1)."""
+    if encoding == "baseline":
+        return trace
+    cmd = np.asarray(trace.cmd)
+    data = np.asarray(trace.data, dtype=np.uint32).copy()
+    dt = np.asarray(trace.dt).copy()
+    is_rw = (cmd == RD) | (cmd == WR)
+
+    if encoding == "bdi":
+        data[is_rw], _ = bdi_encode_lines(data[is_rw])
+    elif encoding in ("optimized", "owi"):
+        if lut is None:
+            lut = optimized_lut(byte_histogram(data[is_rw]))
+        enc = apply_lut(data[is_rw], lut)
+        if encoding == "owi":
+            wr_mask = cmd[is_rw] == WR
+            enc[wr_mask] = invert_lines(enc[wr_mask])
+        data[is_rw] = enc
+        dt[is_rw] = dt[is_rw] + 1  # LUT adds one DRAM cycle
+    else:
+        raise ValueError(encoding)
+
+    import jax.numpy as jnp
+    return trace._replace(data=jnp.asarray(data),
+                          dt=jnp.asarray(dt, dtype=jnp.int32))
+
+
+def encoding_energy_study(traces_by_app: dict[str, CommandTrace],
+                          estimate_fn) -> dict[str, dict[str, float]]:
+    """For each app and encoding, total DRAM energy (pJ) via estimate_fn
+    (e.g. ``lambda tr: model.estimate(tr, vendor).energy_pj``)."""
+    out: dict[str, dict[str, float]] = {}
+    for app, tr in traces_by_app.items():
+        out[app] = {}
+        for enc in ENCODINGS:
+            t = encode_trace(tr, enc)
+            out[app][enc] = float(estimate_fn(t))
+    return out

@@ -1,0 +1,150 @@
+"""TPU/HBM adaptation of the paper's model (hardware-adaptation layer).
+
+The paper characterizes DDR3L DIMMs. On the target hardware (TPU v5e pods)
+the memory system is HBM2e: no exposed ACT/PRE command stream, but the same
+physics — read/write energy depends on bytes moved and, per the paper's key
+observation O2, on the *data values* moved. This module extrapolates the
+fitted VAMPIRE read/write data-dependency model to an HBM-like energy-per-
+byte model and combines it with the *compiled* per-step HBM traffic from the
+dry-run cost analysis. It is an explicitly-labeled extrapolation (see
+DESIGN.md §6): constants are rescaled, the functional form is the paper's.
+
+Energy-per-bit scaling: DDR3L at 1.35 V measured here costs ~hundreds of mA
+for a 64 B burst in ~10 ns => O(10) pJ/bit at the device level. Published
+HBM2e figures are ~3.5-4 pJ/bit device+PHY. We rescale the fitted DDR3L
+model by the ratio of its own all-zeros read energy to an HBM2e anchor, and
+keep the paper's *relative* data dependency (ones fraction, toggle rate).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dram import LINE_BITS, LINE_BYTES, TCK_NS, TIMING, VDD
+from repro.core.energy_model import PowerParams
+
+# HBM2e anchor: pJ per bit for a random-data read at the device+PHY level.
+HBM2E_PJ_PER_BIT_READ = 3.9
+HBM2E_PJ_PER_BIT_WRITE = 4.1
+# v5e HBM capacity/bandwidth for idle/refresh share estimation
+HBM_BW_BYTES = 819e9
+HBM_STATIC_W = 6.0  # background+refresh per chip stack, coarse anchor
+
+
+@dataclasses.dataclass(frozen=True)
+class HbmEnergyModel:
+    """Data-dependent HBM read/write energy, VAMPIRE functional form."""
+    pj_per_line_read_zero: float
+    pj_per_line_read_per_one: float
+    pj_per_line_read_per_toggle: float
+    pj_per_line_write_zero: float
+    pj_per_line_write_per_one: float
+    pj_per_line_write_per_toggle: float
+
+    @classmethod
+    def from_vampire(cls, pp: PowerParams) -> "HbmEnergyModel":
+        """Rescale the fitted DDR3L model to HBM2e anchors, preserving the
+        paper's relative data dependency."""
+        dd = np.asarray(pp.datadep)  # (4,2,3); use bank-interleaved mode (2)
+        rd0, rd1, rdt = dd[2, 0]
+        wr0, wr1, wrt = dd[2, 1]
+        burst_ns = TIMING.tBURST * TCK_NS
+        # DDR3L per-line energies (pJ) at 0 / per-one / per-toggle:
+        e_rd0 = rd0 * VDD * burst_ns
+        e_rd1 = (rd1 + float(pp.io_read_ma_per_one)) * VDD * burst_ns
+        e_rdt = rdt * VDD * burst_ns
+        e_wr0 = (wr0 + float(pp.io_write_ma_per_zero) * LINE_BITS
+                 ) * VDD * burst_ns
+        e_wr1 = (wr1 - float(pp.io_write_ma_per_zero)) * VDD * burst_ns
+        e_wrt = wrt * VDD * burst_ns
+        # rescale so a random line (50% ones) hits the HBM2e anchor
+        tgt_rd = HBM2E_PJ_PER_BIT_READ * LINE_BITS
+        tgt_wr = HBM2E_PJ_PER_BIT_WRITE * LINE_BITS
+        s_rd = tgt_rd / (e_rd0 + e_rd1 * LINE_BITS / 2)
+        s_wr = tgt_wr / (e_wr0 + e_wr1 * LINE_BITS / 2)
+        return cls(e_rd0 * s_rd, e_rd1 * s_rd, e_rdt * s_rd,
+                   e_wr0 * s_wr, e_wr1 * s_wr, e_wrt * s_wr)
+
+    # ------------------------------------------------------------------
+    def read_energy_pj(self, n_bytes, ones_frac, toggle_frac=0.25):
+        lines = n_bytes / LINE_BYTES
+        return lines * (self.pj_per_line_read_zero
+                        + self.pj_per_line_read_per_one * ones_frac * LINE_BITS
+                        + self.pj_per_line_read_per_toggle
+                        * toggle_frac * LINE_BITS)
+
+    def write_energy_pj(self, n_bytes, ones_frac, toggle_frac=0.25):
+        lines = n_bytes / LINE_BYTES
+        return lines * (self.pj_per_line_write_zero
+                        + self.pj_per_line_write_per_one
+                        * ones_frac * LINE_BITS
+                        + self.pj_per_line_write_per_toggle
+                        * toggle_frac * LINE_BITS)
+
+
+def tensor_stats(x: jax.Array) -> tuple[float, float]:
+    """(ones_fraction, toggle_fraction) of a tensor's raw bytes, via the
+    popcount/toggle kernels (pure-jnp fallback if Pallas is unavailable)."""
+    from repro.kernels.popcount import ops as pops
+    from repro.kernels.toggle import ops as tops
+    lines = _tensor_lines(x)
+    ones = pops.line_ones(lines)
+    togg = tops.line_toggles_seq(lines)
+    n = lines.shape[0]
+    return (float(jnp.sum(ones)) / (n * LINE_BITS),
+            float(jnp.sum(togg)) / (max(n - 1, 1) * LINE_BITS))
+
+
+def _tensor_lines(x: jax.Array) -> jax.Array:
+    """View a tensor's bytes as (n_lines, 16) uint32 cache lines."""
+    raw = jax.lax.bitcast_convert_type(
+        x.reshape(-1), _u32_compatible(x.dtype)).reshape(-1).astype(jnp.uint32)
+    if x.dtype.itemsize == 2:
+        raw = raw[0::2] | (raw[1::2] << 16)
+    elif x.dtype.itemsize == 1:
+        raw = (raw[0::4] | (raw[1::4] << 8) | (raw[2::4] << 16)
+               | (raw[3::4] << 24))
+    n = (raw.shape[0] // 16) * 16
+    return raw[:n].reshape(-1, 16)
+
+
+def _u32_compatible(dtype):
+    if dtype == jnp.float32 or dtype == jnp.int32 or dtype == jnp.uint32:
+        return jnp.uint32
+    if dtype.itemsize == 2:
+        return jnp.uint16
+    if dtype.itemsize == 1:
+        return jnp.uint8
+    raise ValueError(f"unsupported dtype {dtype}")
+
+
+@dataclasses.dataclass
+class StepEnergyReport:
+    """Per-train/serve-step HBM energy estimate for one device."""
+    read_bytes: float
+    write_bytes: float
+    read_pj: float
+    write_pj: float
+    static_pj: float
+    total_pj: float
+    ones_frac: float
+    toggle_frac: float
+
+    @property
+    def total_j(self):
+        return self.total_pj * 1e-12
+
+
+def step_energy(model: HbmEnergyModel, *, read_bytes: float,
+                write_bytes: float, step_seconds: float,
+                ones_frac: float = 0.5, toggle_frac: float = 0.25
+                ) -> StepEnergyReport:
+    """Combine compiled-step traffic with data statistics -> energy."""
+    rpj = float(model.read_energy_pj(read_bytes, ones_frac, toggle_frac))
+    wpj = float(model.write_energy_pj(write_bytes, ones_frac, toggle_frac))
+    spj = HBM_STATIC_W * step_seconds * 1e12
+    return StepEnergyReport(read_bytes, write_bytes, rpj, wpj, spj,
+                            rpj + wpj + spj, ones_frac, toggle_frac)

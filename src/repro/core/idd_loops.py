@@ -1,0 +1,230 @@
+"""Command-trace generators: JEDEC IDD measurement loops (Section 4) and the
+paper's custom characterization microbenchmarks (Sections 5-7, 9.1).
+
+Each generator returns a :class:`CommandTrace` representing the steady-state
+loop, already tiled enough times that loop-edge effects are negligible —
+mirroring the paper's modified-SoftMC continuous looping (Section 3.1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dram
+from repro.core.dram import (ACT, PRE, PREA, RD, WR, REF, PDE, NOP,
+                             CommandTrace, TIMING, line_from_byte,
+                             line_with_n_ones, make_trace, tile_trace)
+
+_T = TIMING
+DEFAULT_REPS = 64
+IDLE_SLOT = 512  # cycles of NOP used for idle loops
+
+
+def _loop(cmds, banks, rows, cols, datas, dts, reps=DEFAULT_REPS):
+    tr = make_trace(cmds, banks, rows, cols,
+                    np.stack([np.asarray(d, dtype=np.uint32) for d in datas]),
+                    dts)
+    return tile_trace(tr, reps)
+
+
+_Z = np.zeros(dram.LINE_WORDS, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# JEDEC IDD loops
+# ---------------------------------------------------------------------------
+def idd2n(reps=4) -> CommandTrace:
+    """Idle, all banks precharged."""
+    return _loop([PREA, NOP], [0, 0], [0, 0], [0, 0], [_Z, _Z],
+                 [_T.tRP, IDLE_SLOT], reps)
+
+
+def idd3n(reps=4) -> CommandTrace:
+    """Idle, all banks open (activate all 8, then idle)."""
+    cmds = [ACT] * 8 + [NOP]
+    banks = list(range(8)) + [0]
+    dts = [_T.tRC] * 8 + [IDLE_SLOT * 8]
+    n = len(cmds)
+    return _loop(cmds, banks, [0] * n, [0] * n, [_Z] * n, dts, reps)
+
+
+def idd0(reps=DEFAULT_REPS, bank=0, row=0) -> CommandTrace:
+    """Repeated ACT/PRE to one bank at tRC."""
+    return _loop([ACT, PRE], [bank] * 2, [row] * 2, [0, 0], [_Z, _Z],
+                 [_T.tRAS, _T.tRP], reps)
+
+
+def idd1(reps=DEFAULT_REPS, data=None) -> CommandTrace:
+    """Repeated ACT/RD/PRE to one bank at tRC (JEDEC pattern 0x00)."""
+    d = line_from_byte(0x00) if data is None else data
+    return _loop([ACT, RD, PRE], [0] * 3, [0] * 3, [0, 0, 0], [_Z, d, _Z],
+                 [_T.tRCD, _T.tRAS - _T.tRCD, _T.tRP], reps)
+
+
+def _all_banks_open_prefix():
+    cmds = [ACT] * 8
+    return (cmds, list(range(8)), [0] * 8, [0] * 8, [_Z] * 8, [_T.tRC] * 8)
+
+
+def idd4r(reps=DEFAULT_REPS, data=None) -> CommandTrace:
+    """Back-to-back reads across all 8 banks (JEDEC pattern 0x33)."""
+    d = line_from_byte(0x33) if data is None else data
+    pc, pb, pr, pcol, pd_, pdt = _all_banks_open_prefix()
+    cmds, banks, cols, datas, dts = [], [], [], [], []
+    for i in range(16):  # two sweeps over banks, alternating column
+        cmds.append(RD)
+        banks.append(i % 8)
+        cols.append(i // 8)
+        datas.append(d)
+        dts.append(_T.tCCD)
+    setup = make_trace(pc, pb, pr, pcol, np.stack(pd_), pdt)
+    loop = _loop(cmds, banks, [0] * 16, cols, datas, dts, reps)
+    return dram.concat_traces(setup, loop)
+
+
+def idd4w(reps=DEFAULT_REPS, data=None) -> CommandTrace:
+    d = line_from_byte(0x33) if data is None else data
+    pc, pb, pr, pcol, pd_, pdt = _all_banks_open_prefix()
+    cmds, banks, cols, datas, dts = [], [], [], [], []
+    for i in range(16):
+        cmds.append(WR)
+        banks.append(i % 8)
+        cols.append(i // 8)
+        datas.append(d)
+        dts.append(_T.tCCD)
+    setup = make_trace(pc, pb, pr, pcol, np.stack(pd_), pdt)
+    loop = _loop(cmds, banks, [0] * 16, cols, datas, dts, reps)
+    return dram.concat_traces(setup, loop)
+
+
+def idd7(reps=DEFAULT_REPS, data=None) -> CommandTrace:
+    """Interleaved {ACT, RD, auto-PRE} across all 8 banks at max rate."""
+    d = line_from_byte(0x33) if data is None else data
+    cmds, banks, rows, cols, datas, dts = [], [], [], [], [], []
+    for b in range(8):
+        cmds += [ACT, RD, PRE]
+        banks += [b] * 3
+        rows += [0] * 3
+        cols += [0] * 3
+        datas += [_Z, d, _Z]
+        dts += [_T.tRCD, _T.tCCD, 0]
+    return _loop(cmds, banks, rows, cols, datas, dts, DEFAULT_REPS)
+
+
+def idd5b(reps=16) -> CommandTrace:
+    """Continuous refresh bursts (banks already precharged)."""
+    return _loop([REF], [0], [0], [0], [_Z], [_T.tRFC], reps)
+
+
+def idd2p1(reps=4) -> CommandTrace:
+    """Fast power-down, no banks active."""
+    return _loop([PREA, PDE, NOP], [0] * 3, [0] * 3, [0] * 3, [_Z] * 3,
+                 [_T.tRP, _T.tCKE, IDLE_SLOT * 4], reps)
+
+
+IDD_LOOPS = {
+    "IDD2N": idd2n, "IDD3N": idd3n, "IDD0": idd0, "IDD1": idd1,
+    "IDD4R": idd4r, "IDD4W": idd4w, "IDD7": idd7, "IDD5B": idd5b,
+    "IDD2P1": idd2p1,
+}
+
+
+# ---------------------------------------------------------------------------
+# Section 5.1 — number-of-ones sweeps (single bank, single row, single col)
+# ---------------------------------------------------------------------------
+def ones_sweep_point(n_ones: int, op: int = RD, reps=DEFAULT_REPS,
+                     bank=0, row=0) -> CommandTrace:
+    d = line_with_n_ones(n_ones)
+    setup = make_trace([ACT], [bank], [row], [0], np.stack([_Z]), [_T.tRCD])
+    loop = _loop([op] * 4, [bank] * 4, [row] * 4, [0] * 4, [d] * 4,
+                 [_T.tCCD] * 4, reps)
+    return dram.concat_traces(setup, loop), 2  # skip setup + first access
+
+
+# ---------------------------------------------------------------------------
+# Section 5.2 — interleaving / toggle tests
+# ---------------------------------------------------------------------------
+def interleave_sweep_point(data_a, data_b, il: str, op: int = RD,
+                           reps=DEFAULT_REPS) -> CommandTrace:
+    """Alternate between two data values with the given interleaving kind:
+    'none' (same bank+col), 'col', 'bank', 'bankcol'.
+
+    For 'bankcol' each bank's column must change between its visits (else
+    back-to-back accesses classify as plain bank interleaving), so the loop
+    touches (b0,c0),(b1,c2),(b0,c1),(b1,c3).
+    """
+    data_a = np.asarray(data_a, dtype=np.uint32)
+    data_b = np.asarray(data_b, dtype=np.uint32)
+    if il == "none":
+        banks, cols, datas = [0, 0], [0, 0], [data_a, data_a]
+    elif il == "col":
+        banks, cols, datas = [0, 0], [0, 1], [data_a, data_b]
+    elif il == "bank":
+        banks, cols, datas = [0, 1], [0, 0], [data_a, data_b]
+    elif il == "bankcol":
+        banks, cols = [0, 1, 0, 1], [0, 2, 1, 3]
+        datas = [data_a, data_b, data_a, data_b]
+    else:
+        raise ValueError(il)
+    n_banks_used = max(banks) + 1
+    setup = make_trace([ACT] * n_banks_used, list(range(n_banks_used)),
+                       [0] * n_banks_used, [0] * n_banks_used,
+                       np.stack([_Z] * n_banks_used), [_T.tRC] * n_banks_used)
+    # Pre-touch each (bank, col) once so per-bank last-column state is primed
+    # and the steady-state loop classifies with the intended mode.
+    prime = make_trace([op] * len(banks), banks, [0] * len(banks), cols,
+                       np.stack(datas), [_T.tCCD] * len(banks))
+    k = len(banks)
+    loop = _loop([op] * (2 * k), banks * 2, [0] * (2 * k), cols * 2,
+                 datas * 2, [_T.tCCD] * (2 * k), reps)
+    skip = n_banks_used + len(banks)
+    return dram.concat_traces(setup, prime, loop), skip
+
+
+# ---------------------------------------------------------------------------
+# Section 6 — structural variation probes
+# ---------------------------------------------------------------------------
+def bank_idle_probe(bank: int, reps=4) -> CommandTrace:
+    """One bank open (row 0, all-zero data), idle."""
+    setup = make_trace([PREA, ACT], [0, bank], [0, 0], [0, 0],
+                       np.stack([_Z, _Z]), [_T.tRP, _T.tRCD])
+    loop = _loop([NOP], [bank], [0], [0], [_Z], [IDLE_SLOT * 4], reps)
+    return dram.concat_traces(setup, loop), 2
+
+
+def bank_read_probe(bank: int, op: int = RD, reps=DEFAULT_REPS) -> CommandTrace:
+    return ones_sweep_point(0, op=op, reps=reps, bank=bank)
+
+
+def row_act_probe(row: int, reps=DEFAULT_REPS):
+    """IDD0-style ACT/PRE loop on a specific row (Section 6.1.2)."""
+    return idd0(reps=reps, row=row), 0
+
+
+def column_read_probe(col: int, reps=DEFAULT_REPS) -> CommandTrace:
+    d = line_from_byte(0x00)
+    setup = make_trace([ACT], [0], [0], [col], np.stack([_Z]), [_T.tRCD])
+    loop = _loop([RD] * 4, [0] * 4, [0] * 4, [col] * 4, [d] * 4,
+                 [_T.tCCD] * 4, reps)
+    return dram.concat_traces(setup, loop), 2
+
+
+# ---------------------------------------------------------------------------
+# Section 9.1 — validation workload {ACT, n x RD, PRE}
+# ---------------------------------------------------------------------------
+def validation_sweep(n_reads: int, reps=8, byte=0xAA) -> CommandTrace:
+    d = line_from_byte(byte)
+    cmds = [ACT] + [RD] * n_reads + [PRE]
+    banks = [0] * (n_reads + 2)
+    rows = [128] * (n_reads + 2)
+    cols = [0] + [i % 2 for i in range(n_reads)] + [0]
+    datas = [_Z] + [d] * n_reads + [_Z]
+    dts = ([max(_T.tRCD, _T.tRAS if n_reads == 0 else _T.tRCD)]
+           + [_T.tCCD] * n_reads + [_T.tRP])
+    # honor tRAS: if reads finish before tRAS, stretch the final read slot
+    used = dts[0] + _T.tCCD * max(n_reads - 1, 0)
+    if used < _T.tRAS:
+        if n_reads:
+            dts[n_reads] = dts[n_reads] + (_T.tRAS - used)
+        else:
+            dts[0] = _T.tRAS
+    return _loop(cmds, banks, rows, cols, datas, dts, reps)

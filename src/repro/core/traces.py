@@ -1,0 +1,226 @@
+"""Application-level DRAM command traces (paper Sections 9.2 and 10).
+
+The paper drives its application studies with Pin-captured SPEC CPU2006
+memory traces replayed through Ramulator. Without those proprietary inputs we
+generate *synthetic application traces* from a small behavioral model —
+memory intensity, row-buffer locality, read/write mix, and a byte-value
+distribution — with per-app parameters chosen to span the same qualitative
+range (memory-bound vs. compute-bound, sparse vs. dense data). The same
+machinery also converts arbitrary byte buffers (e.g. framework tensors) into
+traces, which is how the TPU/HBM adaptation feeds the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import dram
+from repro.core.dram import (ACT, PRE, RD, WR, REF, CommandTrace, TIMING,
+                             LINE_BYTES, LINE_WORDS, N_BANKS)
+
+_T = TIMING
+
+
+# ---------------------------------------------------------------------------
+# Byte-value distributions ("what the data looks like")
+# ---------------------------------------------------------------------------
+def _dist_zeros(rng):
+    p = np.full(256, 0.0008)
+    p[0x00] = 0.70
+    p[0xFF] = 0.05
+    p[0x01] = 0.05
+    return p / p.sum()
+
+
+def _dist_ascii(rng):
+    p = np.full(256, 0.0004)
+    for c in range(0x61, 0x7B):      # lowercase letters
+        p[c] = 0.025
+    p[0x20] = 0.12                    # space
+    for c in range(0x41, 0x5B):
+        p[c] = 0.004
+    for c in range(0x30, 0x3A):
+        p[c] = 0.006
+    p[0x0A] = 0.01
+    return p / p.sum()
+
+
+def _dist_int_small(rng):
+    # two's-complement integers: many 0x00 high bytes but also many 0xFF
+    # sign-extension bytes (8 ones each) — the OWI sweet spot
+    p = np.full(256, 0.0008)
+    for v, w in ((0x00, 0.32), (0x01, 0.06), (0x02, 0.03), (0x03, 0.02),
+                 (0xFF, 0.24), (0xFE, 0.05), (0xFD, 0.02), (0x04, 0.01),
+                 (0x08, 0.01), (0x7F, 0.02)):
+        p[v] = w
+    return p / p.sum()
+
+
+def _dist_fp32(rng):
+    # float exponent bytes cluster at 0x3F/0xBF (6-7 ones) with uniform
+    # mantissas
+    p = np.full(256, 0.002)
+    for v, w in ((0x3F, 0.12), (0xBF, 0.10), (0x40, 0.06), (0xC0, 0.05),
+                 (0x3E, 0.05), (0xBE, 0.04), (0x00, 0.08), (0x80, 0.03),
+                 (0x7F, 0.03)):
+        p[v] = w
+    return p / p.sum()
+
+
+def _dist_pointer(rng):
+    # 64-bit heap pointers: 0x00007f.. prefixes -> lots of 0x00 AND 0x7F/0xFF
+    p = np.full(256, 0.0015)
+    p[0x00] = 0.26
+    p[0x7F] = 0.14
+    p[0xFF] = 0.06
+    p[0x55] = 0.04
+    for v in range(0x10, 0x90, 0x08):
+        p[v] = 0.01
+    return p / p.sum()
+
+
+def _dist_random(rng):
+    return np.full(256, 1.0 / 256)
+
+
+BYTE_DISTS = {
+    "zeros": _dist_zeros, "ascii": _dist_ascii, "int_small": _dist_int_small,
+    "fp32": _dist_fp32, "pointer": _dist_pointer, "random": _dist_random,
+}
+
+
+# ---------------------------------------------------------------------------
+# Application behavioral model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AppSpec:
+    name: str
+    intensity: float      # mean fraction of bus cycles doing data bursts
+    row_hit: float        # row-buffer hit probability
+    read_frac: float
+    data_dist: str
+    seed: int = 0
+
+
+# 23 synthetic applications mirroring the qualitative spread of the paper's
+# SPEC CPU2006 suite (memory-bound <-> compute-bound; varied data content).
+SPEC_APPS = [
+    AppSpec("perlbench",  0.16, 0.75, 0.70, "ascii",     1),
+    AppSpec("bzip2",      0.30, 0.55, 0.60, "random",    2),
+    AppSpec("gcc",        0.25, 0.65, 0.65, "pointer",   3),
+    AppSpec("mcf",        0.75, 0.25, 0.75, "pointer",   4),
+    AppSpec("gobmk",      0.12, 0.70, 0.68, "int_small", 5),
+    AppSpec("hmmer",      0.22, 0.90, 0.55, "int_small", 6),
+    AppSpec("sjeng",      0.10, 0.72, 0.66, "int_small", 7),
+    AppSpec("libquantum", 0.82, 0.95, 0.80, "zeros",     8),
+    AppSpec("h264ref",    0.26, 0.88, 0.58, "int_small", 9),
+    AppSpec("omnetpp",    0.55, 0.30, 0.70, "pointer",  10),
+    AppSpec("astar",      0.45, 0.45, 0.72, "pointer",  11),
+    AppSpec("xalancbmk",  0.50, 0.40, 0.74, "ascii",    12),
+    AppSpec("bwaves",     0.72, 0.90, 0.65, "fp32",     13),
+    AppSpec("gamess",     0.08, 0.82, 0.60, "fp32",     14),
+    AppSpec("milc",       0.70, 0.82, 0.62, "fp32",     15),
+    AppSpec("zeusmp",     0.50, 0.85, 0.61, "fp32",     16),
+    AppSpec("gromacs",    0.18, 0.74, 0.63, "fp32",     17),
+    AppSpec("cactusADM",  0.62, 0.86, 0.55, "fp32",     18),
+    AppSpec("leslie3d",   0.66, 0.86, 0.60, "fp32",     19),
+    AppSpec("namd",       0.10, 0.80, 0.64, "fp32",     20),
+    AppSpec("soplex",     0.64, 0.35, 0.73, "fp32",     21),
+    AppSpec("povray",     0.07, 0.78, 0.62, "fp32",     22),
+    AppSpec("lbm",        0.85, 0.93, 0.50, "fp32",     23),
+]
+
+
+def sample_lines(dist_name: str, n_lines: int,
+                 rng: np.random.Generator) -> np.ndarray:
+    """(n_lines, 16) uint32 lines with bytes drawn from the distribution."""
+    p = BYTE_DISTS[dist_name](rng)
+    b = rng.choice(256, size=(n_lines, LINE_BYTES), p=p).astype(np.uint32)
+    return (b[:, 0::4] | (b[:, 1::4] << 8) | (b[:, 2::4] << 16)
+            | (b[:, 3::4] << 24)).astype(np.uint32)
+
+
+def lines_from_bytes(buf: bytes | np.ndarray) -> np.ndarray:
+    """Pack an arbitrary byte buffer into (n_lines, 16) uint32 lines."""
+    b = np.frombuffer(bytes(buf), dtype=np.uint8)
+    pad = (-len(b)) % LINE_BYTES
+    if pad:
+        b = np.concatenate([b, np.zeros(pad, dtype=np.uint8)])
+    b = b.reshape(-1, LINE_BYTES).astype(np.uint32)
+    return (b[:, 0::4] | (b[:, 1::4] << 8) | (b[:, 2::4] << 16)
+            | (b[:, 3::4] << 24)).astype(np.uint32)
+
+
+def app_trace(app: AppSpec, n_requests: int = 2000,
+              lines: np.ndarray | None = None) -> CommandTrace:
+    """Generate the command trace for one synthetic application."""
+    rng = np.random.default_rng(np.random.SeedSequence([29, app.seed]))
+    if lines is None:
+        lines = sample_lines(app.data_dist, n_requests, rng)
+    n_requests = min(n_requests, lines.shape[0])
+
+    cmds, banks, rows, cols, datas, dts = [], [], [], [], [], []
+    open_row = -np.ones(N_BANKS, dtype=np.int64)
+    # gap model: mean bus idle cycles between requests from intensity
+    mean_gap = _T.tBURST * (1.0 - app.intensity) / max(app.intensity, 0.01)
+    cycles_since_ref = 0.0
+    zline = np.zeros(LINE_WORDS, dtype=np.uint32)
+
+    bank_seq = rng.integers(0, N_BANKS, size=n_requests)
+    hit_seq = rng.random(n_requests) < app.row_hit
+    rd_seq = rng.random(n_requests) < app.read_frac
+    row_seq = rng.integers(0, 1 << dram.ROW_BITS, size=n_requests)
+    col_seq = rng.integers(0, dram.COLS_PER_ROW, size=n_requests)
+    gap_seq = rng.geometric(1.0 / (1.0 + mean_gap), size=n_requests) - 1
+
+    for i in range(n_requests):
+        b = int(bank_seq[i])
+        if hit_seq[i] and open_row[b] >= 0:
+            r = int(open_row[b])
+        else:
+            r = int(row_seq[i])
+            if open_row[b] >= 0:
+                cmds.append(PRE); banks.append(b); rows.append(0)
+                cols.append(0); datas.append(zline); dts.append(_T.tRP)
+            cmds.append(ACT); banks.append(b); rows.append(r)
+            cols.append(0); datas.append(zline); dts.append(_T.tRCD)
+            open_row[b] = r
+        op = RD if rd_seq[i] else WR
+        gap = int(gap_seq[i])
+        if gap > 128:
+            # long idle: finish the burst, precharge, power down for the gap
+            cmds.append(op); banks.append(b); rows.append(r)
+            cols.append(int(col_seq[i])); datas.append(lines[i])
+            dts.append(_T.tBURST)
+            cmds.append(dram.PREA); banks.append(0); rows.append(0)
+            cols.append(0); datas.append(zline); dts.append(_T.tRP)
+            cmds.append(dram.PDE); banks.append(0); rows.append(0)
+            cols.append(0); datas.append(zline); dts.append(gap)
+            cmds.append(dram.PDX); banks.append(0); rows.append(0)
+            cols.append(0); datas.append(zline); dts.append(_T.tCKE)
+            open_row[:] = -1
+            cycles_since_ref += _T.tBURST + _T.tRP + gap + _T.tCKE
+            continue
+        dt = _T.tBURST + gap
+        cmds.append(op); banks.append(b); rows.append(r)
+        cols.append(int(col_seq[i])); datas.append(lines[i]); dts.append(dt)
+        cycles_since_ref += dt
+        if cycles_since_ref >= _T.tREFI:
+            # refresh: close all banks, REF, reopen lazily
+            cmds.append(dram.PREA); banks.append(0); rows.append(0)
+            cols.append(0); datas.append(zline); dts.append(_T.tRP)
+            cmds.append(REF); banks.append(0); rows.append(0); cols.append(0)
+            datas.append(zline); dts.append(_T.tRFC)
+            open_row[:] = -1
+            cycles_since_ref = 0.0
+
+    return dram.make_trace(cmds, banks, rows, cols,
+                           np.stack(datas).astype(np.uint32), dts)
+
+
+def trace_request_lines(trace: CommandTrace) -> np.ndarray:
+    """The (n_rw, 16) data lines of the RD/WR commands in a trace."""
+    cmd = np.asarray(trace.cmd)
+    mask = (cmd == RD) | (cmd == WR)
+    return np.asarray(trace.data)[mask]

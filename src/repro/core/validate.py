@@ -1,0 +1,89 @@
+"""Model validation (paper Section 9.1).
+
+Runs the paper's held-out validation workload — {ACT, n x RD, PRE} sweeps
+with n in [0, 764], data 0xAA, bank 0 / row 128, column-interleaved — on a
+randomly selected subset of modules (8 from Vendor A, 7 from B, 7 from C),
+and reports the mean absolute percentage error (MAPE) of VAMPIRE, DRAMPower,
+and the Micron power model against the 'measured' current.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import baselines_power, device_sim, idd_loops
+from repro.core import params as P
+from repro.core.vampire import Vampire
+
+# n values swept in the validation experiments (paper: 0..764)
+N_READS = (0, 1, 2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 24, 32, 48, 64, 96, 128,
+           192, 256, 382, 512, 764)
+VALIDATION_COUNTS = {0: 8, 1: 7, 2: 7}  # modules per vendor (paper Sec 9.1)
+
+
+@dataclasses.dataclass
+class ValidationResult:
+    mape: dict[str, dict[int, float]]        # model -> vendor -> MAPE %
+    mape_mean: dict[str, float]              # model -> mean across vendors
+    raw: dict                                 # per (vendor, n): all numbers
+
+    def summary(self) -> str:
+        lines = ["model      MAPE(A)  MAPE(B)  MAPE(C)   mean"]
+        for m, per_v in self.mape.items():
+            lines.append(
+                f"{m:10s} {per_v.get(0, float('nan')):7.1f}% "
+                f"{per_v.get(1, float('nan')):7.1f}% "
+                f"{per_v.get(2, float('nan')):7.1f}% "
+                f"{self.mape_mean[m]:6.1f}%")
+        return "\n".join(lines)
+
+
+def select_validation_modules(fleet=None, seed: int = 42):
+    fleet = device_sim.make_fleet() if fleet is None else fleet
+    rng = np.random.default_rng(seed)
+    chosen = []
+    for v, k in VALIDATION_COUNTS.items():
+        mods = device_sim.vendor_modules(fleet, v)
+        k = min(k, len(mods))
+        idx = rng.choice(len(mods), size=k, replace=False)
+        chosen += [mods[i] for i in idx]
+    return chosen
+
+
+def run_validation(model: Vampire, fleet=None, n_values=N_READS,
+                   seed: int = 42) -> ValidationResult:
+    modules = select_validation_modules(fleet, seed=seed)
+    ds = {v: model.by_vendor[v].idd_datasheet for v in model.by_vendor}
+
+    traces = {n: idd_loops.validation_sweep(n) for n in n_values}
+    preds = {name: {} for name in ("vampire", "drampower", "micron")}
+    raw = {}
+    errs: dict[str, dict[int, list[float]]] = {
+        name: {0: [], 1: [], 2: []} for name in preds}
+
+    for v in sorted({m.spec.vendor for m in modules}):
+        for n, tr in traces.items():
+            preds["vampire"][(v, n)] = float(
+                model.estimate(tr, v).avg_current_ma)
+            preds["drampower"][(v, n)] = float(
+                baselines_power.drampower(tr, ds[v]).avg_current_ma)
+            preds["micron"][(v, n)] = float(
+                baselines_power.micron_power(tr, ds[v]).avg_current_ma)
+
+    for m in modules:
+        v = m.spec.vendor
+        for n, tr in traces.items():
+            measured = m.measure_current(tr)
+            raw[(v, m.spec.module_id, n)] = {
+                "measured": measured,
+                **{name: preds[name][(v, n)] for name in preds}}
+            for name in preds:
+                errs[name][v].append(
+                    abs(preds[name][(v, n)] - measured) / measured * 100.0)
+
+    mape = {name: {v: float(np.mean(e)) for v, e in per_v.items() if e}
+            for name, per_v in errs.items()}
+    mape_mean = {name: float(np.mean(list(per_v.values())))
+                 for name, per_v in mape.items()}
+    return ValidationResult(mape=mape, mape_mean=mape_mean, raw=raw)

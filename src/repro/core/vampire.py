@@ -1,0 +1,118 @@
+"""VAMPIRE — Variation-Aware model of Memory Power Informed by Real
+Experiments (paper Section 9), fitted from the characterization campaign.
+
+Public API
+----------
+``Vampire.fit(fleet)``        run the campaign and build the model
+``model.estimate(trace, vendor)``           EnergyReport (mean module)
+``model.estimate_range(trace, vendor)``     (lo, mean, hi) across process
+                                            variation captured per vendor
+``model.estimate_distribution(trace, vendor, ones_frac, toggle_frac)``
+    the paper's no-data-trace mode: the caller supplies a distribution of
+    ones / toggling instead of actual 64-byte values.
+
+Implementations: ``impl='vectorized'`` (production), ``impl='scan'``
+(oracle), ``impl='kernel'`` (Pallas-fused per-command energy; see
+``repro.kernels.vampire_energy``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import characterize, device_sim
+from repro.core.dram import LINE_BITS, RD, WR, CommandTrace
+from repro.core.energy_model import (EnergyReport, PowerParams,
+                                     charge_from_features, extract_features,
+                                     trace_energy_scan,
+                                     trace_energy_vectorized, _report)
+
+
+@dataclasses.dataclass
+class Vampire:
+    by_vendor: dict[int, characterize.VendorCharacterization]
+    # multiplicative process-variation band per vendor (lo, hi) captured from
+    # the spread of per-module IDD measurements during characterization
+    variation_band: dict[int, tuple[float, float]] = None  # type: ignore
+
+    def __post_init__(self):
+        if self.variation_band is None:
+            self.variation_band = {}
+            for v, vc in self.by_vendor.items():
+                rel = []
+                for key in ("IDD0", "IDD4R", "IDD4W"):
+                    arr = vc.idd_measured[key]
+                    rel.append(arr / np.mean(arr))
+                rel = np.concatenate(rel)
+                self.variation_band[v] = (float(np.min(rel)),
+                                          float(np.max(rel)))
+
+    # ------------------------------------------------------------------ fit
+    @classmethod
+    def fit(cls, fleet=None, **kw) -> "Vampire":
+        return cls(by_vendor=characterize.characterize_fleet(fleet, **kw))
+
+    def params(self, vendor: int) -> PowerParams:
+        return self.by_vendor[vendor].fitted
+
+    # ------------------------------------------------------------- estimate
+    def estimate(self, trace: CommandTrace, vendor: int,
+                 impl: str = "vectorized") -> EnergyReport:
+        pp = self.params(vendor)
+        if impl == "vectorized":
+            return trace_energy_vectorized(trace, pp)
+        if impl == "scan":
+            return trace_energy_scan(trace, pp)
+        if impl == "kernel":
+            from repro.kernels.vampire_energy import ops as vops
+            return vops.trace_energy_kernel(trace, pp)
+        raise ValueError(impl)
+
+    def estimate_range(self, trace: CommandTrace, vendor: int):
+        rep = self.estimate(trace, vendor)
+        lo, hi = self.variation_band[vendor]
+        return (float(rep.avg_current_ma) * lo, float(rep.avg_current_ma),
+                float(rep.avg_current_ma) * hi)
+
+    def estimate_distribution(self, trace: CommandTrace, vendor: int,
+                              ones_frac: float, toggle_frac: float
+                              ) -> EnergyReport:
+        """Traces without data values: approximate data dependency with a
+        user-supplied expected fraction of ones and of toggling wires."""
+        pp = self.params(vendor)
+        feats = extract_features(trace, pp)
+        is_rw = feats.is_rw
+        n = trace.cmd.shape[0]
+        ones = jnp.where(is_rw, jnp.asarray(ones_frac * LINE_BITS), 0.0)
+        togg = jnp.where(is_rw, jnp.asarray(toggle_frac * LINE_BITS), 0.0)
+        feats = feats._replace(ones=ones.astype(jnp.float32),
+                               toggles=togg.astype(jnp.float32))
+        charges = charge_from_features(trace, feats, pp)
+        return _report(jnp.sum(charges), trace.total_cycles())
+
+    # ------------------------------------------------------------------ io
+    def save(self, path: str):
+        blob = {v: {"datadep": np.asarray(vc.datadep),
+                    "i2n": vc.i2n,
+                    "bank_open_delta": np.asarray(vc.bank_open_delta),
+                    "bank_read_factor": np.asarray(vc.bank_read_factor),
+                    "bank_write_factor": np.asarray(vc.bank_write_factor),
+                    "q_actpre": vc.q_actpre,
+                    "row_ones_slope": vc.row_ones_slope,
+                    "q_ref": vc.q_ref, "i_pd": vc.i_pd,
+                    "idd_datasheet": vc.idd_datasheet,
+                    "band": self.variation_band[v]}
+                for v, vc in self.by_vendor.items()}
+        with open(path, "wb") as f:
+            pickle.dump(blob, f)
+
+
+def reference_vampire() -> Vampire:
+    """A quick-fit VAMPIRE on a reduced fleet (for tests/examples)."""
+    from repro.core import params as P
+    fleet = device_sim.make_fleet(
+        [P.ModuleSpec(v, i, 2015) for v in range(3) for i in range(3)])
+    return Vampire.fit(fleet, probe_modules=2, probe_reps=64, n_rows=8)

@@ -1,0 +1,23 @@
+"""Jitted public wrappers for the BDI detection kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bdi.bdi import bdi_sizes_pallas
+from repro.kernels.byte_lut import ref as blref
+
+
+@functools.partial(jax.jit)
+def bdi_sizes(lines: jax.Array):
+    """(N, 16) uint32 lines -> (sizes (N,) int32, schemes (N,) int32)."""
+    b = blref.words_to_bytes(lines)
+    return bdi_sizes_pallas(b)
+
+
+@functools.partial(jax.jit)
+def compression_ratio(lines: jax.Array) -> jax.Array:
+    sizes, _ = bdi_sizes(lines)
+    return jnp.sum(sizes.astype(jnp.float32)) / (lines.shape[0] * 64.0)

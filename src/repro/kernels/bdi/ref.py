@@ -1,0 +1,17 @@
+"""Oracle for the BDI kernel: the offline numpy encoder from
+``repro.core.encodings`` (int64 arithmetic, independently implemented)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import encodings
+
+
+def bdi_sizes(lines_u32: np.ndarray) -> np.ndarray:
+    """(N, 16) uint32 lines -> (N,) encoded sizes in bytes."""
+    _, sizes = encodings.bdi_encode_lines(np.asarray(lines_u32))
+    return sizes
+
+
+def bytes_from_lines(lines_u32: np.ndarray) -> np.ndarray:
+    return encodings.words_to_bytes(np.asarray(lines_u32)).astype(np.int32)

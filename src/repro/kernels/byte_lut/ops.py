@@ -1,0 +1,21 @@
+"""Jitted public wrappers for the byte-LUT kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.byte_lut import ref
+from repro.kernels.byte_lut.byte_lut import byte_lut_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def apply_lut_lines(lines: jax.Array, lut: jax.Array,
+                    use_kernel: bool = True) -> jax.Array:
+    """Encode (N, 16) uint32 cache lines through a 256-byte LUT."""
+    b = ref.words_to_bytes(lines).reshape(-1)
+    if use_kernel:
+        enc = byte_lut_pallas(b, lut)
+    else:
+        enc = ref.byte_lut(b, lut)
+    return ref.bytes_to_words(enc.reshape(lines.shape[0], 64))

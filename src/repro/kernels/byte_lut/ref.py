@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the byte-LUT kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def byte_lut(b: jax.Array, lut: jax.Array) -> jax.Array:
+    return jnp.take(lut.astype(jnp.int32), b.astype(jnp.int32), axis=0)
+
+
+def words_to_bytes(lines: jax.Array) -> jax.Array:
+    """(..., 16) uint32 -> (..., 64) int32 bytes."""
+    lines = lines.astype(jnp.uint32)
+    parts = [((lines >> (8 * i)) & jnp.uint32(0xFF)).astype(jnp.int32)
+             for i in range(4)]
+    out = jnp.stack(parts, axis=-1)                  # (..., 16, 4)
+    return out.reshape(*lines.shape[:-1], 64)
+
+
+def bytes_to_words(b: jax.Array) -> jax.Array:
+    """(..., 64) int32 -> (..., 16) uint32."""
+    b = b.astype(jnp.uint32).reshape(*b.shape[:-1], 16, 4)
+    return (b[..., 0] | (b[..., 1] << 8) | (b[..., 2] << 16)
+            | (b[..., 3] << 24))
+
+
+def apply_lut_lines(lines: jax.Array, lut: jax.Array) -> jax.Array:
+    """(N, 16) uint32 lines -> encoded lines via the byte LUT."""
+    return bytes_to_words(byte_lut(words_to_bytes(lines), lut))

@@ -1,0 +1,34 @@
+"""Shared Pallas kernel plumbing.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with ``interpret=True``, which executes the kernel body in
+Python. ``INTERPRET`` flips automatically off-TPU; set REPRO_PALLAS_INTERPRET
+to force either way.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_env = os.environ.get("REPRO_PALLAS_INTERPRET")
+if _env is not None:
+    INTERPRET = _env not in ("0", "false", "False")
+else:
+    INTERPRET = jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x, multiple: int, axis: int = 0, value=0):
+    """Pad axis up to a multiple (kernels require whole blocks)."""
+    import jax.numpy as jnp
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n

@@ -1,0 +1,21 @@
+"""Jitted public wrappers for flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_kernel",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, use_kernel: bool = True,
+                    block_q: int = 256, block_k: int = 256):
+    """Blockwise attention; q (BH, Sq, D), k/v (BH_kv, Skv, D)."""
+    if use_kernel:
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      block_q=block_q, block_k=block_k)
+    return ref.attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sm_scale=None):
+    """q (BH, Sq, D); k, v (BH_kv, Skv, D). Plain softmax attention."""
+    bh, sq, d = q.shape
+    bh_kv = k.shape[0]
+    group = bh // bh_kv
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * sm_scale
+    if causal:
+        qi = jnp.arange(sq)[:, None]
+        ki = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(qi >= ki, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, vv.astype(jnp.float32)
+                      ).astype(q.dtype)

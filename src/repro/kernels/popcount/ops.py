@@ -1,0 +1,17 @@
+"""Jitted public wrappers for the popcount kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.popcount import ref
+from repro.kernels.popcount.popcount import line_ones_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def line_ones(lines: jax.Array, use_kernel: bool = True) -> jax.Array:
+    """(N, 16) uint32 -> (N,) int32 population count per 64-byte line."""
+    if use_kernel:
+        return line_ones_pallas(lines)
+    return ref.line_ones(lines)

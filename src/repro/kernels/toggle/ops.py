@@ -1,0 +1,26 @@
+"""Jitted public wrappers for the toggle kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.toggle import ref
+from repro.kernels.toggle.toggle import line_toggles_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def line_toggles(cur: jax.Array, prev: jax.Array,
+                 use_kernel: bool = True) -> jax.Array:
+    if use_kernel:
+        return line_toggles_pallas(cur, prev)
+    return ref.line_toggles(cur, prev)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def line_toggles_seq(lines: jax.Array, use_kernel: bool = True) -> jax.Array:
+    """Toggles of each line vs. its predecessor; first entry is 0."""
+    prev = jnp.concatenate([lines[:1], lines[:-1]], axis=0)
+    t = line_toggles(lines, prev, use_kernel=use_kernel)
+    return t.at[0].set(0)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the toggle kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.popcount.ref import line_ones
+
+
+def line_toggles(cur: jax.Array, prev: jax.Array) -> jax.Array:
+    return line_ones(jnp.bitwise_xor(cur.astype(jnp.uint32),
+                                     prev.astype(jnp.uint32)))
+
+
+def line_toggles_seq(lines: jax.Array) -> jax.Array:
+    """Toggles of each line vs. its predecessor; first entry is 0."""
+    prev = jnp.concatenate([lines[:1], lines[:-1]], axis=0)
+    t = line_toggles(lines, prev)
+    return t.at[0].set(0)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused VAMPIRE energy kernel: the production
+vectorized path from repro.core.energy_model."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy_model import PowerParams, rw_current
+
+
+def rw_current_ref(data, prev, op, mode, bankfac_index, pp: PowerParams):
+    """Same contract as the kernel, taking bank *indices* + PowerParams."""
+    from repro.core.dram import line_ones
+    ones = line_ones(data)
+    togg = line_ones(jnp.bitwise_xor(data.astype(jnp.uint32),
+                                     prev.astype(jnp.uint32)))
+    # rw_current applies pp.ones_quad too; the kernel is the fitted-model
+    # (linear) path, so callers pass params with ones_quad == 0.
+    return rw_current(pp, op, mode, ones, togg, bankfac_index)

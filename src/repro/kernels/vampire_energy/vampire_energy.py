@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused per-command VAMPIRE read/write current.
+
+Fuses, for every RD/WR command: line popcount, bus-XOR toggle popcount, the
+(interleave-mode, op) coefficient select, the structural bank factor, and the
+I/O-driver term — paper Eq. 2 evaluated in one VMEM pass. The coefficient
+select is a masked sum over the 8 (mode, op) combinations (no per-lane
+gathers on the TPU VPU).
+
+Inputs  data    (N, 16) uint32   line on the bus
+        prev    (N, 16) uint32   previous RD/WR line on the bus
+        op      (N,)   int32     0 = read, 1 = write
+        mode    (N,)   int32     interleave mode 0..3
+        bankfac (N,)   f32       structural factor of the target bank
+        coeffs  (4, 2, 3) f32    Table-5 parameters
+        io      (2,)   f32       (io_read_ma_per_one, io_write_ma_per_zero)
+Output  (N,) f32 current in mA
+
+The surrounding integrator (bank-state background, ACT/REF charges) stays in
+vectorized jnp — those terms touch O(N) scalars, not the O(N x 512 bit)
+data stream this kernel owns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INTERPRET, cdiv, pad_to
+from repro.kernels.popcount.popcount import _popcount_u32
+
+BLOCK_N = 1024
+LINE_BITS = 512.0
+
+
+def _kernel(data_ref, prev_ref, op_ref, mode_ref, bankfac_ref,
+            coeff_ref, io_ref, o_ref):
+    data = data_ref[...]
+    prev = prev_ref[...]
+    op = op_ref[...]
+    mode = mode_ref[...]
+    bankfac = bankfac_ref[...]
+    coeffs = coeff_ref[...]          # (4, 2, 3)
+    io = io_ref[...]                 # (2,)
+
+    ones = jnp.sum(_popcount_u32(data), axis=1).astype(jnp.float32)
+    togg = jnp.sum(_popcount_u32(jnp.bitwise_xor(data, prev)),
+                   axis=1).astype(jnp.float32)
+
+    cur = jnp.zeros_like(ones)
+    for m in range(4):
+        for o in range(2):
+            sel = ((mode == m) & (op == o)).astype(jnp.float32)
+            c = coeffs[m, o]
+            cur = cur + sel * (c[0] + c[1] * ones + c[2] * togg)
+    io_cur = jnp.where(op == 0, io[0] * ones, io[1] * (LINE_BITS - ones))
+    o_ref[...] = cur * bankfac + io_cur
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def rw_current_pallas(data, prev, op, mode, bankfac, coeffs, io,
+                      block_n: int = BLOCK_N,
+                      interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = INTERPRET
+    data, n = pad_to(data.astype(jnp.uint32), block_n, axis=0)
+    prev, _ = pad_to(prev.astype(jnp.uint32), block_n, axis=0)
+    op, _ = pad_to(op.astype(jnp.int32), block_n, axis=0)
+    mode, _ = pad_to(mode.astype(jnp.int32), block_n, axis=0)
+    bankfac, _ = pad_to(bankfac.astype(jnp.float32), block_n, axis=0)
+    grid = (cdiv(data.shape[0], block_n),)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, 16), lambda i: (i, 0)),
+                  pl.BlockSpec((block_n, 16), lambda i: (i, 0)),
+                  pl.BlockSpec((block_n,), lambda i: (i,)),
+                  pl.BlockSpec((block_n,), lambda i: (i,)),
+                  pl.BlockSpec((block_n,), lambda i: (i,)),
+                  pl.BlockSpec((4, 2, 3), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((data.shape[0],), jnp.float32),
+        interpret=interpret,
+    )(data, prev, op, mode, bankfac,
+      coeffs.astype(jnp.float32), io.astype(jnp.float32))
+    return out[:n]

@@ -1,0 +1,90 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + compiles every (architecture x input-shape) cell against the
+production meshes — 16x16 (one pod, 256 chips) and 2x16x16 (two pods,
+512 chips) — using ShapeDtypeStruct inputs only (no allocation), prints
+``memory_analysis()`` / ``cost_analysis()`` evidence, and writes one JSON
+artifact per cell under artifacts/dryrun/ for the roofline stage.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both
+    python -m repro.launch.dryrun --all --mesh pod --jobs-file cells.txt
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                   default="pod")
+    p.add_argument("--out", default="artifacts/dryrun")
+    p.add_argument("--fsdp", default=None,
+                   help="override FSDP: on|off (default: auto per plan)")
+    p.add_argument("--skip-existing", action="store_true")
+    args = p.parse_args()
+
+    from repro.configs import registry
+    from repro.launch import steps
+    from repro.launch.mesh import make_production_mesh
+
+    if args.all:
+        cells = registry.all_cells()
+    elif args.arch and not args.shape:
+        cells = [(a, s) for a, s in registry.all_cells() if a == args.arch]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    fsdp = {None: None, "on": True, "off": False}[args.fsdp]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        tag = "2x16x16" if multi_pod else "16x16"
+        for arch, shape in cells:
+            name = f"{arch}__{shape}__{tag}"
+            path = os.path.join(args.out, name + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {name}")
+                continue
+            t0 = time.time()
+            try:
+                res = steps.dryrun_cell(arch, shape, mesh,
+                                        multi_pod=multi_pod, fsdp=fsdp)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                mem = res.get("memory", {})
+                print(f"[ok]   {name}: compile={res['compile_s']:.0f}s "
+                      f"flops/dev={res['hlo_flops_per_device']:.3e} "
+                      f"coll/dev={res['collective_total_bytes_per_device']:.3e}B "
+                      f"peak/dev={mem.get('peak_bytes_est', 0)/2**30:.2f}GiB")
+            except Exception as e:  # noqa: BLE001 - record and continue
+                failures.append((name, repr(e)))
+                print(f"[FAIL] {name}: {e!r} ({time.time()-t0:.0f}s)")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for n, e in failures:
+            print(" ", n, e)
+        return 1
+    print("\nall cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Reproduce the EXPERIMENTS.md §Perf hillclimbs (before/after per
+iteration). Each variant is a real framework configuration; the flash-
+kernel memory substitution uses the measured score-tile traffic (see
+hlo_analysis.HloReport.kernel_adjusted_traffic).
+
+    python -m repro.launch.hillclimb [--cell yi_train|yi_prefill|granite_decode]
+"""
+
+import argparse
+
+from repro.launch import roofline
+
+
+def _row(tag, res, kernel_sub=False):
+    traffic = (res["kernel_adjusted_traffic_bytes_per_device"] if kernel_sub
+               else res["hlo_traffic_bytes_per_device"])
+    comp = res["hlo_flops_per_device"] / roofline.PEAK_FLOPS_BF16
+    mem = traffic / roofline.HBM_BW
+    coll = res["collective_total_bytes_per_device"] / roofline.ICI_LINK_BW
+    peak = res.get("memory", {}).get("peak_bytes_est", 0) / 2 ** 30
+    print(f"  {tag:34s} compute={comp:8.2f}s memory={mem:8.2f}s "
+          f"collective={coll:8.2f}s bound={max(comp, mem, coll):8.2f}s "
+          f"peak={peak:6.2f}GiB")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--cell", default="all",
+                   choices=("all", "yi_train", "yi_prefill",
+                            "granite_decode"))
+    args = p.parse_args()
+
+    from repro.launch import steps
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=False)
+
+    if args.cell in ("all", "yi_train"):
+        print("H1: yi-34b train_4k (most collective-bound)")
+        base = steps.dryrun_cell("yi-34b", "train_4k", mesh,
+                                 multi_pod=False, zero1=False, fsdp=True)
+        _row("baseline (FSDP + boundary-SP)", base)
+        it1 = steps.dryrun_cell("yi-34b", "train_4k", mesh,
+                                multi_pod=False, zero1=True,
+                                interior_pin=True)
+        _row("iter1: ZeRO-1 + interior pin", it1)
+        _row("iter2: + flash-kernel memory", it1, kernel_sub=True)
+
+    if args.cell in ("all", "yi_prefill"):
+        print("H2: yi-34b prefill_32k (worst roofline fraction)")
+        # the baseline predates the prefill fixes; reproduce its numbers
+        # from the archived artifact if present, then measure current code
+        import json
+        bpath = "artifacts/dryrun/yi-34b__prefill_32k__16x16.json"
+        if os.path.exists(bpath):
+            _row("baseline (archived)", json.load(open(bpath)))
+        cur = steps.dryrun_cell("yi-34b", "prefill_32k", mesh,
+                                multi_pod=False)
+        _row("iter1: pin+cache-shard+last-logit", cur)
+        _row("iter2: + flash-kernel memory", cur, kernel_sub=True)
+
+    if args.cell in ("all", "granite_decode"):
+        print("H3: granite-8b decode_32k (paper-representative)")
+        base = steps.dryrun_cell("granite-8b", "decode_32k", mesh,
+                                 multi_pod=False)
+        _row("baseline (bf16 KV cache)", base)
+        q = steps.dryrun_cell("granite-8b", "decode_32k", mesh,
+                              multi_pod=False, kv_cache_dtype="int8")
+        _row("int8 KV cache encoding", q)
+
+
+if __name__ == "__main__":
+    main()

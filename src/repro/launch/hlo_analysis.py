@@ -1,0 +1,309 @@
+"""Whole-program analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` visits each computation once and does NOT
+multiply by while-loop trip counts — with scan-over-layers models that
+undercounts by the layer count (verified empirically; see EXPERIMENTS.md
+§Dry-run). This module parses ``compiled.as_text()`` and computes
+execution-count-weighted totals:
+
+* matmul FLOPs (dot ops: 2 x result_elems x contraction_elems),
+* collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute), result-buffer sized,
+* an HBM-traffic proxy: operand+result bytes of every fusion / dot /
+  copy / dynamic-(update-)slice / gather / collective instruction.
+
+Execution counts come from the call graph: ENTRY x1, while bodies x their
+``known_trip_count`` backend_config (1 + warn if absent), fusions x1.
+All numbers are per-device (the text is the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT )?%?([\w.\-]+) = (.*?) ([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) \((.*?)\) -> ")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{"?n"?\s*:\s*"?(\d+)')
+_CALLEE_RE = re.compile(r"(?:condition|body|calls|to_apply)=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_FUSED_CALLEES: set = set()
+# NOTE: plain `copy` is excluded: the CPU backend's loop double-buffering
+# inserts whole-carry copies per iteration that a TPU compile aliases away;
+# counting them would swamp the memory term with backend artifacts.
+_TRAFFIC_OPS = COLLECTIVE_OPS + (
+    "fusion", "dot", "convolution", "dynamic-update-slice",
+    "dynamic-slice", "gather", "scatter", "custom-call", "sort",
+    "reduce-window", "select-and-scatter", "cholesky", "triangular-solve")
+
+
+def shape_bytes(shape_text: str) -> int:
+    """Total bytes of every `type[dims]` group in the text (tuples sum)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_elems(shape_text: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(shape_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    traffic: float = 0.0
+    score_traffic: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    # (callee, multiplier) edges
+    calls: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class HloReport:
+    flops: float
+    traffic_bytes: float
+    collective_bytes: dict[str, float]
+    n_collectives: dict[str, int]
+    missing_trip_counts: int
+    # HBM traffic attributable to (block x block) attention score tensors
+    # round-tripping through HBM in the pure-jnp blockwise attention. The
+    # Pallas flash kernel keeps these in VMEM (validated in
+    # tests/test_kernels.py), so `traffic - score_traffic` models the
+    # kernel-substituted memory term.
+    score_traffic_bytes: float = 0.0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+    @property
+    def kernel_adjusted_traffic(self) -> float:
+        return max(self.traffic_bytes - self.score_traffic_bytes, 0.0)
+
+
+def _dot_flops(line: str, result_shape: str, symbols: dict) -> float:
+    """2 * result_elems * contraction_elems."""
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    if not m:
+        return 0.0
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    ops = _operands(line)
+    if not ops:
+        return 0.0
+    lhs_shape = symbols.get(ops[0], "")
+    groups = _SHAPE_RE.findall(lhs_shape)
+    if not groups:
+        return 0.0
+    dims = [int(x) for x in groups[0][1].split(",") if x]
+    contract = 1
+    for c in cdims:
+        if c < len(dims):
+            contract *= dims[c]
+    return 2.0 * shape_elems(result_shape) * contract
+
+
+def _traffic_bytes(base: str, line: str, result_shape: str,
+                   symbols: dict) -> float:
+    """HBM-traffic estimate per instruction, mirroring HloCostAnalysis'
+    special cases:
+
+    * dynamic-slice / gather read only the sliced window (~= result);
+    * dynamic-update-slice reads+writes only the update operand;
+    * a fusion's operand reads are capped at its result size (big loop
+      -resident buffers consumed through internal slices would otherwise be
+      charged in full on every loop iteration);
+    * dot reads operands in full (streaming weights from HBM) + writes out.
+    """
+    result = shape_bytes(result_shape)
+    ops = _operands(line)
+    if base in ("dynamic-slice", "gather"):
+        return 2.0 * result
+    if base == "dynamic-update-slice":
+        upd = shape_bytes(symbols.get(ops[1], "")) if len(ops) > 1 else result
+        return 2.0 * upd
+    if base in ("dot", "convolution", "custom-call"):
+        t = result
+        for op in ops:
+            t += shape_bytes(symbols.get(op, ""))
+        return t
+    # fusion / copy / sort / scatter / collectives / etc.
+    t = result
+    for op in ops:
+        t += min(shape_bytes(symbols.get(op, "")), max(result, 1))
+    return t
+
+
+def _operands(line: str) -> list[str]:
+    """Operand instruction names inside the first (...) argument list."""
+    start = line.find("(")
+    if start < 0:
+        return []
+    depth = 0
+    end = start
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERAND_RE.findall(line[start:end + 1])
+
+
+def _is_score_shaped(shape_text: str, block: int) -> bool:
+    """Result tensors whose trailing dims are (block, block) — the
+    blockwise-attention score/probability tiles."""
+    for _, dims in _SHAPE_RE.findall(shape_text):
+        d = [int(x) for x in dims.split(",") if x]
+        if len(d) >= 2 and d[-1] == block and d[-2] == block:
+            return True
+    return False
+
+
+def analyze_hlo(text: str, score_block: int | None = None) -> HloReport:
+    global _FUSED_CALLEES
+    _FUSED_CALLEES = set()
+    comps: dict[str, CompStats] = {}
+    entry: str | None = None
+    current: CompStats | None = None
+    symbols: dict[str, str] = {}
+    missing_trips = 0
+    n_coll: dict[str, int] = defaultdict(int)
+
+    for raw in text.splitlines():
+        if raw and not raw.startswith(" "):
+            m = _COMP_RE.match(raw)
+            if m:
+                name = m.group(1)
+                current = CompStats()
+                comps[name] = current
+                symbols = {}
+                if raw.startswith("ENTRY"):
+                    entry = name
+                # header parameters: "name: shape, ..."
+                for pm in re.finditer(r"([\w.\-]+): ([^,)]+)", m.group(2)):
+                    symbols[pm.group(1)] = pm.group(2)
+            continue
+        if current is None:
+            continue
+        im = _INSTR_RE.match(raw)
+        if not im:
+            continue
+        name, shape_text, opcode, _rest = im.groups()
+        symbols[name] = shape_text
+
+        if opcode == "dot":
+            current.flops += _dot_flops(raw, shape_text, symbols)
+        base = opcode
+        for suffix in ("-start", "-done", "-update"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base in COLLECTIVE_OPS and not opcode.endswith("-done"):
+            b = shape_bytes(shape_text)
+            current.coll_bytes[base] += b
+            n_coll[base] += 1
+        if base in _TRAFFIC_OPS and not opcode.endswith("-done"):
+            t = _traffic_bytes(base, raw, shape_text, symbols)
+            current.traffic += t
+            if score_block:
+                if _is_score_shaped(shape_text, score_block):
+                    current.score_traffic += t
+                else:
+                    # score-shaped OPERANDS (e.g. the P tile read by the
+                    # P @ V dot) also stay in VMEM under the flash kernel
+                    for op in _operands(raw):
+                        osh = symbols.get(op, "")
+                        if _is_score_shaped(osh, score_block):
+                            current.score_traffic += min(
+                                shape_bytes(osh),
+                                max(shape_bytes(shape_text), 1)
+                                if base not in ("dot", "convolution",
+                                                "custom-call")
+                                else shape_bytes(osh))
+        if opcode == "while":
+            body = None
+            trip = None
+            bm = re.search(r"body=%?([\w.\-]+)", raw)
+            cm = re.search(r"condition=%?([\w.\-]+)", raw)
+            tm = _TRIP_RE.search(raw)
+            if tm:
+                trip = int(tm.group(1))
+            else:
+                missing_trips += 1
+                trip = 1
+            if bm:
+                current.calls.append((bm.group(1), trip))
+            if cm:
+                current.calls.append((cm.group(1), trip + 1))
+        elif opcode in ("call", "fusion", "custom-call", "reduce",
+                        "map", "sort", "reduce-window", "scatter",
+                        "select-and-scatter", "conditional", "async-start"):
+            fused = opcode != "call" and opcode != "conditional"
+            for callee in _CALLEE_RE.findall(raw):
+                current.calls.append((callee, 1))
+                if fused:
+                    _FUSED_CALLEES.add(callee)
+            if opcode == "conditional":
+                for bmatch in re.finditer(
+                        r"branch_computations=\{([^}]*)\}", raw):
+                    for callee in _OPERAND_RE.findall(bmatch.group(1)):
+                        current.calls.append((callee, 1))
+
+    # propagate execution counts (call graph is a DAG in HLO)
+    exec_count: dict[str, float] = defaultdict(float)
+
+    def visit(name: str, mult: float, depth=0):
+        if name not in comps or depth > 64:
+            return
+        exec_count[name] += mult
+        for callee, k in comps[name].calls:
+            visit(callee, mult * k, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+
+    flops = sum(c.flops * exec_count[n] for n, c in comps.items())
+    # fused computations' instruction traffic stays on-chip: count only the
+    # fusion call site (operands + result), not the body
+    traffic = sum(c.traffic * exec_count[n] for n, c in comps.items()
+                  if n not in _FUSED_CALLEES)
+    score_traffic = sum(c.score_traffic * exec_count[n]
+                        for n, c in comps.items()
+                        if n not in _FUSED_CALLEES)
+    coll: dict[str, float] = defaultdict(float)
+    for n, c in comps.items():
+        for k, v in c.coll_bytes.items():
+            coll[k] += v * exec_count[n]
+    return HloReport(flops=float(flops), traffic_bytes=float(traffic),
+                     collective_bytes=dict(coll), n_collectives=dict(n_coll),
+                     missing_trip_counts=missing_trips,
+                     score_traffic_bytes=float(score_traffic))

@@ -1,0 +1,138 @@
+"""Roofline analysis (deliverable g): three terms per (arch x mesh) cell.
+
+    compute    = HLO_FLOPs_per_device            / peak_FLOPs_per_chip
+    memory     = HLO_traffic_bytes_per_device    / HBM_bandwidth_per_chip
+    collective = collective_bytes_per_device     / ICI_link_bandwidth
+
+All inputs are per-device numbers from the SPMD-partitioned module (the
+dry-run JSON artifacts), already multiplied by while-loop trip counts
+(see hlo_analysis.py — XLA's own cost_analysis() visits loop bodies once).
+
+Caveats recorded with every table: the traffic term is an HBM proxy parsed
+from CPU-backend HLO (fusion boundaries and loop copies differ on real TPU;
+plain copies are excluded), so its absolute value is an upper-bound estimate
+— the per-cell *dominant term* and the before/after deltas in §Perf are the
+meaningful outputs.
+
+MODEL_FLOPS uses 6·N·D for training (N = active params for MoE) and 2·N·D
+for inference forward passes; the MODEL/HLO ratio flags remat and padding
+waste (train with full remat recomputes the forward => ratio ~0.75 of the
+no-waste 6ND accounting is expected... values far below that indicate real
+redundancy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_LINK_BW = 50e9              # B/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_device: float
+    hlo_flops_per_device: float
+    peak_gib: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the binding roofline that useful compute occupies:
+        (model_flops / peak) / max(term). 1.0 = compute-bound at peak."""
+        ideal = self.model_flops_per_device / PEAK_FLOPS_BF16
+        return ideal / max(self.bound_s, 1e-30)
+
+    @property
+    def flops_ratio(self) -> float:
+        return self.model_flops_per_device / max(self.hlo_flops_per_device,
+                                                 1e-30)
+
+
+def model_flops_per_device(cfg, shape, n_devices: int) -> float:
+    """6ND (train) / 2ND (inference) useful-model FLOPs per device."""
+    n_active = cfg.active_params_estimate()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+def from_artifact(art: dict) -> Roofline:
+    from repro.configs import registry
+    cfg = registry.get_config(art["arch"], smoke=art.get("smoke", False))
+    shape = registry.SHAPES[art["shape"]]
+    mf = model_flops_per_device(cfg, shape, art["n_devices"])
+    return Roofline(
+        arch=art["arch"], shape=art["shape"], mesh=art["mesh"],
+        compute_s=art["hlo_flops_per_device"] / PEAK_FLOPS_BF16,
+        memory_s=art["hlo_traffic_bytes_per_device"] / HBM_BW,
+        collective_s=art["collective_total_bytes_per_device"] / ICI_LINK_BW,
+        model_flops_per_device=mf,
+        hlo_flops_per_device=art["hlo_flops_per_device"],
+        peak_gib=art.get("memory", {}).get("peak_bytes_est", 0) / 2 ** 30,
+    )
+
+
+def load_artifacts(directory: str = "artifacts/dryrun",
+                   mesh_tag: str | None = "16x16") -> list[Roofline]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            art = json.load(f)
+        if mesh_tag and art["mesh"] != mesh_tag:
+            continue
+        out.append(from_artifact(art))
+    return out
+
+
+def table(rows: list[Roofline]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect':>10s} {'dominant':>10s} {'roofl%':>7s} "
+           f"{'6ND/HLO':>8s} {'peakGiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:24s} {r.shape:12s} {r.compute_s:10.3e} "
+            f"{r.memory_s:10.3e} {r.collective_s:10.3e} {r.dominant:>10s} "
+            f"{100*r.roofline_fraction:6.1f}% {r.flops_ratio:8.2f} "
+            f"{r.peak_gib:8.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="artifacts/dryrun")
+    p.add_argument("--mesh", default="16x16")
+    args = p.parse_args()
+    rows = load_artifacts(args.dir, args.mesh)
+    print(table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,349 @@
+"""Step builders + the dry-run cell pipeline (mesh-agnostic).
+
+`dryrun_cell` is the heart of deliverable (e): build the step function for
+an (arch x shape) cell, shard everything by the cell plan, lower + compile
+against ShapeDtypeStructs (no allocation), and extract memory / cost /
+collective statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.launch import hlo_analysis
+from repro.models.lm import LM
+from repro.models.meta import abstractify, specs_for
+from repro.optim import adamw
+from repro.sharding import rules as R
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+def make_train_step(lm: LM, ocfg: adamw.AdamWConfig,
+                    microbatches: int = 1, grad_dtype=jnp.float32,
+                    mb_sharding=None):
+    """Gradient-accumulating train step. With k > 1 microbatches the batch
+    is split (k, B/k, ...) and per-microbatch grads are averaged with a
+    scan — saved-activation memory scales with B/k, not B.
+
+    ``mb_sharding(leaf)`` re-pins the split batch's sharding: the
+    (B,) -> (k, B/k) reshape otherwise loses the batch partitioning and
+    every microbatch silently runs replicated (k x the flops)."""
+    grad_fn = jax.value_and_grad(lm.loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, extras), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                y = x.reshape(microbatches, x.shape[0] // microbatches,
+                              *x.shape[1:])
+                return mb_sharding(y) if mb_sharding is not None else y
+            mbs = jax.tree_util.tree_map(split, batch)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, grad_dtype), params)
+
+            def mb_body(carry, mb):
+                g_acc, loss_acc, nll_acc, aux_acc = carry
+                (loss, extras), grads = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(grad_dtype) / microbatches,
+                    g_acc, grads)
+                return (g_acc, loss_acc + loss / microbatches,
+                        nll_acc + extras["nll"] / microbatches,
+                        aux_acc + extras["aux_loss"] / microbatches), None
+
+            (grads, loss, nll, aux), _ = jax.lax.scan(
+                mb_body, (g0, jnp.zeros((), jnp.float32),
+                          jnp.zeros((), jnp.float32),
+                          jnp.zeros((), jnp.float32)), mbs)
+            extras = {"nll": nll, "aux_loss": aux}
+        params, opt_state, om = adamw.update(grads, opt_state, params, ocfg)
+        metrics = {"loss": loss, "nll": extras["nll"],
+                   "aux_loss": extras["aux_loss"], **om}
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(lm: LM):
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch["tokens"], aux=batch.get("aux"))
+    return prefill_step
+
+
+def make_decode_step(lm: LM):
+    def decode_step(params, caches, tokens):
+        return lm.decode_step(params, caches, tokens)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: Any
+    lm: LM
+    plan: R.CellPlan
+    mesh: Any
+    jitted: Any            # the jit-wrapped step
+    example_args: tuple    # ShapeDtypeStructs, shardings attached
+    kind: str
+
+
+def _shard(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _with_sharding(sds_tree, shard_tree):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, shard_tree)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool,
+               smoke: bool = False, batch_override: int | None = None,
+               fsdp: bool | None = None, seq_parallel: bool = False,
+               zero1: bool = False, interior_pin: bool = False,
+               kv_cache_dtype=None) -> Cell:
+    cfg = registry.get_config(arch, smoke=smoke)
+    spec = registry.SHAPES[shape_name]
+    gb = batch_override or spec.global_batch
+    plan = R.plan_for(cfg, spec.kind, gb, mesh, multi_pod,
+                      seq_len=spec.seq_len)
+    if zero1:
+        # ZeRO-1: weights TP-only (fsdp=False), optimizer state data-sharded
+        plan = dataclasses.replace(
+            plan, fsdp=False, zero1=True,
+            rules=R.make_rules(cfg, multi_pod=multi_pod, fsdp=False,
+                               kv_seq_axis=plan.rules.rules.get("kv_seq")))
+    if fsdp is not None:
+        plan = dataclasses.replace(
+            plan, fsdp=fsdp,
+            rules=R.make_rules(cfg, multi_pod=multi_pod, fsdp=fsdp,
+                               kv_seq_axis=plan.rules.rules.get("kv_seq")))
+    lm = LM(cfg)
+    if kv_cache_dtype is not None:
+        lm.kv_cache_dtype = jnp.dtype(kv_cache_dtype)
+    if cfg.moe is not None:
+        # Production EP path: shard_map local routing + single psum (see
+        # layers.moe_apply_shardmap). Without it, GSPMD's auto-partitioned
+        # global dispatch replicates scatters and idles the data axis.
+        baxes0 = R.batch_axes(multi_pod)
+        n_d = 1
+        msh = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for a in baxes0:
+            n_d *= msh.get(a, 1)
+        dp = baxes0 if gb % n_d == 0 else None
+        lm.moe_exec = {"mesh": mesh, "dp_axes": dp, "fsdp": plan.fsdp}
+    if seq_parallel and spec.kind in ("train", "prefill"):
+        baxes0 = R.batch_axes(multi_pod)
+        lm.act_sharding = NamedSharding(mesh, P(baxes0, "model", None))
+    # Boundary-SP: shard remat-saved layer inputs over the model axis.
+    # Effective for attention-only stacks; SSM blocks reshard badly under
+    # it (measured: jamba peak rose 39 -> 66 GiB), so hybrid/SSM skip it.
+    if plan.fsdp and spec.kind == "train" \
+            and spec.seq_len % mesh.shape.get("model", 1) == 0 \
+            and "mamba" not in cfg.pattern:
+        baxes0 = R.batch_axes(multi_pod)
+        lm.boundary_sp = (
+            NamedSharding(mesh, P(baxes0, "model", None)),
+            NamedSharding(mesh, P(baxes0, None, None)))
+    elif (interior_pin or plan.zero1) and spec.kind == "train":
+        # pin layer-interior activations to (batch-sharded, replicated):
+        # prevents GSPMD from replicating attention internals over the
+        # model axis (measured 3.6x redundant flops on yi-34b) without
+        # seq-sharding the saved carries
+        baxes0 = R.batch_axes(multi_pod)
+        pin = NamedSharding(mesh, P(baxes0, None, None))
+        lm.boundary_sp = (pin, pin)
+    dt = jnp.dtype(cfg.dtype)
+
+    pmeta = lm.param_meta()
+    pspecs = specs_for(pmeta, plan.rules, mesh)
+    pshard = _shard(mesh, pspecs)
+    params_sds = _with_sharding(abstractify(pmeta, dtype=dt), pshard)
+
+    baxes = tuple(R.batch_axes(multi_pod))
+    n_data = 1
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in baxes:
+        n_data *= mesh_shape.get(a, 1)
+    # batch-dim sharding entry: None (replicated) when not divisible —
+    # NEVER an empty spec, which would shift later entries onto dim 0
+    bentry = baxes if gb % n_data == 0 else None
+
+    inputs = registry.input_specs(cfg, spec, batch_override=gb)
+
+    if spec.kind == "train":
+        ocfg = adamw.AdamWConfig(
+            quantize_moments=plan.quantized_moments)
+        # grads accumulate in bf16 for the very largest models (the f32
+        # accumulator would not fit next to their int8 moments)
+        gdt = jnp.bfloat16 if plan.quantized_moments else jnp.float32
+        ometa = adamw.state_meta(pmeta, ocfg)
+        ospecs = specs_for(ometa, plan.opt_rules(cfg, multi_pod), mesh)
+        oshard = _shard(mesh, ospecs)
+        opt_sds = _with_sharding(abstractify(ometa), oshard)
+        batch_shard = {"tokens": NamedSharding(mesh, P(bentry, None)),
+                       "labels": NamedSharding(mesh, P(bentry, None))}
+        if "aux" in inputs:
+            batch_shard["aux"] = NamedSharding(mesh, P(bentry, None, None))
+        batch_sds = _with_sharding(inputs, batch_shard)
+        scalar = NamedSharding(mesh, P())
+        metrics_shard = {k: scalar for k in
+                         ("loss", "nll", "aux_loss", "grad_norm", "lr")}
+        def mb_sharding(y, _mesh=mesh, _bentry=bentry):
+            spec = P(None, _bentry, *([None] * (y.ndim - 2)))
+            return jax.lax.with_sharding_constraint(
+                y, NamedSharding(_mesh, spec))
+
+        step = make_train_step(lm, ocfg, microbatches=plan.microbatches,
+                               grad_dtype=gdt, mb_sharding=mb_sharding)
+        jitted = jax.jit(step,
+                         out_shardings=(pshard, oshard, metrics_shard),
+                         donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, batch_sds)
+    elif spec.kind == "prefill":
+        batch_shard = {"tokens": NamedSharding(mesh, P(bentry, None))}
+        if "aux" in inputs:
+            batch_shard["aux"] = NamedSharding(mesh, P(bentry, None, None))
+        batch_sds = _with_sharding(inputs, batch_shard)
+        # pin layer-interior activations (same GSPMD-replication hazard as
+        # training) and shard the emitted KV caches like decode caches
+        pin = NamedSharding(mesh, P(baxes if gb % n_data == 0 else None,
+                                    None, None))
+        lm.boundary_sp = (pin, pin)
+        cache_meta = lm.init_cache_meta(gb, spec.seq_len)
+        kv_rules = R.make_rules(
+            cfg, multi_pod=multi_pod, fsdp=plan.fsdp, kv_seq_axis="model")
+        cspecs = specs_for(cache_meta, kv_rules, mesh)
+        cshard = _shard(mesh, cspecs)
+        logits_shard = NamedSharding(mesh, P(bentry, "model"))
+        step = make_prefill_step(lm)
+        jitted = jax.jit(step, out_shardings=(logits_shard, cshard))
+        args = (params_sds, batch_sds)
+    elif spec.kind == "decode":
+        cache_meta = lm.init_cache_meta(gb, spec.seq_len)
+        cspecs = specs_for(cache_meta, plan.rules, mesh)
+        cshard = _shard(mesh, cspecs)
+        cache_sds = _with_sharding(abstractify(cache_meta), cshard)
+        tok_sds = _with_sharding(
+            inputs["tokens"], NamedSharding(mesh, P(bentry, None)))
+        step = make_decode_step(lm)
+        # logits (B, V_padded): batch axis only when divisible; padded vocab
+        # is always divisible by the model axis
+        logits_shard = NamedSharding(mesh, P(bentry, "model"))
+        jitted = jax.jit(step, out_shardings=(logits_shard, cshard),
+                         donate_argnums=(1,))
+        args = (params_sds, cache_sds, tok_sds)
+    else:
+        raise ValueError(spec.kind)
+    return Cell(arch, shape_name, cfg, lm, plan, mesh, jitted, args,
+                spec.kind)
+
+
+# ---------------------------------------------------------------------------
+# Dry run: lower + compile + analyze
+# ---------------------------------------------------------------------------
+def _f32_twin_bytes(text: str) -> float:
+    """Bytes of large f32 buffers that are CPU-backend twins of bf16 loop
+    buffers (same dims; >=64 MiB). See dryrun memory accounting note."""
+    import re
+    dims_by_dtype: dict[str, set] = {"f32": set(), "bf16": set()}
+    for m in re.finditer(r"= (f32|bf16)\[([0-9,]+)\]\S* "
+                         r"(dynamic-update-slice|get-tuple-element|fusion)",
+                         text):
+        dims_by_dtype[m.group(1)].add(m.group(2))
+    total = 0.0
+    for dims in dims_by_dtype["f32"] & dims_by_dtype["bf16"]:
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 >= 64 * 2 ** 20:
+            total += n * 4
+    return total
+
+
+
+def dryrun_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool,
+                smoke: bool = False, fsdp: bool | None = None,
+                batch_override: int | None = None,
+                seq_parallel: bool = False, zero1: bool = False,
+                interior_pin: bool = False, kv_cache_dtype=None,
+                keep_text: bool = False) -> dict:
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, multi_pod=multi_pod,
+                      smoke=smoke, fsdp=fsdp, batch_override=batch_override,
+                      seq_parallel=seq_parallel, zero1=zero1,
+                      interior_pin=interior_pin,
+                      kv_cache_dtype=kv_cache_dtype)
+    lowered = cell.jitted.lower(*cell.example_args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    ma = compiled.memory_analysis()
+    text = compiled.as_text()
+    rep = hlo_analysis.analyze_hlo(text,
+                                   score_block=cell.cfg.attention_block)
+
+    n_dev = mesh.devices.size
+    out = {
+        "arch": arch, "shape": shape_name, "kind": cell.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod, "n_devices": int(n_dev),
+        "smoke": smoke, "fsdp": cell.plan.fsdp,
+        "zero1": cell.plan.zero1,
+        "seq_parallel": seq_parallel,
+        "microbatches": cell.plan.microbatches,
+        "quantized_moments": cell.plan.quantized_moments,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "xla_flops_per_device": float(ca.get("flops", 0.0)) if ca else 0.0,
+        "xla_bytes_per_device": float(ca.get("bytes accessed", 0.0))
+        if ca else 0.0,
+        "hlo_flops_per_device": rep.flops,
+        "hlo_traffic_bytes_per_device": rep.traffic_bytes,
+        "score_traffic_bytes_per_device": rep.score_traffic_bytes,
+        "kernel_adjusted_traffic_bytes_per_device":
+            rep.kernel_adjusted_traffic,
+        "collective_bytes_per_device": rep.collective_bytes,
+        "collective_total_bytes_per_device": rep.total_collective_bytes,
+        "n_collectives": rep.n_collectives,
+        "missing_trip_counts": rep.missing_trip_counts,
+    }
+    if ma is not None:
+        peak = int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                   + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        # The CPU backend materializes f32 working twins of big bf16 loop
+        # buffers (bf16 is not native on CPU); a TPU compile keeps them
+        # bf16. Subtract f32 stacks that have a same-shape bf16 twin for a
+        # TPU-representative estimate (both numbers are recorded).
+        f32_twin = _f32_twin_bytes(text)
+        out["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_cpu": peak,
+            "f32_twin_bytes": int(f32_twin),
+            "peak_bytes_est": int(max(peak - f32_twin, 0)),
+        }
+    if keep_text:
+        out["hlo_text"] = text
+    return out

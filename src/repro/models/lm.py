@@ -1,0 +1,403 @@
+"""Generic decoder LM assembled from the layer library.
+
+One model class covers all 10 assigned architectures:
+
+* mixer pattern per layer ("attn" | "mamba" | "xattn"), cycled with period P;
+* optional MoE MLPs every k-th layer;
+* optional MLA attention (DeepSeek);
+* optional encoder stack + per-decoder-layer cross attention (Whisper);
+* optional auxiliary-embedding cross attention (Llama-3.2 Vision).
+
+Layers are stacked into R = n_layers / P "super-layers" and executed with
+``jax.lax.scan`` over the stacked parameters, keeping HLO size and compile
+time independent of depth; ``jax.checkpoint`` wraps the super-layer body
+(full remat — only block inputs are saved).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.meta import ParamMeta, is_meta
+
+F32 = jnp.float32
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _mask_pad_vocab(logits, cfg: ModelConfig):
+    """Force pad-vocab logits to -inf (keeps the padded table inert)."""
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(ids < cfg.vocab, logits, -1e30)
+
+
+def _stack_meta(meta_tree, r: int):
+    """Add a leading stacked-layers axis of size r to every ParamMeta."""
+    return jax.tree_util.tree_map(
+        lambda m: ParamMeta((r,) + m.shape, ("layers",) + m.logical,
+                            init=m.init, scale=m.scale, dtype=m.dtype),
+        meta_tree, is_leaf=is_meta)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.period = len(cfg.pattern)
+        if cfg.moe is not None:
+            import math
+            self.period = math.lcm(self.period, cfg.moe.every)
+        assert cfg.n_layers % self.period == 0, (cfg.name, self.period)
+        self.repeats = cfg.n_layers // self.period
+        # Optional sequence-parallel activation sharding (Megatron-SP): a
+        # NamedSharding for (B, S, d) residual-stream activations, applied
+        # at super-layer boundaries. The saved-for-backward layer inputs
+        # then shard over the model axis instead of being replicated.
+        self.act_sharding = None
+        # Expert-major MoE dispatch-buffer sharding hint (EP): without it
+        # GSPMD may replicate the (E, capacity, d) buffers.
+        self.moe_sharding = None
+        # shard_map MoE execution plan: {"mesh", "dp_axes", "fsdp"} — the
+        # production EP path (local routing + psum); None = GSPMD dispatch.
+        self.moe_exec = None
+        # int8 KV cache (decode): None = config dtype.
+        self.kv_cache_dtype = None
+        # Boundary-SP: pair of (sharded, interior) NamedShardings. The scan
+        # carry (== the remat-saved layer input) is pinned to `sharded`
+        # (seq over model) while the layer interior is pinned back to
+        # `interior`, so saved activations shard over the model axis
+        # without re-partitioning the whole layer along the sequence.
+        self.boundary_sp = None
+
+    def _moe(self, p, x):
+        if self.moe_exec is not None:
+            return L.moe_apply_shardmap(p, x, self.cfg, **self.moe_exec)
+        return L.moe_apply(p, x, self.cfg,
+                           expert_sharding=self.moe_sharding)
+
+    def _constrain(self, x):
+        if self.act_sharding is not None and x.ndim == 3 \
+                and x.shape[1] % self.act_sharding.mesh.shape.get(
+                    "model", 1) == 0:
+            return jax.lax.with_sharding_constraint(x, self.act_sharding)
+        return x
+
+    # ------------------------------------------------------------ metadata
+    def _sublayer_meta(self, j: int) -> dict:
+        cfg = self.cfg
+        kind = cfg.layer_kind(j)
+        meta: dict = {}
+        if kind == "attn":
+            meta["mixer"] = (L.mla_meta(cfg) if cfg.attn_kind == "mla"
+                             else L.attn_meta(cfg))
+        elif kind == "mamba":
+            meta["mixer"] = L.mamba_meta(cfg)
+        elif kind == "xattn":
+            meta["mixer"] = L.attn_meta(cfg, cross=True)
+        else:
+            raise ValueError(kind)
+        if cfg.n_encoder_layers and kind == "attn":
+            meta["xattn"] = L.attn_meta(cfg, cross=True)  # enc-dec cross
+        if cfg.is_moe_layer(j):
+            meta["mlp"] = L.moe_meta(cfg)
+        elif cfg.d_ff > 0:
+            meta["mlp"] = L.mlp_meta(cfg)   # Mamba2 blocks have no MLP
+        return meta
+
+    def param_meta(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        meta: dict = {
+            "embed": ParamMeta((cfg.vocab_padded, d), ("vocab", "embed"),
+                               scale=0.02),
+            "final_norm": L.rmsnorm_meta(d),
+            "layers": _stack_meta(
+                {f"sub{j}": self._sublayer_meta(j)
+                 for j in range(self.period)}, self.repeats),
+        }
+        if not cfg.tie_embeddings:
+            meta["unembed"] = ParamMeta((d, cfg.vocab_padded),
+                                        ("embed", "vocab"))
+        if cfg.n_encoder_layers:
+            meta["encoder"] = {
+                "layers": _stack_meta(
+                    {"attn": L.attn_meta(cfg), "mlp": L.mlp_meta(cfg)},
+                    cfg.n_encoder_layers),
+                "final_norm": L.rmsnorm_meta(d),
+            }
+        return meta
+
+    def init(self, key: jax.Array):
+        from repro.models.meta import materialize
+        return materialize(self.param_meta(), key, dtype=_dtype(self.cfg))
+
+    # ------------------------------------------------------------- encoder
+    def encode(self, params, aux):
+        """Whisper-style bidirectional encoder over frame embeddings."""
+        cfg = self.cfg
+
+        def body(x, p):
+            a, _ = L.attn_apply(p["attn"], x, cfg, causal=False)
+            x = x + a
+            x = x + L.mlp_apply(p["mlp"], x, cfg)
+            return x, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), aux,
+                            params["encoder"]["layers"])
+        return L.rmsnorm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    def _aux_memory(self, params, aux):
+        """The cross-attention memory: encoder output (enc-dec) or the
+        auxiliary embeddings themselves (vision)."""
+        if aux is None:
+            return None
+        if self.cfg.n_encoder_layers:
+            return self.encode(params, aux)
+        return aux
+
+    # ------------------------------------------------------------- forward
+    def _superlayer(self, x, p, memory, with_cache: bool, aux_loss0):
+        cfg = self.cfg
+        caches = {}
+        aux_loss = aux_loss0
+        for j in range(self.period):
+            sp = p[f"sub{j}"]
+            kind = cfg.layer_kind(j)
+            if kind == "attn":
+                if cfg.attn_kind == "mla":
+                    a, kv = L.mla_apply(sp["mixer"], x, cfg)
+                    if with_cache:
+                        caches[f"sub{j}"] = {"ckv": kv[0], "kr": kv[1]}
+                else:
+                    a, kv = L.attn_apply(sp["mixer"], x, cfg, causal=True)
+                    if with_cache:
+                        caches[f"sub{j}"] = {"k": kv[0], "v": kv[1]}
+                x = x + a
+                if cfg.n_encoder_layers:
+                    xkv = L.xattn_kv(sp["xattn"], memory, cfg)
+                    x = x + L.xattn_apply(sp["xattn"], x, xkv, cfg)
+                    if with_cache:
+                        caches[f"sub{j}_x"] = {"k": xkv[0], "v": xkv[1]}
+            elif kind == "mamba":
+                a, state = L.mamba_apply(sp["mixer"], x, cfg)
+                x = x + a
+                if with_cache:
+                    caches[f"sub{j}"] = state
+            elif kind == "xattn":
+                xkv = L.xattn_kv(sp["mixer"], memory, cfg)
+                x = x + L.xattn_apply(sp["mixer"], x, xkv, cfg)
+                if with_cache:
+                    caches[f"sub{j}"] = {"k": xkv[0], "v": xkv[1]}
+            if cfg.is_moe_layer(j):
+                aux_loss = aux_loss + L.moe_aux_loss(sp["mlp"], x, cfg)
+                x = x + self._moe(sp["mlp"], x)
+            elif "mlp" in sp:
+                x = x + L.mlp_apply(sp["mlp"], x, cfg)
+        return x, caches, aux_loss
+
+    def forward(self, params, tokens, aux=None, with_cache: bool = False,
+                logits_last_only: bool = False):
+        """tokens (B, S) -> logits (B, S, V). Optionally returns the stacked
+        per-layer caches (prefill). ``logits_last_only`` skips the full
+        (B, S, V) unembedding — prefill needs only the last position."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+        memory = self._aux_memory(params, aux)
+
+        x = self._constrain(x)
+        bsp = self.boundary_sp
+        if bsp is not None:
+            x = jax.lax.with_sharding_constraint(x, bsp[0])
+
+        def body(carry, p):
+            x, aux_loss = carry
+            if bsp is not None:
+                x = jax.lax.with_sharding_constraint(x, bsp[1])
+            x, caches, aux_loss = self._superlayer(x, p, memory,
+                                                   with_cache, aux_loss)
+            if bsp is not None:
+                x = jax.lax.with_sharding_constraint(x, bsp[0])
+            return (self._constrain(x), aux_loss), caches
+
+        body_fn = jax.checkpoint(body) if not with_cache else body
+        (x, aux_loss), caches = jax.lax.scan(
+            body_fn, (x, jnp.zeros((), F32)), params["layers"])
+        if logits_last_only:
+            x = x[:, -1:]
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        unembed = (params["embed"].T if cfg.tie_embeddings
+                   else params["unembed"])
+        logits = (x @ unembed.astype(x.dtype)).astype(F32)
+        logits = _mask_pad_vocab(logits, cfg)
+        if with_cache:
+            return logits, caches, aux_loss
+        return logits, aux_loss
+
+    def loss(self, params, batch):
+        logits, aux_loss = self.forward(params, batch["tokens"],
+                                        aux=batch.get("aux"))
+        labels = batch["labels"]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+        nll = jnp.mean(logz - gold)
+        return nll + 0.01 * aux_loss, {"nll": nll, "aux_loss": aux_loss}
+
+    # ------------------------------------------------------------- serving
+    def prefill(self, params, tokens, aux=None, max_len: int | None = None):
+        """Run the full prompt, return (last-token logits, decode cache)."""
+        cfg = self.cfg
+        logits, caches, _ = self.forward(params, tokens, aux=aux,
+                                         with_cache=True,
+                                         logits_last_only=True)
+        s = tokens.shape[1]
+        max_len = max_len or s
+        caches = self._grow_caches(caches, s, max_len)
+        caches["pos"] = jnp.asarray(s, jnp.int32)
+        return logits[:, -1], caches
+
+    def _grow_caches(self, caches, s: int, max_len: int):
+        """Pad seq axis of stacked KV caches (axis 2: layers, batch, seq)."""
+        if max_len <= s:
+            return caches
+
+        def pad(x):
+            if x.ndim >= 3 and x.shape[2] == s:
+                widths = [(0, 0)] * x.ndim
+                widths[2] = (0, max_len - s)
+                return jnp.pad(x, widths)
+            return x
+
+        return jax.tree_util.tree_map(pad, caches)
+
+    def init_cache_meta(self, batch: int, max_len: int) -> dict:
+        """Abstract decode-cache structure (for dry-run input_specs)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        caches: dict = {}
+        for j in range(self.period):
+            kind = cfg.layer_kind(j)
+            r = self.repeats
+            if kind == "attn":
+                if cfg.attn_kind == "mla":
+                    m = cfg.mla
+                    caches[f"sub{j}"] = {
+                        "ckv": ParamMeta((r, batch, max_len, m.kv_lora),
+                                         ("layers", "batch", "kv_seq", None),
+                                         dtype=dt),
+                        "kr": ParamMeta((r, batch, max_len, m.d_rope),
+                                        ("layers", "batch", "kv_seq", None),
+                                        dtype=dt),
+                    }
+                else:
+                    kvdt = self.kv_cache_dtype or dt
+                    caches[f"sub{j}"] = {
+                        "k": ParamMeta(
+                            (r, batch, max_len, cfg.n_kv, cfg.d_head),
+                            ("layers", "batch", "kv_seq", "kv_heads", None),
+                            dtype=kvdt),
+                        "v": ParamMeta(
+                            (r, batch, max_len, cfg.n_kv, cfg.d_head),
+                            ("layers", "batch", "kv_seq", "kv_heads", None),
+                            dtype=kvdt),
+                    }
+                    if self.kv_cache_dtype is not None:
+                        for key in ("k_s", "v_s"):
+                            caches[f"sub{j}"][key] = ParamMeta(
+                                (r, batch, max_len, cfg.n_kv, 1),
+                                ("layers", "batch", "kv_seq", "kv_heads",
+                                 None), dtype=jnp.float32)
+                if cfg.n_encoder_layers:
+                    caches[f"sub{j}_x"] = self._xattn_cache_meta(batch)
+            elif kind == "mamba":
+                s = cfg.ssm
+                nh = s.n_heads(cfg.d_model)
+                conv_dim = s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state
+                caches[f"sub{j}"] = {
+                    "state": ParamMeta((r, batch, nh, s.d_state, s.head_dim),
+                                       ("layers", "batch", "heads",
+                                        None, None), dtype=jnp.float32),
+                    "conv": ParamMeta(
+                        (r, batch, s.conv_width - 1, conv_dim),
+                        ("layers", "batch", None, "heads_dh"), dtype=dt),
+                }
+            elif kind == "xattn":
+                caches[f"sub{j}"] = self._xattn_cache_meta(batch)
+        caches["pos"] = ParamMeta((), (), dtype=jnp.int32)
+        return caches
+
+    def _xattn_cache_meta(self, batch: int):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        return {
+            "k": ParamMeta((self.repeats, batch, cfg.aux_seq, cfg.n_kv,
+                            cfg.d_head),
+                           ("layers", "batch", None, "kv_heads", None),
+                           dtype=dt),
+            "v": ParamMeta((self.repeats, batch, cfg.aux_seq, cfg.n_kv,
+                            cfg.d_head),
+                           ("layers", "batch", None, "kv_heads", None),
+                           dtype=dt),
+        }
+
+    def decode_step(self, params, caches, tokens):
+        """tokens (B, 1) -> (logits (B, V), updated caches)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+        pos = caches["pos"]
+        layer_caches = {k: v for k, v in caches.items() if k != "pos"}
+
+        def body(x, p_and_c):
+            p, c = p_and_c
+            new_c = {}
+            for j in range(self.period):
+                sp = p[f"sub{j}"]
+                kind = cfg.layer_kind(j)
+                if kind == "attn":
+                    sub = dict(c[f"sub{j}"])
+                    sub["pos"] = pos
+                    if cfg.attn_kind == "mla":
+                        a, nc = L.mla_decode(sp["mixer"], x, sub, cfg)
+                    else:
+                        a, nc = L.attn_decode(sp["mixer"], x, sub, cfg)
+                    nc.pop("pos")
+                    new_c[f"sub{j}"] = nc
+                    x = x + a
+                    if cfg.n_encoder_layers:
+                        xc = c[f"sub{j}_x"]
+                        x = x + L.xattn_apply(sp["xattn"], x,
+                                              (xc["k"], xc["v"]), cfg)
+                        new_c[f"sub{j}_x"] = xc
+                elif kind == "mamba":
+                    a, nc = L.mamba_decode(sp["mixer"], x, c[f"sub{j}"], cfg)
+                    new_c[f"sub{j}"] = nc
+                    x = x + a
+                elif kind == "xattn":
+                    xc = c[f"sub{j}"]
+                    x = x + L.xattn_apply(sp["mixer"], x,
+                                          (xc["k"], xc["v"]), cfg)
+                    new_c[f"sub{j}"] = xc
+                if cfg.is_moe_layer(j):
+                    x = x + self._moe(sp["mlp"], x)
+                elif "mlp" in sp:
+                    x = x + L.mlp_apply(sp["mlp"], x, cfg)
+            return x, new_c
+
+        x, new_layer_caches = jax.lax.scan(
+            body, x, (params["layers"], layer_caches))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        unembed = (params["embed"].T if cfg.tie_embeddings
+                   else params["unembed"])
+        logits = _mask_pad_vocab((x[:, 0] @ unembed.astype(x.dtype))
+                                 .astype(F32), cfg)
+        new_caches: dict = dict(new_layer_caches)
+        new_caches["pos"] = pos + 1
+        return logits, new_caches

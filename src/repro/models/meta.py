@@ -1,0 +1,134 @@
+"""Parameter metadata: one source of truth for shapes, init, and sharding.
+
+Every model parameter is declared once as a :class:`ParamMeta` carrying its
+shape and *logical* axis names ("embed", "ffn", "heads", ...). The same meta
+tree then produces:
+
+* materialized parameters (`materialize`) for smoke tests / real training,
+* `jax.ShapeDtypeStruct`s (`abstractify`) for the multi-pod dry-run,
+* `PartitionSpec`s (`specs_for`) through a :class:`ShardingRules` mapping of
+  logical axes onto mesh axes (DP/TP/EP/FSDP are all rule changes, not model
+  changes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]       # logical name per dim
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float | None = None            # stddev; default fan-in
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def _std(meta: ParamMeta) -> float:
+    if meta.scale is not None:
+        return meta.scale
+    fan_in = meta.shape[0] if len(meta.shape) >= 2 else max(meta.shape[-1], 1)
+    return float(1.0 / np.sqrt(max(fan_in, 1)))
+
+
+def materialize(meta_tree, key: jax.Array, dtype=None):
+    """Instantiate real parameter arrays from a meta tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(meta_tree, is_leaf=is_meta)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, m in zip(keys, leaves):
+        dt = dtype or m.dtype
+        if m.init == "zeros":
+            out.append(jnp.zeros(m.shape, dt))
+        elif m.init == "ones":
+            out.append(jnp.ones(m.shape, dt))
+        else:
+            out.append((jax.random.normal(k, m.shape, jnp.float32)
+                        * _std(m)).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstractify(meta_tree, dtype=None):
+    """ShapeDtypeStructs for dry-run lowering (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda m: jax.ShapeDtypeStruct(m.shape, dtype or m.dtype),
+        meta_tree, is_leaf=is_meta)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+    rules: dict[str, Any]
+
+    def spec(self, meta: ParamMeta) -> P:
+        axes = []
+        used: set = set()
+        for name in meta.logical:
+            ax = self.rules.get(name) if name else None
+            # a mesh axis may appear only once per spec
+            key = tuple(ax) if isinstance(ax, (list, tuple)) else ax
+            if key is not None and key in used:
+                ax = None
+            elif key is not None:
+                used.add(key)
+            axes.append(tuple(ax) if isinstance(ax, list) else ax)
+        return P(*axes)
+
+    def divisibility_ok(self, meta: ParamMeta, mesh_shape: dict[str, int]
+                        ) -> bool:
+        for dim, name in zip(meta.shape, meta.logical):
+            ax = self.rules.get(name) if name else None
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, (list, tuple)) else (ax,)
+            k = int(np.prod([mesh_shape[a] for a in axes]))
+            if dim % k != 0:
+                return False
+        return True
+
+
+def specs_for(meta_tree, rules: ShardingRules, mesh=None):
+    """PartitionSpec tree; falls back to replication when a dim does not
+    divide the mesh axis (e.g. 2 KV heads on a 16-way model axis)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else None
+
+    def one(m: ParamMeta) -> P:
+        if mesh_shape is None or rules.divisibility_ok(m, mesh_shape):
+            return rules.spec(m)
+        # drop offending axes only
+        axes = []
+        for dim, name in zip(m.shape, m.logical):
+            ax = rules.rules.get(name) if name else None
+            if ax is not None:
+                axs = ax if isinstance(ax, (list, tuple)) else (ax,)
+                k = int(np.prod([mesh_shape[a] for a in axs]))
+                if dim % k != 0:
+                    ax = None
+            axes.append(tuple(ax) if isinstance(ax, list) else ax)
+        # de-duplicate mesh axes used twice after fallbacks
+        seen: set = set()
+        final = []
+        for ax in axes:
+            key = ax
+            if key is not None and key in seen:
+                final.append(None)
+            else:
+                if key is not None:
+                    seen.add(key)
+                final.append(ax)
+        return P(*final)
+
+    return jax.tree_util.tree_map(one, meta_tree, is_leaf=is_meta)

@@ -1,0 +1,138 @@
+"""AdamW in pure JAX pytrees, with optional int8-quantized moments.
+
+The quantized variant stores both Adam moments as int8 with one f32 scale
+per leading row (per-channel absmax), cutting optimizer-state memory 4x —
+what lets jamba-1.5-large-398B train on 16 GiB chips (see sharding.rules).
+Dequantize-update-requantize happens inside the jitted train step, so the
+f32 moments never exist in HBM at rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    quantize_moments: bool = False
+
+    def schedule(self, step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(self.decay_steps - self.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.lr * warm * (0.1 + 0.9 * cos)
+
+
+# ---------------------------------------------------------------------------
+# int8 moment quantization
+# ---------------------------------------------------------------------------
+def _quantize(x):
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init(params, cfg: AdamWConfig):
+    def zeros_like_f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
+    if cfg.quantize_moments:
+        def qz(p):
+            q = jnp.zeros(p.shape, jnp.int8)
+            scale = jnp.zeros(p.shape[:-1] + (1,), jnp.float32) \
+                if p.ndim else jnp.zeros((1,), jnp.float32)
+            return {"q": q, "scale": scale}
+        state = {"m": jax.tree_util.tree_map(qz, params),
+                 "v": jax.tree_util.tree_map(qz, params)}
+    else:
+        state = {"m": jax.tree_util.tree_map(zeros_like_f32, params),
+                 "v": jax.tree_util.tree_map(zeros_like_f32, params)}
+    state["step"] = jnp.zeros((), jnp.int32)
+    return state
+
+
+def _global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def update(grads, state, params, cfg: AdamWConfig):
+    step = state["step"] + 1
+    lr = cfg.schedule(step)
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantize_moments:
+            m_f = _dequantize(m["q"], m["scale"])
+            v_f = _dequantize(v["q"], v["scale"])
+        else:
+            m_f, v_f = m, v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        mhat = m_f / bc1
+        vhat = v_f / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        new_p = (p.astype(jnp.float32)
+                 - lr * (delta + cfg.weight_decay * p.astype(jnp.float32)))
+        if cfg.quantize_moments:
+            mq, ms = _quantize(m_f)
+            vq, vs = _quantize(v_f)
+            return new_p.astype(p.dtype), {"q": mq, "scale": ms}, \
+                {"q": vq, "scale": vs}
+        return new_p.astype(p.dtype), m_f, v_f
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+def state_meta(param_meta, cfg: AdamWConfig):
+    """ParamMeta tree for the optimizer state (for dry-run specs)."""
+    from repro.models.meta import ParamMeta, is_meta
+
+    def mom(m: ParamMeta):
+        if cfg.quantize_moments:
+            return {"q": ParamMeta(m.shape, m.logical, init="zeros",
+                                   dtype=jnp.int8),
+                    "scale": ParamMeta(m.shape[:-1] + (1,),
+                                       m.logical[:-1] + (None,),
+                                       init="zeros", dtype=jnp.float32)}
+        return ParamMeta(m.shape, m.logical, init="zeros",
+                         dtype=jnp.float32)
+
+    m_tree = jax.tree_util.tree_map(mom, param_meta, is_leaf=is_meta)
+    return {"m": m_tree, "v": m_tree,
+            "step": ParamMeta((), (), init="zeros", dtype=jnp.int32)}

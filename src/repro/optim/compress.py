@@ -1,0 +1,62 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-row absmax quantization of gradients before the cross-replica
+reduction, with a persistent error-feedback buffer so the quantization error
+is re-injected the next step (Seide et al.-style EF-SGD generalization).
+On a real pod this halves/quarters the reduce-scatter payload on the slow
+cross-pod links; here we implement the transform + its invariants and expose
+a shard_map-based reduction for the pod axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(x):
+    """-> (int8 values, f32 row scales)."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-20)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, error_buf):
+    """Quantize grads + accumulated error; return (q_tree, new_error_buf)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, s = compress(g)
+        deq = decompress(q, s)
+        return (q, s), g - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error_buf)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    q_tree = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return q_tree, new_e
+
+
+def decompress_tree(q_tree):
+    return jax.tree_util.tree_map(
+        lambda qs: decompress(*qs), q_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def init_error_buf(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def crosspod_compressed_psum(grads, axis_name: str):
+    """Inside shard_map: quantize, all-reduce the int8 payload as f32 sums
+    of dequantized values (collective payload stays int8 + tiny scales in a
+    real implementation; XLA models the semantics here)."""
+    def one(g):
+        q, s = compress(g.astype(jnp.float32))
+        return jax.lax.psum(decompress(q, s), axis_name)
+    return jax.tree_util.tree_map(one, grads)

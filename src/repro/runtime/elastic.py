@@ -1,0 +1,43 @@
+"""Elastic rescaling: resume a run on a different mesh.
+
+The combination of (a) checkpoint restore with target shardings and (b) the
+stateless data pipeline makes rescaling a pure control-plane operation:
+
+1. build the new mesh (fewer/more pods or a different (data, model) split),
+2. recompute PartitionSpecs from the same logical rules on the new mesh,
+3. restore the latest checkpoint with the new shardings,
+4. continue from the stored step (the data pipeline is a function of step).
+
+`reshard_plan` verifies the new mesh divides every parameter the rules
+shard — exactly the check a cluster controller runs before committing to a
+rescale."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.models.meta import ShardingRules, is_meta, specs_for
+
+
+def reshard_plan(meta_tree, rules: ShardingRules, new_mesh):
+    """Partition specs for the new mesh + a report of axes that had to fall
+    back to replication (divisibility)."""
+    specs = specs_for(meta_tree, rules, mesh=new_mesh)
+    fallbacks = []
+
+    def check(path, m, spec):
+        ideal = rules.spec(m)
+        if tuple(ideal) != tuple(spec):
+            fallbacks.append((jax.tree_util.keystr(path), tuple(ideal),
+                              tuple(spec)))
+
+    jax.tree_util.tree_map_with_path(check, meta_tree, specs,
+                                     is_leaf=lambda x: is_meta(x))
+    return specs, fallbacks
+
+
+def shardings_from_specs(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: hasattr(x, "_normalized_spec") or
+        type(x).__name__ == "PartitionSpec")

@@ -1,0 +1,63 @@
+"""Fault tolerance: failure injection, retry-with-restore, stragglers.
+
+At 1000+ node scale the mean time between node failures is minutes-to-hours;
+the training driver must treat "a step crashed" as a normal event. The
+pattern implemented here (and exercised in tests/examples):
+
+  while step < total:
+      try:  step_fn()
+      except Fault:  restore_from_checkpoint(); continue
+
+`FaultInjector` simulates hardware faults deterministically at configured
+steps (a single process cannot lose a real TPU). `StragglerMonitor` tracks
+per-step wall times and flags slow outliers — on a real pod this feeds the
+controller that re-shards around slow hosts; here it drives test assertions
+and logging.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+class SimulatedFault(RuntimeError):
+    """Stands in for a node loss / ICI timeout / preemption."""
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    fail_at_steps: tuple[int, ...] = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedFault(f"injected fault at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold: float = 2.0        # x median
+    window: int = 50
+    times: list = dataclasses.field(default_factory=list)
+    flagged: list = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, seconds: float):
+        self.times.append(seconds)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        med = sorted(self.times)[len(self.times) // 2]
+        if len(self.times) >= 5 and seconds > self.threshold * med:
+            self.flagged.append((step, seconds, med))
+            return True
+        return False
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+        return False

@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS / device-count manipulation here —
+smoke tests and benches must see the real (single) device; only
+launch/dryrun.py sets the 512-device placeholder flag, and the dry-run
+integration test uses a subprocess."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_fleet():
+    from repro.core import device_sim, params as P
+    specs = [P.ModuleSpec(v, i, 2015) for v in range(3) for i in range(3)]
+    return device_sim.make_fleet(specs)
+
+
+@pytest.fixture(scope="session")
+def quick_vampire(tiny_fleet):
+    """A reduced-campaign VAMPIRE fit shared across the suite."""
+    from repro.core.vampire import Vampire
+    return Vampire.fit(tiny_fleet, probe_modules=2, probe_reps=64, n_rows=8)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,82 @@
+"""Dry-run integration: run the real pipeline in a subprocess with 16
+placeholder devices (the pytest process must keep seeing 1 device), on
+smoke configs, and check the artifact invariants."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""\
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import json, sys
+    import jax
+    from repro.launch import steps
+    from repro.launch.mesh import make_local_mesh, make_production_mesh
+
+    out = {}
+    mesh = make_local_mesh(data=4, model=4)
+    for arch, shape in [("qwen2.5-3b", "train_4k"),
+                        ("qwen3-moe-30b-a3b", "decode_32k"),
+                        ("mamba2-780m", "long_500k")]:
+        res = steps.dryrun_cell(arch, shape, mesh, multi_pod=False,
+                                smoke=True, batch_override=8)
+        res.pop("hlo_text", None)
+        out[f"{arch}__{shape}"] = res
+    # multi-pod smoke mesh
+    mesh = make_local_mesh(data=2, model=4, pod=2)
+    res = steps.dryrun_cell("qwen2.5-3b", "train_4k", mesh, multi_pod=True,
+                            smoke=True, batch_override=8)
+    out["qwen2.5-3b__train_4k__mp"] = res
+    print(json.dumps(out))
+    """)
+
+
+@pytest.fixture(scope="module")
+def dryrun_results(tmp_path_factory):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_all_cells_compile(dryrun_results):
+    assert len(dryrun_results) == 4
+
+
+def test_artifact_invariants(dryrun_results):
+    for name, res in dryrun_results.items():
+        assert res["hlo_flops_per_device"] > 0, name
+        assert res["hlo_traffic_bytes_per_device"] > 0, name
+        assert res["missing_trip_counts"] == 0, name
+        assert res["memory"]["peak_bytes_est"] > 0, name
+
+
+def test_sharded_cells_have_collectives(dryrun_results):
+    res = dryrun_results["qwen2.5-3b__train_4k"]
+    assert res["collective_total_bytes_per_device"] > 0
+    assert any(k in res["collective_bytes_per_device"]
+               for k in ("all-reduce", "all-gather", "reduce-scatter"))
+
+
+def test_multipod_shards_pod_axis(dryrun_results):
+    sp = dryrun_results["qwen2.5-3b__train_4k"]
+    mp = dryrun_results["qwen2.5-3b__train_4k__mp"]
+    assert mp["n_devices"] == 16 and sp["n_devices"] == 16
+    assert mp["multi_pod"] and not sp["multi_pod"]
+    # cross-pod data parallelism must add reduction traffic
+    assert mp["collective_total_bytes_per_device"] > 0
+
+
+def test_roofline_terms_computable(dryrun_results):
+    from repro.launch import roofline
+    for res in dryrun_results.values():
+        r = roofline.from_artifact(res)
+        assert r.compute_s > 0 and r.memory_s > 0
+        assert r.dominant in ("compute", "memory", "collective")

@@ -1,0 +1,109 @@
+"""Unit + property tests for the shared energy integrator."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import device_sim, dram, idd_loops
+from repro.core.energy_model import (trace_energy_scan,
+                                     trace_energy_vectorized)
+
+PP = device_sim.true_vendor_params(0)
+
+
+def _random_trace(rng, n=64):
+    cmds, banks, rows, cols, datas, dts = [], [], [], [], [], []
+    open_banks = set()
+    for _ in range(n):
+        r = rng.random()
+        if r < 0.2 or not open_banks:
+            b = int(rng.integers(0, 8))
+            cmds.append(dram.ACT); open_banks.add(b)
+        elif r < 0.7:
+            b = int(rng.choice(sorted(open_banks)))
+            cmds.append(dram.RD if rng.random() < 0.6 else dram.WR)
+        elif r < 0.8:
+            b = int(rng.choice(sorted(open_banks)))
+            cmds.append(dram.PRE); open_banks.discard(b)
+        elif r < 0.9:
+            b = 0
+            cmds.append(dram.NOP)
+        else:
+            b = 0
+            open_banks.clear()
+            cmds.append(dram.PREA)
+        banks.append(b)
+        rows.append(int(rng.integers(0, 1 << 15)))
+        cols.append(int(rng.integers(0, 128)))
+        datas.append(rng.integers(0, 2 ** 32, size=16, dtype=np.uint32))
+        dts.append(int(rng.integers(1, 30)))
+    return dram.make_trace(cmds, banks, rows, cols, np.stack(datas), dts)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_scan_matches_vectorized_random_traces(seed):
+    rng = np.random.default_rng(seed)
+    tr = _random_trace(rng, n=96)
+    a = trace_energy_scan(tr, PP)
+    b = trace_energy_vectorized(tr, PP)
+    np.testing.assert_allclose(float(a.avg_current_ma),
+                               float(b.avg_current_ma), rtol=1e-5)
+    np.testing.assert_allclose(float(a.energy_pj), float(b.energy_pj),
+                               rtol=1e-5)
+
+
+def test_scan_matches_vectorized_on_idd_loops():
+    for name, fn in idd_loops.IDD_LOOPS.items():
+        tr = fn()
+        a = trace_energy_scan(tr, PP)
+        b = trace_energy_vectorized(tr, PP)
+        np.testing.assert_allclose(float(a.avg_current_ma),
+                                   float(b.avg_current_ma), rtol=5e-5,
+                                   err_msg=name)
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(n_ones=st.integers(0, 512))
+def test_read_current_increases_with_ones(n_ones):
+    tr0, s0 = idd_loops.ones_sweep_point(0, op=dram.RD, reps=16)
+    tr1, s1 = idd_loops.ones_sweep_point(n_ones, op=dram.RD, reps=16)
+    i0 = float(trace_energy_vectorized(tr0, PP).avg_current_ma)
+    i1 = float(trace_energy_vectorized(tr1, PP).avg_current_ma)
+    assert i1 >= i0 - 1e-3  # monotone non-decreasing in ones (reads)
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(n_ones=st.integers(0, 512))
+def test_write_current_decreases_with_ones(n_ones):
+    tr0, _ = idd_loops.ones_sweep_point(0, op=dram.WR, reps=16)
+    tr1, _ = idd_loops.ones_sweep_point(n_ones, op=dram.WR, reps=16)
+    i0 = float(trace_energy_vectorized(tr0, PP).avg_current_ma)
+    i1 = float(trace_energy_vectorized(tr1, PP).avg_current_ma)
+    assert i1 <= i0 + 1e-3
+
+
+def test_power_down_reduces_idle_current():
+    idle = float(trace_energy_vectorized(idd_loops.idd2n(), PP)
+                 .avg_current_ma)
+    pd = float(trace_energy_vectorized(idd_loops.idd2p1(), PP)
+               .avg_current_ma)
+    assert pd < idle
+
+
+def test_energy_scales_with_trace_repetition():
+    tr = idd_loops.idd0(reps=8)
+    tr2 = dram.tile_trace(tr, 2)
+    e1 = float(trace_energy_vectorized(tr, PP).energy_pj)
+    e2 = float(trace_energy_vectorized(tr2, PP).energy_pj)
+    np.testing.assert_allclose(e2, 2 * e1, rtol=1e-4)
+
+
+def test_bank_structural_factors_visible_in_read_current():
+    ppc = device_sim.true_vendor_params(2)  # vendor C
+    tr0, s = idd_loops.bank_read_probe(0)
+    tr5, _ = idd_loops.bank_read_probe(5)
+    i0 = float(trace_energy_vectorized(tr0, ppc).avg_current_ma)
+    i5 = float(trace_energy_vectorized(tr5, ppc).avg_current_ma)
+    expected = float(ppc.bank_read_factor[5])
+    assert abs(i5 / i0 - expected) < 0.05

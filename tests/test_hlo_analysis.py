@@ -1,0 +1,79 @@
+"""Unit tests for the trip-count-aware HLO analyzer."""
+import textwrap
+
+from repro.launch.hlo_analysis import analyze_hlo, shape_bytes
+
+SYNTH = textwrap.dedent("""\
+    HloModule test, is_scheduled=true
+
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+      %w = f32[8,8]{1,0} constant({...})
+      %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum
+      %t = (s32[], f32[8,8]{1,0}) tuple(%i, %ar)
+      ROOT %r = (s32[], f32[8,8]{1,0}) copy(%t)
+    }
+
+    %cond (p2: (s32[], f32[8,8])) -> pred[] {
+      %p2 = (s32[], f32[8,8]{1,0}) parameter(0)
+      ROOT %lt = pred[] constant(true)
+    }
+
+    %sum (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (x0: f32[8,8]) -> f32[8,8] {
+      %x0 = f32[8,8]{1,0} parameter(0)
+      %c = s32[] constant(0)
+      %tup = (s32[], f32[8,8]{1,0}) tuple(%c, %x0)
+      %loop = (s32[], f32[8,8]{1,0}) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+      %ag = f32[16,8]{1,0} all-gather(%x0), dimensions={0}
+      ROOT %out = f32[8,8]{1,0} get-tuple-element(%loop), index=1
+    }
+    """)
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,8]{1,0}") == 256
+    assert shape_bytes("bf16[4,2]") == 16
+    assert shape_bytes("(f32[2], s8[4])") == 12
+    assert shape_bytes("f32[]") == 4
+    assert shape_bytes("pred[3]") == 3
+
+
+def test_trip_count_multiplication():
+    rep = analyze_hlo(SYNTH)
+    # dot: 2 * 64 elems * 8 contraction = 1024 flops, x5 trips
+    assert rep.flops == 5 * 2 * 64 * 8
+    assert rep.missing_trip_counts == 0
+
+
+def test_collective_accounting():
+    rep = analyze_hlo(SYNTH)
+    # all-reduce inside loop: 256 B x 5; all-gather outside: 512 B x 1
+    assert rep.collective_bytes["all-reduce"] == 5 * 256
+    assert rep.collective_bytes["all-gather"] == 512
+    assert rep.total_collective_bytes == 5 * 256 + 512
+    assert rep.n_collectives == {"all-reduce": 1, "all-gather": 1}
+
+
+def test_missing_trip_count_flagged():
+    txt = SYNTH.replace(', backend_config={"known_trip_count":{"n":"5"}}',
+                        "")
+    rep = analyze_hlo(txt)
+    assert rep.missing_trip_counts == 1
+    assert rep.flops == 1024  # counted once
+
+
+def test_traffic_counts_dot_and_collectives():
+    rep = analyze_hlo(SYNTH)
+    # per body iteration: dot (256*3) + all-reduce (256*2, capped operand)
+    per_iter = 256 * 3 + 256 * 2
+    # entry: all-gather result 512 + operand min(256, 512)
+    assert rep.traffic_bytes == 5 * per_iter + (512 + 256)

@@ -1,0 +1,127 @@
+"""Per-kernel allclose sweeps against the pure-jnp/numpy oracles
+(interpret=True on CPU), across shapes and dtypes."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bdi import ops as bdi_ops, ref as bdi_ref
+from repro.kernels.byte_lut import ops as lut_ops, ref as lut_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.popcount import ops as pc_ops, ref as pc_ref
+from repro.kernels.toggle import ops as tg_ops, ref as tg_ref
+
+
+@pytest.mark.parametrize("n", [1, 7, 256, 1023, 1024, 4096])
+def test_popcount_shapes(n, rng):
+    x = jnp.asarray(rng.integers(0, 2 ** 32, size=(n, 16), dtype=np.uint32))
+    np.testing.assert_array_equal(pc_ops.line_ones(x), pc_ref.line_ones(x))
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(st.lists(st.integers(0, 2 ** 32 - 1), min_size=16,
+                           max_size=16))
+def test_popcount_matches_python_bitcount(words):
+    line = jnp.asarray(np.asarray(words, dtype=np.uint32)[None])
+    expected = sum(int(w).bit_count() for w in words)
+    assert int(pc_ops.line_ones(line)[0]) == expected
+
+
+@pytest.mark.parametrize("n", [2, 63, 512, 2048])
+def test_toggle_shapes(n, rng):
+    cur = jnp.asarray(rng.integers(0, 2 ** 32, size=(n, 16), dtype=np.uint32))
+    prev = jnp.asarray(rng.integers(0, 2 ** 32, size=(n, 16),
+                                    dtype=np.uint32))
+    np.testing.assert_array_equal(tg_ops.line_toggles(cur, prev),
+                                  tg_ref.line_toggles(cur, prev))
+    np.testing.assert_array_equal(tg_ops.line_toggles_seq(cur),
+                                  tg_ref.line_toggles_seq(cur))
+
+
+@pytest.mark.parametrize("n", [1, 33, 512])
+def test_byte_lut_shapes(n, rng):
+    x = jnp.asarray(rng.integers(0, 2 ** 32, size=(n, 16), dtype=np.uint32))
+    lut = jnp.asarray(rng.permutation(256).astype(np.int32))
+    np.testing.assert_array_equal(lut_ops.apply_lut_lines(x, lut),
+                                  lut_ref.apply_lut_lines(x, lut))
+
+
+def _bdi_corpus(rng, n=64):
+    return np.concatenate([
+        rng.integers(0, 2 ** 32, size=(n, 16), dtype=np.uint32),
+        np.zeros((8, 16), dtype=np.uint32),
+        np.full((8, 16), 0xDEADBEEF, dtype=np.uint32),
+        (rng.integers(0, 5, size=(n, 16)).astype(np.uint32) + 0x7FFFFFF0),
+        np.repeat(rng.integers(0, 2 ** 16, size=(8, 1)).astype(np.uint32)
+                  * 0x00010001, 16, axis=1),
+    ])
+
+
+def test_bdi_sizes_match_offline_encoder(rng):
+    lines = _bdi_corpus(rng)
+    sizes_k, _ = bdi_ops.bdi_sizes(jnp.asarray(lines))
+    sizes_ref = bdi_ref.bdi_sizes(lines)
+    np.testing.assert_array_equal(np.asarray(sizes_k), sizes_ref)
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(base=st.integers(0, 2 ** 31), delta=st.integers(-100, 100))
+def test_bdi_detects_small_delta_lines(base, delta):
+    vals = np.asarray([(base + delta * i) & 0xFFFFFFFFFFFFFFFF
+                       for i in range(8)], dtype=np.uint64)
+    by = vals.view(np.uint8).reshape(1, 64)
+    line = bdi_ref.bytes_from_lines(
+        np.ascontiguousarray(by).view(np.uint32).reshape(1, 16))
+    from repro.kernels.bdi.bdi import bdi_sizes_pallas
+    sizes, _ = bdi_sizes_pallas(jnp.asarray(line))
+    assert int(sizes[0]) <= 24 if delta != 0 else int(sizes[0]) <= 8
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,skv,h,kh,d", [
+    (256, 256, 4, 2, 32), (512, 512, 2, 2, 64), (256, 512, 8, 2, 16)])
+def test_flash_attention_sweep(dtype, sq, skv, h, kh, d, rng):
+    q = jnp.asarray(rng.standard_normal((h, sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((kh, skv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((kh, skv, d)), dtype)
+    for causal in (True, False):
+        if causal and sq != skv:
+            continue
+        out = fa_ops.flash_attention(q, k, v, causal=causal,
+                                     block_q=128, block_k=128)
+        ref = fa_ref.attention_ref(q, k, v, causal=causal)
+        atol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), atol=atol)
+
+
+def test_vampire_energy_kernel_matches_vectorized():
+    from repro.core import device_sim, idd_loops
+    from repro.core.energy_model import trace_energy_vectorized
+    from repro.kernels.vampire_energy.ops import trace_energy_kernel
+    pp = device_sim.true_vendor_params(1)._replace(
+        ones_quad=jnp.zeros(()))
+    for loop in (idd_loops.idd4r(), idd_loops.idd4w(), idd_loops.idd7()):
+        a = trace_energy_vectorized(loop, pp)
+        b = trace_energy_kernel(loop, pp)
+        np.testing.assert_allclose(float(a.avg_current_ma),
+                                   float(b.avg_current_ma), rtol=1e-4)
+
+
+def test_blockwise_attention_matches_flash_ref(rng):
+    """The models' pure-jnp blockwise attention == the kernel oracle."""
+    from repro.models.layers import blockwise_attention
+    b, s, h, kh, d = 2, 256, 4, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kh, d)), jnp.float32)
+    out = blockwise_attention(q, k, v, causal=True, block=64)
+    # oracle over (b*h) layout
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kh, s, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kh, s, d)
+    ref = fa_ref.attention_ref(qr, kr, vr, causal=True)
+    ref = ref.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)

@@ -1,0 +1,176 @@
+"""Optimizer, data pipeline, checkpointing, fault tolerance, elasticity."""
+import os
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticDataset
+from repro.optim import adamw, compress
+from repro.runtime.fault import FaultInjector, SimulatedFault, StragglerMonitor
+
+
+# ------------------------------------------------------------------- adamw
+def test_adamw_optimizes_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            decay_steps=200)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw.init(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.update(grads, state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.15
+
+
+def test_quantized_moments_track_exact():
+    cfg_q = adamw.AdamWConfig(lr=0.05, weight_decay=0.0,
+                              quantize_moments=True, warmup_steps=1,
+                              decay_steps=100)
+    cfg_f = adamw.AdamWConfig(lr=0.05, weight_decay=0.0,
+                              quantize_moments=False, warmup_steps=1,
+                              decay_steps=100)
+    p_q = {"w": jnp.linspace(-1, 1, 64).reshape(8, 8)}
+    p_f = jax.tree_util.tree_map(jnp.copy, p_q)
+    s_q = adamw.init(p_q, cfg_q)
+    s_f = adamw.init(p_f, cfg_f)
+    key = jax.random.key(0)
+    for i in range(30):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (8, 8))}
+        p_q, s_q, _ = adamw.update(g, s_q, p_q, cfg_q)
+        p_f, s_f, _ = adamw.update(g, s_f, p_f, cfg_f)
+    err = float(jnp.max(jnp.abs(p_q["w"] - p_f["w"])))
+    assert err < 0.08, err
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(st.integers(0, 2 ** 31 - 1))
+def test_grad_compression_error_feedback_bounded(seed):
+    """EF invariant: residual error stays bounded by one quantization step."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    err = jnp.zeros_like(g)
+    for _ in range(5):
+        (q, s), err = compress.ef_compress_tree(g, err)
+    step = float(jnp.max(jnp.abs(g + 0 * err))) / 127.0
+    assert float(jnp.max(jnp.abs(err))) <= 2.0 * step + 1e-6
+
+
+def test_compress_roundtrip_small_error(rng):
+    x = jnp.asarray(rng.standard_normal((16, 256)), jnp.float32)
+    q, s = compress.compress(x)
+    err = jnp.abs(compress.decompress(q, s) - x)
+    assert float(jnp.max(err)) <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+# -------------------------------------------------------------------- data
+def test_data_deterministic_and_shardable():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8, seed=5)
+    ds = SyntheticDataset(cfg)
+    a = ds.global_batch(3)
+    b = ds.global_batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.global_batch(4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].shape == (8, 32)
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+# -------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones(4, jnp.bfloat16)}}
+    for step in (1, 2, 3, 4):
+        mgr.save(step, tree, extra={"loss": float(step)})
+    assert mgr.all_steps() == [3, 4]
+    out = mgr.restore(4, jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["nested"]["b"].dtype == jnp.bfloat16
+    assert mgr.restore_manifest(4)["extra"]["loss"] == 4.0
+
+
+def test_checkpoint_atomic_no_partial_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, {"x": jnp.zeros(3)})
+    leftovers = [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+    assert not leftovers
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(7, {"x": jnp.arange(10)})
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_checkpoint_reshard_on_restore(tmp_path):
+    """Elastic path: restore with different target shardings (here: single
+    device, different layout trees) still reproduces values."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(data=1, model=1)
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    mgr.save(1, tree)
+    shard = {"w": NamedSharding(mesh, P("data", "model"))}
+    out = mgr.restore(1, {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)},
+                      shardings=shard)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+
+
+# ------------------------------------------------------------------- fault
+def test_fault_injector_fires_once():
+    inj = FaultInjector(fail_at_steps=(3,))
+    inj.check(2)
+    with pytest.raises(SimulatedFault):
+        inj.check(3)
+    inj.check(3)  # second pass: already fired
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(threshold=2.0)
+    for step in range(10):
+        mon.record(step, 0.1)
+    assert mon.record(10, 0.5)
+    assert mon.flagged and mon.flagged[0][0] == 10
+
+
+def test_train_driver_recovers_from_fault(tmp_path):
+    """End-to-end: training hits an injected fault, restores from the
+    checkpoint, and completes all steps."""
+    from repro.launch.train import TrainJob, run
+    res = run(TrainJob(arch="qwen2.5-3b", smoke=True, steps=12, batch=2,
+                       seq=32, ckpt_dir=str(tmp_path), ckpt_every=4,
+                       fail_at=(7,), power_every=0))
+    assert res["recoveries"] == 1
+    assert res["steps_run"] >= 12
+    assert np.isfinite(res["final_loss"])
+
+
+def test_train_loss_decreases():
+    from repro.launch.train import TrainJob, run
+    res = run(TrainJob(arch="qwen2.5-3b", smoke=True, steps=30, batch=4,
+                       seq=64, power_every=0))
+    first = np.mean(res["losses"][:5])
+    last = np.mean(res["losses"][-5:])
+    assert last < first
+
+
+# ---------------------------------------------------------------- elastic
+def test_reshard_plan_reports_fallbacks():
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.meta import ParamMeta
+    from repro.runtime.elastic import reshard_plan
+    from repro.sharding.rules import make_rules
+    from repro.configs import registry as R
+    cfg = R.get_config("qwen2.5-3b", smoke=True)
+    mesh = make_local_mesh(data=1, model=1)
+    meta = {"w": ParamMeta((6, 8), ("embed", "ffn"))}
+    specs, fallbacks = reshard_plan(meta, make_rules(cfg), mesh)
+    assert "w" in str(jax.tree_util.tree_structure(specs)) or specs

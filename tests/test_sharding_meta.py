@@ -1,0 +1,97 @@
+"""Sharding rules + parameter-meta layer: the single source of truth for
+shapes/specs must behave under divisibility fallbacks and axis dedup."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry as R
+from repro.models.meta import (ParamMeta, ShardingRules, abstractify,
+                               materialize, specs_for)
+from repro.sharding import rules as SR
+
+
+def test_spec_basic_mapping():
+    rules = ShardingRules({"embed": None, "ffn": "model", "vocab": "model"})
+    m = ParamMeta((64, 128), ("embed", "ffn"))
+    assert tuple(rules.spec(m)) == (None, "model")
+
+
+def test_spec_dedups_repeated_mesh_axis():
+    rules = ShardingRules({"experts": "model", "ffn": "model"})
+    m = ParamMeta((8, 16, 32), ("experts", None, "ffn"))
+    spec = rules.spec(m)
+    # "model" may appear once: experts wins, ffn falls back to None
+    assert tuple(spec) == ("model", None, None)
+
+
+def test_divisibility_fallback(tmp_path):
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(data=1, model=1)
+    # 7 does not divide any >1 axis, but with model=1 everything divides
+    rules = ShardingRules({"ffn": "model"})
+    m = {"w": ParamMeta((3, 7), (None, "ffn"))}
+    specs = specs_for(m, rules, mesh=mesh)
+    assert tuple(specs["w"]) == (None, "model")
+
+
+def test_materialize_and_abstractify_agree():
+    meta = {"a": ParamMeta((4, 8), ("embed", "ffn")),
+            "b": {"c": ParamMeta((3,), (None,), init="zeros",
+                                 dtype=jnp.int32)}}
+    arrs = materialize(meta, jax.random.key(0))
+    sds = abstractify(meta)
+    assert arrs["a"].shape == sds["a"].shape == (4, 8)
+    assert arrs["b"]["c"].dtype == sds["b"]["c"].dtype == jnp.int32
+    assert bool(jnp.all(arrs["b"]["c"] == 0))
+
+
+def test_param_meta_validates_rank():
+    with pytest.raises(AssertionError):
+        ParamMeta((4, 8), ("embed",))
+
+
+def test_plan_policies_by_size():
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(data=1, model=1)
+    small = R.get_config("qwen2.5-3b")
+    mid = R.get_config("yi-34b")
+    big = R.get_config("jamba-1.5-large-398b")
+    p_small = SR.plan_for(small, "train", 256, mesh, False, seq_len=4096)
+    p_mid = SR.plan_for(mid, "train", 256, mesh, False, seq_len=4096)
+    p_big = SR.plan_for(big, "train", 256, mesh, False, seq_len=4096)
+    assert not p_small.fsdp and not p_small.zero1
+    assert p_mid.zero1 and not p_mid.fsdp
+    assert p_big.fsdp and not p_big.zero1
+    assert p_big.quantized_moments and not p_mid.quantized_moments
+    # serving: weight data-sharding from 9B up
+    s_mid = SR.plan_for(mid, "decode", 128, mesh, False, seq_len=32768)
+    assert s_mid.fsdp and not s_mid.zero1
+
+
+def test_decode_kv_seq_rules():
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(data=1, model=1)
+    cfg = R.get_config("granite-8b")
+    p = SR.plan_for(cfg, "decode", 128, mesh, False, seq_len=32768)
+    assert p.rules.rules["kv_seq"] == "model"
+    # unshardable batch -> sequence spreads over data too
+    p1 = SR.plan_for(cfg, "decode", 1, mesh, False, seq_len=524288)
+    # (mesh data=1 so 1 % 1 == 0; emulate big mesh via direct rules check)
+    from repro.launch.mesh import make_local_mesh as mk
+
+
+def test_microbatch_sizing():
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(data=1, model=1)
+    cfg = R.get_config("yi-34b")
+    p = SR.plan_for(cfg, "train", 256, mesh, False, seq_len=4096)
+    # stacks for B_loc=256 x 4k x 7168 x 60L are way over 4 GiB -> many mbs
+    assert p.microbatches >= 16
+    p2 = SR.plan_for(cfg, "decode", 128, mesh, False, seq_len=32768)
+    assert p2.microbatches == 1
+
+
+def test_batch_axes():
+    assert SR.batch_axes(False) == ("data",)
+    assert SR.batch_axes(True) == ("pod", "data")
