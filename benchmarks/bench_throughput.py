@@ -1,6 +1,7 @@
 """VAMPIRE evaluation throughput (ours): commands/second of the scan
 oracle vs the vectorized path vs the Pallas-fused path on a large
-application trace. Fleet-scale use means 1e9+ command traces; the paper's
+application trace, plus campaign fit time (batched fleet engine vs the
+serial oracle). Fleet-scale use means 1e9+ command traces; the paper's
 own tooling is a serial C++ program."""
 from __future__ import annotations
 
@@ -13,6 +14,40 @@ from repro.core import traces
 from repro.core.energy_model import (trace_energy_scan,
                                      trace_energy_vectorized)
 from repro.kernels.vampire_energy.ops import trace_energy_kernel
+
+
+def _bench_campaign_fit() -> list[str]:
+    """Reduced-fleet campaign (the tests' configuration) fitted through both
+    engines, plus the 50-module fleet through the batched engine."""
+    from benchmarks.common import full_fleet
+    from repro.core import device_sim
+    from repro.core import params as P
+    from repro.core.vampire import Vampire
+
+    reduced = device_sim.make_fleet(
+        [P.ModuleSpec(v, i, 2015) for v in range(3) for i in range(3)])
+    kw = dict(probe_modules=2, probe_reps=64, n_rows=8)
+    out = []
+    t0 = time.perf_counter()
+    Vampire.fit(reduced, engine="batched", **kw)  # cold: plan + XLA compile
+    dt_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    Vampire.fit(reduced, engine="batched", **kw)
+    dt_b = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    Vampire.fit(reduced, engine="serial", **kw)
+    dt_s = time.perf_counter() - t0
+    out.append(row("campaign.fit_reduced_serial", dt_s * 1e6, "oracle"))
+    out.append(row("campaign.fit_reduced_batched", dt_b * 1e6,
+                   f"speedup_vs_serial={dt_s/dt_b:.1f}x;"
+                   f"cold_s={dt_cold:.1f}"))
+    t0 = time.perf_counter()
+    Vampire.fit(full_fleet(), probe_modules=5, probe_reps=128, n_rows=16,
+                engine="batched")
+    dt_f = time.perf_counter() - t0
+    out.append(row("campaign.fit_fleet50_batched", dt_f * 1e6,
+                   "modules=50;probe_reps=128"))
+    return out
 
 
 def _bench(fn, tr, pp, reps=3):
@@ -44,4 +79,5 @@ def run() -> list[str]:
     out.append(row("throughput.pallas_fused", dt_ker * 1e6,
                    f"cmds_per_s={n/dt_ker:.3e};speedup_vs_scan="
                    f"{dt_scan/dt_ker:.1f}x;I={i_ker:.1f}mA"))
+    out += _bench_campaign_fit()
     return out

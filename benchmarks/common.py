@@ -9,8 +9,14 @@ import time
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 CACHE = os.path.join(ARTIFACTS, "vampire_fit.pkl")
+# provenance of the on-disk fit cache: (schema, engine, fit kwargs); a blob
+# written by different code or a different campaign config is refit, not
+# trusted
+FIT_KW = dict(probe_modules=5, probe_reps=128, n_rows=16)
+_CACHE_TAG = ("v2", "batched", tuple(sorted(FIT_KW.items())))
 
 _model = None
+_model_engine = None
 _fleet = None
 
 
@@ -22,28 +28,35 @@ def full_fleet():
     return _fleet
 
 
-def fitted_vampire(refit: bool = False):
-    """The paper's 50-module campaign, cached."""
-    global _model
-    if _model is not None and not refit:
+def fitted_vampire(refit: bool = False, engine: str = "batched"):
+    """The paper's 50-module campaign, run through the batched fleet engine
+    (pass ``engine='serial'`` for the one-measurement-at-a-time oracle).
+    Only the default batched fit is cached (in memory and on disk); asking
+    for a different engine than the cached one forces a refit."""
+    global _model, _model_engine
+    if _model is not None and not refit and engine == _model_engine:
         return _model
     os.makedirs(ARTIFACTS, exist_ok=True)
-    if os.path.exists(CACHE) and not refit:
+    if os.path.exists(CACHE) and not refit and engine == "batched":
         try:
             with open(CACHE, "rb") as f:
-                _model = pickle.load(f)
-            return _model
+                blob = pickle.load(f)
+            if isinstance(blob, dict) and blob.get("tag") == _CACHE_TAG:
+                _model = blob["model"]
+                _model_engine = engine
+                return _model
         except Exception:
             pass
     from repro.core.vampire import Vampire
     t0 = time.time()
-    _model = Vampire.fit(full_fleet(), probe_modules=5, probe_reps=128,
-                         n_rows=16)
-    print(f"# characterization campaign: {time.time()-t0:.0f}s")
+    _model = Vampire.fit(full_fleet(), engine=engine, **FIT_KW)
+    _model_engine = engine
+    print(f"# characterization campaign ({engine}): {time.time()-t0:.0f}s")
     for vc in _model.by_vendor.values():
         vc.build_params()
-    with open(CACHE, "wb") as f:
-        pickle.dump(_model, f)
+    if engine == "batched":
+        with open(CACHE, "wb") as f:
+            pickle.dump({"tag": _CACHE_TAG, "model": _model}, f)
     return _model
 
 

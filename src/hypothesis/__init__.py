@@ -1,0 +1,198 @@
+"""Vendored fallback for the `hypothesis` property-testing library.
+
+The test suite declares `hypothesis` as a test dependency (see
+``pyproject.toml``); when the real library is importable anywhere else on
+``sys.path`` this package transparently loads it instead of itself, so an
+installed hypothesis always wins. The fallback below implements only the
+tiny API surface the suite uses — ``@given`` / ``@settings`` /
+``strategies.integers`` / ``strategies.lists`` — with deterministic,
+boundary-first example generation, so the suite stays runnable in offline
+containers where `pip install hypothesis` is impossible.
+"""
+from __future__ import annotations
+
+import functools
+import importlib.machinery
+import importlib.util
+import inspect
+import os
+import random as _random
+import sys
+import types
+import zlib
+
+
+def _load_real_hypothesis():
+    """Load a real hypothesis installation if one exists elsewhere."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    parent = os.path.dirname(here)
+    paths = [p for p in sys.path
+             if os.path.abspath(p if p else os.getcwd()) != parent]
+    try:
+        spec = importlib.machinery.PathFinder.find_spec("hypothesis", paths)
+    except (ImportError, ValueError):
+        return None
+    if spec is None or spec.origin is None:
+        return None
+    if os.path.abspath(os.path.dirname(spec.origin)) == here:
+        return None
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["hypothesis"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+_real = _load_real_hypothesis()
+
+if _real is None:
+    # ------------------------------------------------------------------
+    # Minimal fallback implementation
+    # ------------------------------------------------------------------
+    class UnsatisfiedAssumption(Exception):
+        pass
+
+    def assume(condition):
+        if not condition:
+            raise UnsatisfiedAssumption()
+        return True
+
+    class _Strategy:
+        """A strategy draws one value; index 0/1 hit the boundaries."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def do_draw(self, rng, example_index):
+            return self._draw(rng, example_index)
+
+        def map(self, fn):
+            return _Strategy(lambda rng, i: fn(self._draw(rng, i)))
+
+    def _integers(min_value=None, max_value=None):
+        lo = -(2 ** 63) if min_value is None else int(min_value)
+        hi = 2 ** 63 - 1 if max_value is None else int(max_value)
+
+        def draw(rng, i):
+            if i == 0:
+                return lo
+            if i == 1:
+                return hi
+            return rng.randint(lo, hi)
+        return _Strategy(draw)
+
+    def _booleans():
+        return _Strategy(lambda rng, i: (False, True)[i]
+                         if i < 2 else rng.random() < 0.5)
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng, i):
+            if i == 0:
+                return lo
+            if i == 1:
+                return hi
+            return rng.uniform(lo, hi)
+        return _Strategy(draw)
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng, i: elements[i % len(elements)] if i < 2
+            else rng.choice(elements))
+
+    def _just(value):
+        return _Strategy(lambda rng, i: value)
+
+    def _lists(elements, min_size=0, max_size=None, **_kw):
+        cap = (min_size + 10) if max_size is None else int(max_size)
+
+        def draw(rng, i):
+            if i == 0:
+                size = min_size
+            elif i == 1:
+                size = cap
+            else:
+                size = rng.randint(min_size, cap)
+            return [elements.do_draw(rng, min(i, 2)) for _ in range(size)]
+        return _Strategy(draw)
+
+    def _tuples(*strategies):
+        return _Strategy(lambda rng, i: tuple(s.do_draw(rng, i)
+                                              for s in strategies))
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = _integers
+    strategies.booleans = _booleans
+    strategies.floats = _floats
+    strategies.lists = _lists
+    strategies.sampled_from = _sampled_from
+    strategies.just = _just
+    strategies.tuples = _tuples
+    sys.modules["hypothesis.strategies"] = strategies
+
+    class settings:
+        """Decorator storing run options on the test function."""
+
+        def __init__(self, max_examples=50, deadline=None, **_ignored):
+            self.max_examples = max_examples
+            self.deadline = deadline
+
+        def __call__(self, fn):
+            fn._hypothesis_settings = self
+            return fn
+
+    _DEFAULT_SETTINGS = settings()
+
+    def given(*given_args, **given_kwargs):
+        def decorate(fn):
+            sig = inspect.signature(fn)
+            param_names = list(sig.parameters)
+            pos_names = param_names[:len(given_args)]
+            drawn = set(pos_names) | set(given_kwargs)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                opts = getattr(wrapper, "_hypothesis_settings",
+                               _DEFAULT_SETTINGS)
+                seed = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode())
+                rng = _random.Random(seed)
+                ran = 0
+                attempts = 0
+                while ran < opts.max_examples and attempts < \
+                        10 * opts.max_examples:
+                    i = attempts
+                    attempts += 1
+                    try:
+                        d_args = [s.do_draw(rng, i) for s in given_args]
+                        d_kwargs = {k: s.do_draw(rng, i)
+                                    for k, s in given_kwargs.items()}
+                        fn(*args, *d_args, **kwargs, **d_kwargs)
+                    except UnsatisfiedAssumption:
+                        continue
+                    ran += 1
+                if ran == 0:
+                    raise AssertionError(
+                        f"{fn.__qualname__}: assume() rejected all "
+                        f"{attempts} generated examples; the test never "
+                        "ran (real hypothesis would error here too)")
+
+            # hide drawn parameters from pytest's fixture resolution
+            remaining = [p for n, p in sig.parameters.items()
+                         if n not in drawn]
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            try:
+                del wrapper.__wrapped__
+            except AttributeError:
+                pass
+            wrapper.is_hypothesis_test = True
+            return wrapper
+        return decorate
+
+    def example(*_args, **_kwargs):  # explicit examples: no-op passthrough
+        def decorate(fn):
+            return fn
+        return decorate
+
+    __version__ = "0.0.0+repro-fallback"

@@ -14,6 +14,15 @@ Pipeline (mirrors the paper's methodology):
 4. Structural probes (Section 6): per-bank idle/read/write, per-row
    activation, per-column read.
 5. Assemble fitted per-vendor :class:`PowerParams` -> the VAMPIRE model.
+
+Every measurement of the campaign is declared up front as a
+:class:`CampaignPlan` of probe points, which either engine can execute:
+``engine='batched'`` (default) evaluates padded fixed-shape probe batches
+against all modules in a handful of vmapped dispatches (see
+``repro.core.fleet``); ``engine='serial'`` replays the campaign one
+``measure_current`` call at a time and serves as the correctness oracle —
+both draw identical per-(module, probe) measurement noise, so they fit the
+same parameters to float32 tolerance.
 """
 from __future__ import annotations
 
@@ -22,10 +31,11 @@ import functools
 
 import numpy as np
 
-from repro.core import device_sim, dram, fitting, idd_loops
+from repro.core import device_sim, dram, fitting, fleet, idd_loops
 from repro.core import params as P
 from repro.core.dram import RD, WR, LINE_BITS
 from repro.core.energy_model import PowerParams, trace_energy_vectorized
+from repro.core.fleet import ProbeBatch, ProbePoint
 
 IDD_KEYS = ("IDD2N", "IDD3N", "IDD0", "IDD1", "IDD4R", "IDD4W", "IDD7",
             "IDD5B", "IDD2P1")
@@ -35,6 +45,11 @@ OPS = (RD, WR)
 ONES_POINTS = (0, 64, 128, 192, 256, 320, 384, 448, 512)
 PAIR_ONES = (64, 128, 192, 256, 320, 384, 448)
 PAIR_TOGGLES = (0, 32, 64, 128, 192, 256)
+
+# stable noise-key bases: IDD loops and probe-subset points must never share
+# a key (a key IS the measurement's noise draw, per module)
+_IDD_KEY_BASE = 0
+_PROBE_KEY_BASE = 4096
 
 
 def _feasible(n_ones: int, togg: int) -> bool:
@@ -63,11 +78,6 @@ def pair_lines(n_ones: int, togg: int, seed: int = 0):
             w[i] = np.uint32(sum(int(b) << j for j, b in enumerate(chunk)))
         return w
     return pack(a_bits), pack(b_bits)
-
-
-def _mean_current(modules, trace, noisy=True, skip=0) -> float:
-    return float(np.mean([m.measure_current(trace, noisy=noisy, skip=skip)
-                          for m in modules]))
 
 
 # ---------------------------------------------------------------------------
@@ -168,37 +178,53 @@ def _io_estimate(op: int, ones: np.ndarray) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# The campaign
+# The campaign plan: every probe point of the measurement campaign, with a
+# stable noise key per point. The plan is vendor-independent (pair data and
+# row samples depend only on rng_seed), so one plan — and its padded batched
+# form — is shared across all three vendors and both engines.
 # ---------------------------------------------------------------------------
-def characterize_vendor(modules, vendor: int, *, probe_modules: int = 5,
-                        probe_reps: int = 256, n_rows: int = 24,
-                        rng_seed: int = 0) -> VendorCharacterization:
-    probes = modules[:probe_modules]
+@dataclasses.dataclass
+class CampaignPlan:
+    idd_points: list[ProbePoint]    # measured on EVERY module of a vendor
+    probe_points: list[ProbePoint]  # measured on the probe-module subset
+    rows: list[int]                 # row addresses of the activation sweep
 
-    # ---- 1. IDD loops on every module ------------------------------------
-    idd_measured = {}
-    for key in IDD_KEYS:
-        loop = idd_loops.IDD_LOOPS[key]()
-        idd_measured[key] = np.array([m.measure_current(loop)
-                                      for m in modules])
+    @functools.cached_property
+    def idd_batch(self) -> ProbeBatch:
+        return ProbeBatch.from_points(self.idd_points)
 
-    ds_vals, ds_r2 = extrapolated_datasheets()
+    @functools.cached_property
+    def probe_batch(self) -> ProbeBatch:
+        return ProbeBatch.from_points(self.probe_points)
 
-    # ---- 2. data-dependency fits (Section 5 / Table 5) --------------------
-    datadep = np.zeros((4, 2, 3))
-    datadep_r2 = np.zeros((4, 2))
-    ones_sweep_raw = {}
-    for mi, mode in enumerate(IL_MODES):
+
+def _sample_rows(n_rows: int, rng_seed: int) -> list[int]:
+    """Row addresses covering address popcounts 0..ROW_BITS."""
+    rng = np.random.default_rng(rng_seed + 1)
+    rows = []
+    for ro in range(dram.ROW_BITS + 1):
+        for _ in range(max(1, n_rows // (dram.ROW_BITS + 1))):
+            bits = rng.choice(dram.ROW_BITS, size=ro, replace=False)
+            rows.append(int(sum(1 << int(b) for b in bits)))
+    return rows
+
+
+@functools.lru_cache(maxsize=4)
+def campaign_plan(probe_reps: int = 256, n_rows: int = 24,
+                  rng_seed: int = 0) -> CampaignPlan:
+    idd_points = [
+        ProbePoint(("idd", key), idd_loops.IDD_LOOPS[key](), 0,
+                   _IDD_KEY_BASE + i)
+        for i, key in enumerate(IDD_KEYS)]
+
+    pts: list[tuple[tuple, dram.CommandTrace, int]] = []
+    for mode in IL_MODES:
         for oi, op in enumerate(OPS):
-            ones_list, togg_list, cur_list = [], [], []
             if mode == "none":
                 for n1 in ONES_POINTS:
                     tr, skip = idd_loops.ones_sweep_point(n1, op=op,
                                                           reps=probe_reps)
-                    cur = _mean_current(probes, tr, skip=skip)
-                    ones_list.append(n1)
-                    togg_list.append(0)
-                    cur_list.append(cur)
+                    pts.append((("sweep", mode, oi, n1, 0), tr, skip))
             else:
                 for n1 in PAIR_ONES:
                     for tg in PAIR_TOGGLES:
@@ -207,13 +233,64 @@ def characterize_vendor(modules, vendor: int, *, probe_modules: int = 5,
                         a, b = pair_lines(n1, tg, seed=rng_seed)
                         tr, skip = idd_loops.interleave_sweep_point(
                             a, b, mode, op=op, reps=probe_reps // 2)
-                        cur = _mean_current(probes, tr, skip=skip)
-                        ones_list.append(n1)
-                        togg_list.append(tg)
-                        cur_list.append(cur)
-            ones_a = np.asarray(ones_list, dtype=np.float64)
-            tog_a = np.asarray(togg_list, dtype=np.float64)
-            cur_a = np.asarray(cur_list, dtype=np.float64)
+                        pts.append((("sweep", mode, oi, n1, tg), tr, skip))
+    pts.append((("i2n_probe",), idd_loops.idd2n(), 0))
+    for b in range(8):
+        tr, skip = idd_loops.bank_idle_probe(b)
+        pts.append((("bank_idle", b), tr, skip))
+    for oi, op in enumerate(OPS):
+        for b in range(8):
+            tr, skip = idd_loops.bank_read_probe(b, op=op, reps=probe_reps)
+            pts.append((("bank_rw", oi, b), tr, skip))
+    rows = _sample_rows(n_rows, rng_seed)
+    for i, r in enumerate(rows):
+        tr, skip = idd_loops.row_act_probe(r, reps=probe_reps)
+        pts.append((("row", i), tr, skip))
+
+    probe_points = [ProbePoint(label, tr, skip, _PROBE_KEY_BASE + i)
+                    for i, (label, tr, skip) in enumerate(pts)]
+    return CampaignPlan(idd_points, probe_points, rows)
+
+
+# ---------------------------------------------------------------------------
+# The campaign
+# ---------------------------------------------------------------------------
+def characterize_vendor(modules, vendor: int, *, probe_modules: int = 5,
+                        probe_reps: int = 256, n_rows: int = 24,
+                        rng_seed: int = 0,
+                        engine: str = "batched") -> VendorCharacterization:
+    probes = modules[:probe_modules]
+    plan = campaign_plan(probe_reps=probe_reps, n_rows=n_rows,
+                         rng_seed=rng_seed)
+
+    # ---- measurement: two batched dispatches (or the serial oracle) -------
+    idd_currents = fleet.run_probes(            # (all modules, 9 IDD loops)
+        modules, plan.idd_points, engine=engine,
+        batch=plan.idd_batch if engine == "batched" else None)
+    probe_currents = fleet.run_probes(          # (probe modules, all probes)
+        probes, plan.probe_points, engine=engine,
+        batch=plan.probe_batch if engine == "batched" else None)
+    probe_mean = probe_currents.mean(axis=0)
+    cur = {pt.label: float(probe_mean[i])
+           for i, pt in enumerate(plan.probe_points)}
+
+    # ---- 1. IDD loops on every module ------------------------------------
+    idd_measured = {key: idd_currents[:, i] for i, key in enumerate(IDD_KEYS)}
+    ds_vals, ds_r2 = extrapolated_datasheets()
+
+    # ---- 2. data-dependency fits (Section 5 / Table 5) --------------------
+    datadep = np.zeros((4, 2, 3))
+    datadep_r2 = np.zeros((4, 2))
+    ones_sweep_raw = {}
+    for mi, mode in enumerate(IL_MODES):
+        for oi, op in enumerate(OPS):
+            sweep = [(lab, c) for lab, c in cur.items()
+                     if lab[0] == "sweep" and lab[1] == mode and lab[2] == oi]
+            ones_a = np.asarray([lab[3] for lab, _ in sweep],
+                                dtype=np.float64)
+            tog_a = np.asarray([lab[4] for lab, _ in sweep],
+                               dtype=np.float64)
+            cur_a = np.asarray([c for _, c in sweep], dtype=np.float64)
             corrected = cur_a - _io_estimate(op, ones_a)
             fit = fitting.fit_ones_toggles(ones_a, tog_a, corrected)
             datadep[mi, oi] = fit.coef
@@ -228,31 +305,19 @@ def characterize_vendor(modules, vendor: int, *, probe_modules: int = 5,
     # ---- 3. structural probes (Section 6) ---------------------------------
     # The structural/background fits must use the *same* module population
     # as the probes (process variation otherwise biases the subtractions).
-    i2n_probe = _mean_current(probes, idd_loops.idd2n())
+    i2n_probe = cur[("i2n_probe",)]
     i2n = float(np.mean(idd_measured["IDD2N"]))
-    bank_idle = np.array([
-        _mean_current(probes, *idd_loops.bank_idle_probe(b))
-        for b in range(8)])
+    bank_idle = np.array([cur[("bank_idle", b)] for b in range(8)])
     bank_open_delta = np.maximum(bank_idle - i2n_probe, 0.05)
 
-    rd_cur = np.array([_mean_current(
-        probes, *idd_loops.bank_read_probe(b, op=RD, reps=probe_reps))
-        for b in range(8)])
-    wr_cur = np.array([_mean_current(
-        probes, *idd_loops.bank_read_probe(b, op=WR, reps=probe_reps))
-        for b in range(8)])
+    rd_cur = np.array([cur[("bank_rw", 0, b)] for b in range(8)])
+    wr_cur = np.array([cur[("bank_rw", 1, b)] for b in range(8)])
     bank_read_factor = rd_cur / rd_cur[0]
     bank_write_factor = wr_cur / wr_cur[0]
 
     # per-row activation sweep: rows chosen to cover address popcounts 0..15
-    rng = np.random.default_rng(rng_seed + 1)
-    rows = []
-    for ro in range(dram.ROW_BITS + 1):
-        for _ in range(max(1, n_rows // (dram.ROW_BITS + 1))):
-            bits = rng.choice(dram.ROW_BITS, size=ro, replace=False)
-            rows.append(int(sum(1 << int(b) for b in bits)))
-    row_cur = np.array([_mean_current(
-        probes, *idd_loops.row_act_probe(r, reps=probe_reps)) for r in rows])
+    rows = plan.rows
+    row_cur = np.array([cur[("row", i)] for i in range(len(rows))])
     row_ones = np.array([bin(r).count("1") for r in rows], dtype=np.float64)
     d = np.stack([np.ones_like(row_ones), row_ones], axis=1)
     rf = fitting.lstsq_fit(d, row_cur)
@@ -282,11 +347,11 @@ def characterize_vendor(modules, vendor: int, *, probe_modules: int = 5,
     return vc
 
 
-def characterize_fleet(fleet=None, **kw) -> dict[int, VendorCharacterization]:
-    fleet = device_sim.make_fleet() if fleet is None else fleet
+def characterize_fleet(modules=None, **kw) -> dict[int, VendorCharacterization]:
+    modules = device_sim.make_fleet() if modules is None else modules
     out = {}
     for v in range(3):
-        mods = device_sim.vendor_modules(fleet, v)
+        mods = device_sim.vendor_modules(modules, v)
         if mods:
             out[v] = characterize_vendor(mods, v, **kw)
     return out

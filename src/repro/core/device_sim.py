@@ -110,6 +110,47 @@ def true_module_params(spec: P.ModuleSpec) -> PowerParams:
     )
 
 
+# ---------------------------------------------------------------------------
+# Measurement noise: counter-based, seed-stable, vectorizable.
+#
+# Each measurement's multiplicative noise is a pure function of
+# (module identity, probe key), computed with JAX's counter-based RNG, so the
+# noise a probe sees is independent of measurement *order*: the serial
+# correctness oracle and the batched fleet engine draw bit-identical factors
+# for the same (module, probe) pair, and a whole (modules, probes) matrix of
+# factors is one vectorized call.
+# ---------------------------------------------------------------------------
+_NOISE_ROOT = 0x5EED
+# probe keys below this are reserved for explicitly-keyed campaign probes;
+# ad-hoc (unkeyed) measurements draw from a per-module counter above it.
+_ADHOC_KEY_BASE = 1 << 20
+
+
+@jax.jit
+def _noise_normals(vendors, module_ids, years, probe_keys):
+    """(M,) module identity arrays x (K,) probe keys -> (M, K) unit normals."""
+    base = jax.random.key(_NOISE_ROOT)
+
+    def module_key(v, m, y):
+        return jax.random.fold_in(
+            jax.random.fold_in(jax.random.fold_in(base, v), m), y)
+
+    keys = jax.vmap(module_key)(vendors, module_ids, years)
+    return jax.vmap(lambda k: jax.vmap(
+        lambda p: jax.random.normal(jax.random.fold_in(k, p)))(probe_keys)
+    )(keys)
+
+
+def measurement_noise_factors(specs, probe_keys) -> np.ndarray:
+    """The (len(specs), len(probe_keys)) matrix of multiplicative measurement
+    noise factors — lognormal with sigma ``params.MEASUREMENT_NOISE``."""
+    v = jnp.asarray([s.vendor for s in specs], jnp.uint32)
+    m = jnp.asarray([s.module_id for s in specs], jnp.uint32)
+    y = jnp.asarray([s.year for s in specs], jnp.uint32)
+    z = _noise_normals(v, m, y, jnp.asarray(probe_keys, jnp.uint32))
+    return np.exp(P.MEASUREMENT_NOISE * np.asarray(z))
+
+
 @dataclasses.dataclass
 class SimulatedModule:
     """One simulated DIMM attached to the simulated measurement rig."""
@@ -119,15 +160,17 @@ class SimulatedModule:
     def __post_init__(self):
         if self.params is None:
             self.params = true_module_params(self.spec)
-        self._noise_rng = _module_rng(
-            self.spec._replace(module_id=self.spec.module_id + 10_000))
+        self._adhoc_probe_counter = _ADHOC_KEY_BASE
 
     # -- the "multimeter": average current over a looped microbenchmark ----
     def measure_current(self, trace: CommandTrace, noisy: bool = True,
-                        skip: int = 0) -> float:
+                        skip: int = 0, probe_key: int | None = None) -> float:
         """Average current. ``skip`` drops the first N commands (one-time
         setup) from the average — the rig starts sampling only once the
-        steady-state loop is running, as in the paper's methodology."""
+        steady-state loop is running, as in the paper's methodology.
+        ``probe_key`` pins the measurement-noise draw to a stable key so
+        serial and batched campaign engines agree; without it, each call
+        consumes the module's ad-hoc counter."""
         if skip:
             from repro.core.energy_model import per_command_energy
             e = per_command_energy(trace, self.params)[skip:]
@@ -139,8 +182,11 @@ class SimulatedModule:
             rep = trace_energy_vectorized(trace, self.params)
             cur = float(rep.avg_current_ma)
         if noisy:
-            cur *= float(np.exp(self._noise_rng.normal(
-                0.0, P.MEASUREMENT_NOISE)))
+            if probe_key is None:
+                probe_key = self._adhoc_probe_counter
+                self._adhoc_probe_counter += 1
+            cur *= float(measurement_noise_factors([self.spec],
+                                                   [probe_key])[0, 0])
         return cur
 
     def measure_report(self, trace: CommandTrace) -> EnergyReport:

@@ -132,6 +132,51 @@ def tile_trace(trace: CommandTrace, reps: int) -> CommandTrace:
         jnp.tile(trace.data, (reps, 1)), jnp.tile(trace.dt, reps))
 
 
+def pad_trace(trace: CommandTrace, length: int) -> CommandTrace:
+    """NOP-pad a trace to ``length`` commands with ``dt == 0`` slots.
+
+    A NOP that owns zero cycles draws zero charge and leaves every piece of
+    integrator state (bank open/closed, power-down, previous-RD/WR data)
+    untouched, so energy/current over the padded trace equals the original —
+    this is what lets sweep points of unequal length share one compiled
+    shape in the batched fleet engine.
+    """
+    n = trace.n
+    assert length >= n, (length, n)
+    pad = length - n
+    if pad == 0:
+        return trace
+    zi = jnp.zeros(pad, dtype=jnp.int32)
+    return CommandTrace(
+        jnp.concatenate([trace.cmd, jnp.full(pad, NOP, dtype=jnp.int32)]),
+        jnp.concatenate([trace.bank, zi]),
+        jnp.concatenate([trace.row, zi]),
+        jnp.concatenate([trace.col, zi]),
+        jnp.concatenate([trace.data,
+                         jnp.zeros((pad, LINE_WORDS), dtype=jnp.uint32)]),
+        jnp.concatenate([trace.dt, zi]))
+
+
+def batch_traces(traces_and_skips) -> tuple[CommandTrace, jax.Array]:
+    """Stack variable-length traces into one fixed-shape batch.
+
+    ``traces_and_skips`` is a sequence of ``(trace, skip)`` pairs; ``skip``
+    generalizes the serial ``measure_current(skip=)`` handling: the first
+    ``skip`` commands (one-time setup) are masked out of the average, as is
+    all NOP/dt=0 padding. Returns ``(batch, weight)`` where every field of
+    ``batch`` has a leading probe axis ``(P, N, ...)`` and ``weight`` is a
+    float32 ``(P, N)`` mask of commands that count toward the measurement.
+    """
+    pairs = list(traces_and_skips)
+    length = max(tr.n for tr, _ in pairs)
+    padded = [pad_trace(tr, length) for tr, _ in pairs]
+    batch = CommandTrace(*[jnp.stack(f) for f in zip(*padded)])
+    idx = np.arange(length)
+    weight = np.stack([(idx >= skip) & (idx < tr.n)
+                       for tr, skip in pairs]).astype(np.float32)
+    return batch, jnp.asarray(weight)
+
+
 # ---------------------------------------------------------------------------
 # Data-pattern helpers
 # ---------------------------------------------------------------------------

@@ -1,0 +1,112 @@
+"""Batched fleet-evaluation engine for the characterization campaign.
+
+The paper's campaign is 50 modules x 9 IDD loops x hundreds of
+data-dependency/structural probe points. Evaluated serially (one
+``measure_current`` per (module, probe) pair) that is thousands of
+separately-dispatched, separately-compiled JAX calls; here the whole
+campaign collapses into a handful of fixed-shape batched dispatches:
+
+* :func:`stack_params` stacks per-module :class:`PowerParams` pytrees along
+  a leading module axis (the layout ``energy_model.PowerParams`` was designed
+  for).
+* probe points of unequal length are NOP/dt=0-padded into one
+  ``(probes, commands)`` batch with a skip/validity mask
+  (:func:`repro.core.dram.batch_traces`).
+* :func:`fleet_measure_current` evaluates the whole (modules, probes) current
+  matrix with a single jitted ``vmap(vmap(...))`` over the shared integrator.
+* measurement noise comes from the counter-based RNG in ``device_sim`` and is
+  applied to the full matrix at once — bit-identical to what the serial
+  oracle draws per call, so both engines fit the same parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import device_sim
+from repro.core.dram import CommandTrace, batch_traces
+from repro.core.energy_model import (PowerParams, charge_from_features,
+                                     extract_features)
+
+
+def stack_params(params: Sequence[PowerParams]) -> PowerParams:
+    """Stack per-module parameter pytrees along a leading module axis."""
+    return jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *params)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbePoint:
+    """One measurement of the campaign: a looped microbenchmark trace, the
+    number of setup commands to skip, and a stable noise key."""
+    label: tuple
+    trace: CommandTrace
+    skip: int
+    key: int
+
+
+@dataclasses.dataclass
+class ProbeBatch:
+    """A padded, fixed-shape batch of probe points (see ``batch_traces``)."""
+    trace: CommandTrace   # (P, N) leading probe axis on every field
+    weight: jax.Array     # (P, N) float32 measurement mask
+    keys: np.ndarray      # (P,) noise keys
+
+    @classmethod
+    def from_points(cls, points: Sequence[ProbePoint]) -> "ProbeBatch":
+        trace, weight = batch_traces([(p.trace, p.skip) for p in points])
+        return cls(trace, weight, np.asarray([p.key for p in points]))
+
+
+@jax.jit
+def fleet_measure_current(trace: CommandTrace, weight: jax.Array,
+                          stacked: PowerParams) -> jax.Array:
+    """Noise-free average current of every (module, probe) pair.
+
+    ``trace``/``weight`` are a ProbeBatch's padded fields; ``stacked`` is
+    ``stack_params`` over the fleet. Returns a float32 (modules, probes)
+    matrix. The probe batch is broadcast (not sliced) across the module
+    vmap; feature extraction still runs per module because it depends on
+    the per-module params.
+    """
+    def one_probe(tr: CommandTrace, w: jax.Array, pp: PowerParams):
+        feats = extract_features(tr, pp)
+        charges = charge_from_features(tr, feats, pp)
+        cycles = jnp.sum(tr.dt.astype(jnp.float32) * w)
+        return jnp.sum(charges * w) / jnp.maximum(cycles, 1.0)
+
+    per_module = jax.vmap(one_probe, in_axes=(0, 0, None))
+    return jax.vmap(lambda pp: per_module(trace, weight, pp))(stacked)
+
+
+def run_probes(modules, points: Sequence[ProbePoint], *,
+               engine: str = "batched", noisy: bool = True,
+               batch: ProbeBatch | None = None) -> np.ndarray:
+    """Measure every probe point on every module -> (modules, probes) mA.
+
+    ``engine='batched'`` is the production path (a single jitted dispatch per
+    padded batch shape); ``engine='serial'`` replays the campaign one
+    ``measure_current`` call at a time and is kept as the correctness
+    oracle — both draw identical per-(module, probe) noise. Callers issuing
+    the same point list repeatedly should pass a prebuilt ``batch`` to skip
+    re-padding (see ``characterize.CampaignPlan``).
+    """
+    if engine == "serial":
+        return np.asarray(
+            [[m.measure_current(p.trace, noisy=noisy, skip=p.skip,
+                                probe_key=p.key)
+              for p in points] for m in modules])
+    if engine != "batched":
+        raise ValueError(f"unknown engine {engine!r}")
+    if batch is None:
+        batch = ProbeBatch.from_points(points)
+    stacked = stack_params([m.params for m in modules])
+    currents = np.asarray(fleet_measure_current(batch.trace, batch.weight,
+                                                stacked), dtype=np.float64)
+    if noisy:
+        currents = currents * device_sim.measurement_noise_factors(
+            [m.spec for m in modules], batch.keys)
+    return currents

@@ -183,8 +183,10 @@ def app_trace(app: AppSpec, n_requests: int = 2000,
             if open_row[b] >= 0:
                 cmds.append(PRE); banks.append(b); rows.append(0)
                 cols.append(0); datas.append(zline); dts.append(_T.tRP)
+                cycles_since_ref += _T.tRP
             cmds.append(ACT); banks.append(b); rows.append(r)
             cols.append(0); datas.append(zline); dts.append(_T.tRCD)
+            cycles_since_ref += _T.tRCD
             open_row[b] = r
         op = RD if rd_seq[i] else WR
         gap = int(gap_seq[i])

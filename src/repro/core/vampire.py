@@ -28,7 +28,8 @@ from repro.core.dram import LINE_BITS, RD, WR, CommandTrace
 from repro.core.energy_model import (EnergyReport, PowerParams,
                                      charge_from_features, extract_features,
                                      trace_energy_scan,
-                                     trace_energy_vectorized, _report)
+                                     trace_energy_vectorized,
+                                     _exclusive_cummax, _report)
 
 
 @dataclasses.dataclass
@@ -53,6 +54,11 @@ class Vampire:
     # ------------------------------------------------------------------ fit
     @classmethod
     def fit(cls, fleet=None, **kw) -> "Vampire":
+        """Run the characterization campaign and build the model.
+
+        ``engine='batched'`` (default) runs the campaign through the vmapped
+        fleet engine (``repro.core.fleet``); ``engine='serial'`` replays it
+        one measurement at a time (the correctness oracle)."""
         return cls(by_vendor=characterize.characterize_fleet(fleet, **kw))
 
     def params(self, vendor: int) -> PowerParams:
@@ -86,8 +92,15 @@ class Vampire:
         feats = extract_features(trace, pp)
         is_rw = feats.is_rw
         n = trace.cmd.shape[0]
+        # match extract_features' first-access handling: the first RD/WR on
+        # the bus has no previous burst to toggle against, so its expected
+        # toggle count is 0 regardless of toggle_frac
+        idx = jnp.arange(n, dtype=jnp.int32)
+        prev_rw = _exclusive_cummax(jnp.where(is_rw, idx, -1))
+        has_prev = prev_rw >= 0
         ones = jnp.where(is_rw, jnp.asarray(ones_frac * LINE_BITS), 0.0)
-        togg = jnp.where(is_rw, jnp.asarray(toggle_frac * LINE_BITS), 0.0)
+        togg = jnp.where(is_rw & has_prev,
+                         jnp.asarray(toggle_frac * LINE_BITS), 0.0)
         feats = feats._replace(ones=ones.astype(jnp.float32),
                                toggles=togg.astype(jnp.float32))
         charges = charge_from_features(trace, feats, pp)
@@ -108,6 +121,42 @@ class Vampire:
                 for v, vc in self.by_vendor.items()}
         with open(path, "wb") as f:
             pickle.dump(blob, f)
+
+    @classmethod
+    def load(cls, path: str) -> "Vampire":
+        """Rebuild a fitted model from a ``save`` blob.
+
+        The blob stores only the fitted quantities (not the raw campaign
+        sweeps), so the reconstructed ``VendorCharacterization`` carries
+        empty measurement containers — everything ``estimate*`` needs
+        (fitted :class:`PowerParams`, datasheet values, the variation band)
+        round-trips exactly."""
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        by_vendor = {}
+        bands = {}
+        for v, d in blob.items():
+            vc = characterize.VendorCharacterization(
+                vendor=v,
+                idd_measured={},
+                idd_datasheet=dict(d["idd_datasheet"]),
+                idd_extrapolation_r2={},
+                datadep=np.asarray(d["datadep"]),
+                datadep_r2=np.zeros((4, 2)),
+                ones_sweep={},
+                i2n=float(d["i2n"]),
+                bank_open_delta=np.asarray(d["bank_open_delta"]),
+                bank_read_factor=np.asarray(d["bank_read_factor"]),
+                bank_write_factor=np.asarray(d["bank_write_factor"]),
+                q_actpre=float(d["q_actpre"]),
+                row_ones_slope=float(d["row_ones_slope"]),
+                row_sweep={},
+                q_ref=float(d["q_ref"]),
+                i_pd=float(d["i_pd"]))
+            vc.build_params()
+            by_vendor[v] = vc
+            bands[v] = tuple(d["band"])
+        return cls(by_vendor=by_vendor, variation_band=bands)
 
 
 def reference_vampire() -> Vampire:

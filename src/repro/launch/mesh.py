@@ -8,20 +8,26 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    """jax.make_mesh across JAX versions: ``jax.sharding.AxisType`` (and the
+    ``axis_types=`` kwarg) only exist on newer JAX; fall back to the plain
+    call on 0.4.x, where every axis is implicitly auto."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; the multi-pod mesh spans 2 pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1, pod: int | None = None):
     """Small mesh for smoke tests / examples on however many devices exist."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return _mesh((pod, data, model), ("pod", "data", "model"))
+    return _mesh((data, model), ("data", "model"))

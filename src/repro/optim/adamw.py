@@ -89,7 +89,11 @@ def update(grads, state, params, cfg: AdamWConfig):
         g = g.astype(jnp.float32) * clip
         if cfg.quantize_moments:
             m_f = _dequantize(m["q"], m["scale"])
-            v_f = _dequantize(v["q"], v["scale"])
+            # v is stored in sqrt-domain: int8 steps are uniform in
+            # sqrt(v), so the relative error of the update denominator
+            # sqrt(vhat) stays ~1/127 of the row max instead of blowing
+            # up on small-v elements
+            v_f = jnp.square(_dequantize(v["q"], v["scale"]))
         else:
             m_f, v_f = m, v
         m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
@@ -101,7 +105,7 @@ def update(grads, state, params, cfg: AdamWConfig):
                  - lr * (delta + cfg.weight_decay * p.astype(jnp.float32)))
         if cfg.quantize_moments:
             mq, ms = _quantize(m_f)
-            vq, vs = _quantize(v_f)
+            vq, vs = _quantize(jnp.sqrt(v_f))
             return new_p.astype(p.dtype), {"q": mq, "scale": ms}, \
                 {"q": vq, "scale": vs}
         return new_p.astype(p.dtype), m_f, v_f
