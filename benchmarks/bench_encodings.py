@@ -13,18 +13,14 @@ def run() -> list[str]:
     out = []
     with timer() as t:
         model = fitted_vampire()
-        ratios = {e: [] for e in encodings.ENCODINGS}
-        for app in traces.SPEC_APPS:
-            tr = traces.app_trace(app, n_requests=1000)
-            base = None
-            for enc in encodings.ENCODINGS:
-                te = encodings.encode_trace(tr, enc)
-                # average across vendors, as in Fig 26
-                e = float(np.mean([model.estimate(te, v).energy_pj
-                                   for v in range(3)]))
-                if enc == "baseline":
-                    base = e
-                ratios[enc].append(e / base)
+        tba = {app.name: traces.app_trace(app, n_requests=1000)
+               for app in traces.SPEC_APPS}
+        # all apps x 4 encodings x 3 vendors: ONE batched dispatch
+        # (vendor-averaged, as in Fig 26)
+        study = encodings.encoding_energy_study(tba, model, vendors=range(3))
+        ratios = {enc: [study[app][enc] / study[app]["baseline"]
+                        for app in tba]
+                  for enc in encodings.ENCODINGS}
     paper = {"baseline": (1.0, 1.0), "bdi": (1.0, 1.0),
              "optimized": (1.0, 1.0), "owi": (0.878, 0.714)}
     for enc in encodings.ENCODINGS:

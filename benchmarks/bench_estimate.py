@@ -1,0 +1,97 @@
+"""Serial vs batched estimation throughput (ours): the runtime-estimation
+dispatch win of ``Vampire.estimate_many`` over the one-(trace, vendor)-per-
+call loop, measured on a ragged fleet of >= 32 application traces x all
+vendors. Emits the ``BENCH_estimate.json`` artifact CI uploads so the perf
+trajectory of the estimation path is tracked across PRs."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ARTIFACTS, fitted_vampire, row
+from repro.core import estimate_batch, traces
+
+N_TRACES = 128
+ARTIFACT = os.path.join(ARTIFACTS, "BENCH_estimate.json")
+
+
+def _trace_fleet():
+    """>= 32 ragged app traces spanning the synthetic SPEC suite."""
+    reps = -(-N_TRACES // len(traces.SPEC_APPS))
+    apps = (traces.SPEC_APPS * reps)[:N_TRACES]
+    return [traces.app_trace(app, n_requests=140 + 12 * (i % 5))
+            for i, app in enumerate(apps)]
+
+
+def run() -> list[str]:
+    model = fitted_vampire()
+    vendors = sorted(model.by_vendor)
+    trs = _trace_fleet()
+    n_pairs = len(trs) * len(vendors)
+
+    # warm timings take the min over repeats: this box is shared, and the
+    # min is the standard estimator that rejects scheduler contention noise
+    # ---- batched: one padded TraceBatch, one dispatch --------------------
+    tb = estimate_batch.TraceBatch.from_traces(trs)
+    t0 = time.perf_counter()
+    jax.block_until_ready(model.estimate_many(tb, vendors))
+    cold_batched_s = time.perf_counter() - t0
+    batched_s = float("inf")
+    for _ in range(8):
+        t0 = time.perf_counter()
+        rep = model.estimate_many(tb, vendors)
+        jax.block_until_ready(rep)
+        batched_s = min(batched_s, time.perf_counter() - t0)
+
+    # ---- serial: one jitted program per (trace shape, vendor) ------------
+    t0 = time.perf_counter()
+    for tr in trs:                       # warm every per-shape compile
+        for v in vendors:
+            model.estimate(tr, v)
+    cold_serial_s = time.perf_counter() - t0
+    serial_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        serial = np.zeros((len(trs), len(vendors)))
+        for i, tr in enumerate(trs):
+            for j, v in enumerate(vendors):
+                serial[i, j] = float(model.estimate(tr, v).energy_pj)
+        serial_s = min(serial_s, time.perf_counter() - t0)
+
+    # the two paths must agree (the batched engine's acceptance bar)
+    np.testing.assert_allclose(np.asarray(rep.energy_pj, np.float64),
+                               serial, rtol=2e-6)
+
+    speedup = serial_s / batched_s
+    blob = {
+        "bench": "estimate",
+        "n_traces": len(trs),
+        "n_vendors": len(vendors),
+        "trace_commands_min": int(min(t.n for t in trs)),
+        "trace_commands_max": int(max(t.n for t in trs)),
+        "serial_s": serial_s,
+        "serial_cold_s": cold_serial_s,
+        "batched_s": batched_s,
+        "batched_cold_s": cold_batched_s,
+        "serial_traces_per_s": len(trs) / serial_s,
+        "batched_traces_per_s": len(trs) / batched_s,
+        "speedup_warm": speedup,
+        "speedup_cold": cold_serial_s / max(cold_batched_s, 1e-9),
+    }
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(blob, f, indent=2)
+
+    return [
+        row("estimate.serial", serial_s * 1e6,
+            f"pairs={n_pairs};traces_per_s={len(trs)/serial_s:.1f};"
+            f"cold_s={cold_serial_s:.1f}"),
+        row("estimate.batched", batched_s * 1e6,
+            f"pairs={n_pairs};traces_per_s={len(trs)/batched_s:.1f};"
+            f"speedup_vs_serial={speedup:.1f}x;"
+            f"cold_s={cold_batched_s:.1f};artifact=BENCH_estimate.json"),
+    ]

@@ -13,7 +13,8 @@ CACHE = os.path.join(ARTIFACTS, "vampire_fit.pkl")
 # written by different code or a different campaign config is refit, not
 # trusted
 FIT_KW = dict(probe_modules=5, probe_reps=128, n_rows=16)
-_CACHE_TAG = ("v2", "batched", tuple(sorted(FIT_KW.items())))
+# v3: fleet engine shares the structural feature pass across modules (PR 2)
+_CACHE_TAG = ("v3", "batched", tuple(sorted(FIT_KW.items())))
 
 _model = None
 _model_engine = None

@@ -20,6 +20,7 @@ MODULES = [
     ("encodings", "benchmarks.bench_encodings"),        # Fig 26
     ("applications", "benchmarks.bench_applications"),  # Sec 9.3 examples
     ("throughput", "benchmarks.bench_throughput"),      # ours
+    ("estimate", "benchmarks.bench_estimate"),          # ours (PR 2)
     ("roofline", "benchmarks.bench_roofline"),          # deliverable (g)
 ]
 

@@ -26,18 +26,17 @@ def main():
     vendor = 0
 
     print("== synthetic SPEC-like apps (paper Fig 26) ==")
+    tba = {app.name: traces.app_trace(app, n_requests=400)
+           for app in traces.SPEC_APPS[:8]}
+    # all 8 apps x 4 encodings scored in ONE batched dispatch
+    study = encodings.encoding_energy_study(tba, model, vendors=(vendor,))
     savings = []
-    for app in traces.SPEC_APPS[:8]:
-        tr = traces.app_trace(app, n_requests=400)
-        base = float(model.estimate(tr, vendor).energy_pj)
-        vals = []
-        for enc in ("bdi", "optimized", "owi"):
-            e = float(model.estimate(
-                encodings.encode_trace(tr, enc), vendor).energy_pj)
-            vals.append(f"{enc}={e/base:.3f}")
-        savings.append(1 - float(model.estimate(
-            encodings.encode_trace(tr, "owi"), vendor).energy_pj) / base)
-        print(f"  {app.name:12s} " + " ".join(vals))
+    for name, per_enc in study.items():
+        base = per_enc["baseline"]
+        vals = [f"{enc}={per_enc[enc]/base:.3f}"
+                for enc in ("bdi", "optimized", "owi")]
+        savings.append(1 - per_enc["owi"] / base)
+        print(f"  {name:12s} " + " ".join(vals))
     print(f"  OWI mean saving: {np.mean(savings)*100:.1f}% "
           f"(paper: 12.2%)")
 
@@ -54,9 +53,9 @@ def main():
     }
     for name, arr in corpora.items():
         tr = tensor_trace(arr)
-        base = float(model.estimate(tr, vendor).energy_pj)
-        owi = float(model.estimate(
-            encodings.encode_trace(tr, "owi"), vendor).energy_pj)
+        rep = model.estimate_many(
+            [tr, encodings.encode_trace(tr, "owi")], (vendor,))
+        base, owi = np.asarray(rep.energy_pj, np.float64)[:, 0]
         from repro.kernels.bdi.ops import compression_ratio
         lines = traces.trace_request_lines(tr)
         cr = float(compression_ratio(jnp.asarray(lines)))

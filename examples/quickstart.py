@@ -33,13 +33,11 @@ def main():
                          n_values=(0, 2, 8, 32, 128, 512, 764))
     print(res.summary())
 
-    print("== 4. energy of an app trace, per encoding ==")
+    print("== 4. energy of an app trace, per encoding (one dispatch) ==")
     tr = traces.app_trace(traces.SPEC_APPS[7], n_requests=500)  # libquantum
+    study = encodings.encoding_energy_study({"libquantum": tr}, model)
     for enc in encodings.ENCODINGS:
-        te = encodings.encode_trace(tr, enc)
-        e = np.mean([float(model.estimate(te, v).energy_pj)
-                     for v in range(3)])
-        print(f"  {enc:10s}: {e/1e6:.2f} uJ")
+        print(f"  {enc:10s}: {study['libquantum'][enc]/1e6:.2f} uJ")
 
     print("== 5. TPU/HBM adaptation: tensor read energy ==")
     import jax

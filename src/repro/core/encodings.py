@@ -150,15 +150,24 @@ def bdi_encode_lines(lines: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
 # Trace-level application
 # ---------------------------------------------------------------------------
 def encode_trace(trace: CommandTrace, encoding: str,
-                 lut: np.ndarray | None = None) -> CommandTrace:
+                 lut: np.ndarray | None = None,
+                 conform_refresh: bool = True) -> CommandTrace:
     """Rewrite RD/WR data per the encoding; optimized/owi add one cycle of
-    LUT latency to every RD/WR (Section 10.1)."""
+    LUT latency to every RD/WR (Section 10.1).
+
+    The added LUT cycles stretch the trace, which would silently push the
+    refreshes ``traces.app_trace`` scheduled past the tREFI deadline (the
+    same deadline-accounting bug class PR 1 fixed inside ``app_trace``), so
+    by default the refresh schedule is recomputed afterwards
+    (``traces.reschedule_refresh``); ``conform_refresh=False`` keeps the
+    raw stretched trace for slot-by-slot comparisons."""
     if encoding == "baseline":
         return trace
     cmd = np.asarray(trace.cmd)
     data = np.asarray(trace.data, dtype=np.uint32).copy()
     dt = np.asarray(trace.dt).copy()
     is_rw = (cmd == RD) | (cmd == WR)
+    lut_latency = False
 
     if encoding == "bdi":
         data[is_rw], _ = bdi_encode_lines(data[is_rw])
@@ -171,22 +180,37 @@ def encode_trace(trace: CommandTrace, encoding: str,
             enc[wr_mask] = invert_lines(enc[wr_mask])
         data[is_rw] = enc
         dt[is_rw] = dt[is_rw] + 1  # LUT adds one DRAM cycle
+        lut_latency = True
     else:
         raise ValueError(encoding)
 
     import jax.numpy as jnp
-    return trace._replace(data=jnp.asarray(data),
-                          dt=jnp.asarray(dt, dtype=jnp.int32))
+    out = trace._replace(data=jnp.asarray(data),
+                         dt=jnp.asarray(dt, dtype=jnp.int32))
+    if lut_latency and conform_refresh:
+        from repro.core import traces as traces_lib
+        out = traces_lib.reschedule_refresh(out)
+    return out
 
 
 def encoding_energy_study(traces_by_app: dict[str, CommandTrace],
-                          estimate_fn) -> dict[str, dict[str, float]]:
-    """For each app and encoding, total DRAM energy (pJ) via estimate_fn
-    (e.g. ``lambda tr: model.estimate(tr, vendor).energy_pj``)."""
-    out: dict[str, dict[str, float]] = {}
-    for app, tr in traces_by_app.items():
-        out[app] = {}
-        for enc in ENCODINGS:
-            t = encode_trace(tr, enc)
-            out[app][enc] = float(estimate_fn(t))
-    return out
+                          model, vendors=None
+                          ) -> dict[str, dict[str, float]]:
+    """Total DRAM energy (pJ) of every (app, encoding) pair, averaged over
+    ``vendors``, scored in ONE batched dispatch.
+
+    All ``len(traces_by_app) x 4`` encoded traces are padded into a single
+    ``estimate_batch.TraceBatch`` and the full (traces x vendors) report
+    matrix comes from one ``model.estimate_many`` call — the per-pair
+    Python-loop version dispatched (and compiled) one JAX program per
+    (app, encoding, vendor) triple."""
+    vendors = sorted(model.by_vendor) if vendors is None else list(vendors)
+    apps = list(traces_by_app)
+    encoded = [encode_trace(traces_by_app[app], enc)
+               for app in apps for enc in ENCODINGS]
+    rep = model.estimate_many(encoded, vendors)
+    energy = np.asarray(rep.energy_pj, dtype=np.float64).mean(axis=1)
+    energy = energy.reshape(len(apps), len(ENCODINGS))
+    return {app: {enc: float(energy[i, j])
+                  for j, enc in enumerate(ENCODINGS)}
+            for i, app in enumerate(apps)}

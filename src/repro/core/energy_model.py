@@ -42,8 +42,8 @@ import jax.numpy as jnp
 from repro.core import dram
 from repro.core.dram import (ACT, PRE, PREA, RD, WR, REF, PDE, PDX,
                              IL_NONE, IL_COL, IL_BANK, IL_BANKCOL,
-                             N_BANKS, TIMING, TCK_NS, VDD, CommandTrace,
-                             line_ones, popcount_u32)
+                             LINE_BITS, N_BANKS, TIMING, TCK_NS, VDD,
+                             CommandTrace, line_ones, popcount_u32)
 
 
 class PowerParams(NamedTuple):
@@ -86,6 +86,22 @@ class TraceFeatures(NamedTuple):
     row_ones: jax.Array    # (N,) int32 popcount of row addr (ACT rows)
 
 
+class StructuralFeatures(NamedTuple):
+    """The parameter-independent part of feature extraction: everything
+    derivable from the trace alone. Extracting these ONCE per trace and
+    finalizing per parameter set is what lets the batched estimation engine
+    amortize the popcount/XOR/cummax work across vendors (the only
+    param-dependent feature is the open-bank background sum)."""
+    is_rw: jax.Array         # (N,) bool
+    op: jax.Array            # (N,) int32
+    il_mode: jax.Array       # (N,) int32 in [0,4)
+    ones: jax.Array          # (N,) int32
+    toggles: jax.Array       # (N,) int32
+    open_before: jax.Array   # (N, 8) bool: bank open state before each cmd
+    powered_down: jax.Array  # (N,) bool
+    row_ones: jax.Array      # (N,) int32
+
+
 # ---------------------------------------------------------------------------
 # Vectorized feature extraction
 # ---------------------------------------------------------------------------
@@ -96,7 +112,8 @@ def _exclusive_cummax(x: jax.Array) -> jax.Array:
     return shifted
 
 
-def extract_features(trace: CommandTrace, pp: PowerParams) -> TraceFeatures:
+def extract_structural_features(trace: CommandTrace) -> StructuralFeatures:
+    """The parameter-independent feature pass (see StructuralFeatures)."""
     cmd, bank = trace.cmd, trace.bank
     n = cmd.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32)
@@ -111,9 +128,6 @@ def extract_features(trace: CommandTrace, pp: PowerParams) -> TraceFeatures:
     last_act = _exclusive_cummax(jnp.where(act_ev, idx[:, None], -1))  # (N,8)
     last_pre = _exclusive_cummax(jnp.where(pre_ev, idx[:, None], -1))
     open_before = last_act > last_pre                                  # (N,8)
-    bg_delta_sum = jnp.sum(jnp.where(open_before, pp.bank_open_delta, 0.0),
-                           axis=1)
-    open_banks = jnp.sum(open_before.astype(jnp.float32), axis=1)
 
     # ---- power-down state --------------------------------------------------
     last_pde = _exclusive_cummax(jnp.where(cmd == PDE, idx, -1))
@@ -152,8 +166,44 @@ def extract_features(trace: CommandTrace, pp: PowerParams) -> TraceFeatures:
         line_ones(jnp.bitwise_xor(trace.data, prev_data)), 0)
 
     row_ones = popcount_u32(trace.row.astype(jnp.uint32))
-    return TraceFeatures(is_rw, op, il_mode, ones, toggles,
-                         open_banks, bg_delta_sum, powered_down, row_ones)
+    return StructuralFeatures(is_rw, op, il_mode, ones, toggles,
+                              open_before, powered_down, row_ones)
+
+
+def finalize_features(sf: StructuralFeatures,
+                      pp: PowerParams) -> TraceFeatures:
+    """Attach the (cheap) parameter-dependent features to a structural
+    pass: the per-command open-bank background-current sum."""
+    bg_delta_sum = jnp.sum(jnp.where(sf.open_before, pp.bank_open_delta, 0.0),
+                           axis=1)
+    open_banks = jnp.sum(sf.open_before.astype(jnp.float32), axis=1)
+    return TraceFeatures(sf.is_rw, sf.op, sf.il_mode, sf.ones, sf.toggles,
+                         open_banks, bg_delta_sum, sf.powered_down,
+                         sf.row_ones)
+
+
+def extract_features(trace: CommandTrace, pp: PowerParams) -> TraceFeatures:
+    return finalize_features(extract_structural_features(trace), pp)
+
+
+def distribution_features(sf: StructuralFeatures, ones_frac,
+                          toggle_frac) -> StructuralFeatures:
+    """The paper's no-data-trace mode: replace the measured per-command data
+    features with expected ones/toggle fractions. First-access semantics
+    match ``extract_structural_features``: the first RD/WR on the bus has no
+    previous burst to toggle against, so its expected toggle count is 0
+    regardless of ``toggle_frac``. The single source of truth for this rule
+    — the serial and batched estimators both go through it."""
+    n = sf.is_rw.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    prev_rw = _exclusive_cummax(jnp.where(sf.is_rw, idx, -1))
+    has_prev = prev_rw >= 0
+    ones = jnp.where(sf.is_rw,
+                     jnp.asarray(ones_frac, jnp.float32) * LINE_BITS, 0.0)
+    togg = jnp.where(sf.is_rw & has_prev,
+                     jnp.asarray(toggle_frac, jnp.float32) * LINE_BITS, 0.0)
+    return sf._replace(ones=ones.astype(jnp.float32),
+                       toggles=togg.astype(jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -213,6 +263,14 @@ def _report(total_charge, total_cycles) -> EnergyReport:
     avg = total_charge / jnp.maximum(total_cycles.astype(jnp.float32), 1.0)
     return EnergyReport(total_charge, total_cycles, avg,
                         total_charge * TCK_NS * VDD, t_ns)
+
+
+def scale_report(rep: EnergyReport, factor) -> EnergyReport:
+    """Apply a multiplicative current factor to a report: charge, current,
+    and energy scale together; the trace's duration does not."""
+    return EnergyReport(rep.charge_ma_cycles * factor, rep.cycles,
+                        rep.avg_current_ma * factor, rep.energy_pj * factor,
+                        rep.time_ns)
 
 
 @functools.partial(jax.jit, static_argnames=())

@@ -1,0 +1,164 @@
+"""Batched multi-trace estimation engine (the consumer-side twin of
+``repro.core.fleet``).
+
+``fleet`` collapsed the *characterization* campaign into vmapped dispatches;
+this module does the same for the fitted model's *estimation* path, which is
+where every downstream study (encodings, validation, serving) spends its
+time once a model exists. One (trace, vendor) pair per Python call is one
+separately-dispatched, separately-compiled JAX program per trace length;
+here the whole (traces x vendors) energy-report matrix is a single jitted
+``vmap(vmap(...))`` over the shared integrator:
+
+* heterogeneous :class:`CommandTrace` lengths are NOP/dt=0-padded into one
+  fixed-shape :class:`TraceBatch` (``dram.batch_traces`` — a zero-cycle NOP
+  draws no charge and perturbs no integrator state, so padding is exact);
+* fitted per-vendor :class:`PowerParams` are stacked with
+  ``fleet.stack_params`` along a leading vendor axis;
+* :func:`batched_reports` evaluates every pair in one dispatch and returns
+  an :class:`EnergyReport` whose leaves have shape ``(traces, vendors)``;
+* :func:`batched_range_reports` additionally vmaps the per-vendor process-
+  variation band -> (lo, mean, hi) report matrices;
+* :func:`batched_distribution_reports` is the paper's no-data-trace mode
+  (caller-supplied ones/toggle fractions) over the same batch.
+
+Callers scoring the same trace set repeatedly (the serving power loop, the
+encoding study) should build the :class:`TraceBatch` once and reuse it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dram import CommandTrace, batch_traces
+from repro.core.energy_model import (EnergyReport, PowerParams, _report,
+                                     distribution_features,
+                                     extract_structural_features,
+                                     scale_report)
+from repro.core.fleet import batched_pair_totals, stack_params
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceBatch:
+    """A fixed-shape batch of command traces (leading trace axis on every
+    field) plus the validity mask that excludes padding slots."""
+    trace: CommandTrace   # (T, N) on every field
+    weight: jax.Array     # (T, N) float32: 1 for real commands, 0 for pad
+
+    @classmethod
+    def from_traces(cls, traces: Sequence[CommandTrace]) -> "TraceBatch":
+        batch, weight = batch_traces([(tr, 0) for tr in traces])
+        return cls(batch, weight)
+
+    @property
+    def n_traces(self) -> int:
+        return self.trace.cmd.shape[0]
+
+
+def as_trace_batch(traces) -> TraceBatch:
+    """Accept a prebuilt :class:`TraceBatch`, a single trace, or a sequence
+    of (ragged) traces."""
+    if isinstance(traces, TraceBatch):
+        return traces
+    if isinstance(traces, CommandTrace):
+        traces = [traces]
+    return TraceBatch.from_traces(list(traces))
+
+
+def stack_vendor_params(model, vendors: Sequence[int]) -> PowerParams:
+    """``fleet.stack_params`` over a model's fitted per-vendor params."""
+    return stack_params([model.params(v) for v in vendors])
+
+
+# ---------------------------------------------------------------------------
+# The batched dispatches
+# ---------------------------------------------------------------------------
+@jax.jit
+def batched_reports(trace: CommandTrace, weight: jax.Array,
+                    stacked: PowerParams) -> EnergyReport:
+    """Energy reports of every (trace, vendor) pair in one dispatch.
+
+    ``trace``/``weight`` are a TraceBatch's padded fields; ``stacked`` is
+    ``stack_params`` over the fitted vendor params. Returns an EnergyReport
+    whose every leaf has shape (traces, vendors); the charge/cycle core is
+    ``fleet.batched_pair_totals``, shared with the campaign engine."""
+    def one_trace(tr: CommandTrace, w: jax.Array):
+        return batched_pair_totals(tr, w, extract_structural_features(tr),
+                                   stacked)
+
+    charge, cycles = jax.vmap(one_trace)(trace, weight)   # (T, V), (T,)
+    return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))
+
+
+@jax.jit
+def batched_range_reports(trace: CommandTrace, weight: jax.Array,
+                          stacked: PowerParams, band: jax.Array
+                          ) -> tuple[EnergyReport, EnergyReport, EnergyReport]:
+    """(lo, mean, hi) report matrices across the per-vendor process-variation
+    band. ``band`` is a float32 (vendors, 2) array of multiplicative
+    (lo, hi) factors, broadcast over the (traces, vendors) matrix inside the
+    same dispatch rather than applied to a scalar current after the fact,
+    so *every* report field (charge, current, energy) carries the band."""
+    mean = batched_reports(trace, weight, stacked)
+    lo = scale_report(mean, band[None, :, 0])   # (1, V) over the trace axis
+    hi = scale_report(mean, band[None, :, 1])
+    return lo, mean, hi
+
+
+@jax.jit
+def batched_distribution_reports(trace: CommandTrace, weight: jax.Array,
+                                 stacked: PowerParams, ones_frac: jax.Array,
+                                 toggle_frac: jax.Array) -> EnergyReport:
+    """No-data-trace mode over the batch: expected ones/toggle fractions
+    replace the per-command data features (paper Section 9.2 fallback).
+
+    ``ones_frac``/``toggle_frac`` broadcast per trace: scalars or (T,)
+    arrays. First-access semantics match ``extract_features``: the first
+    RD/WR on the bus has no previous burst, so its expected toggles are 0.
+    """
+    ones_frac = jnp.broadcast_to(jnp.asarray(ones_frac, jnp.float32),
+                                 (trace.cmd.shape[0],))
+    toggle_frac = jnp.broadcast_to(jnp.asarray(toggle_frac, jnp.float32),
+                                   (trace.cmd.shape[0],))
+
+    def one_trace(tr: CommandTrace, w, of, tf):
+        sf = distribution_features(extract_structural_features(tr), of, tf)
+        return batched_pair_totals(tr, w, sf, stacked)
+
+    charge, cycles = jax.vmap(one_trace)(trace, weight, ones_frac,
+                                         toggle_frac)
+    return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))
+
+
+# ---------------------------------------------------------------------------
+# Model-level entry points (used by Vampire.estimate_many & friends)
+# ---------------------------------------------------------------------------
+def estimate_many(model, traces, vendors: Sequence[int] | None = None
+                  ) -> EnergyReport:
+    """The full (traces x vendors) energy-report matrix in one dispatch."""
+    vendors = sorted(model.by_vendor) if vendors is None else list(vendors)
+    tb = as_trace_batch(traces)
+    return batched_reports(tb.trace, tb.weight,
+                           stack_vendor_params(model, vendors))
+
+
+def estimate_range_many(model, traces, vendors: Sequence[int] | None = None
+                        ) -> tuple[EnergyReport, EnergyReport, EnergyReport]:
+    vendors = sorted(model.by_vendor) if vendors is None else list(vendors)
+    tb = as_trace_batch(traces)
+    band = jnp.asarray([model.variation_band[v] for v in vendors],
+                       jnp.float32)
+    return batched_range_reports(tb.trace, tb.weight,
+                                 stack_vendor_params(model, vendors), band)
+
+
+def estimate_distribution_many(model, traces, vendors=None, *,
+                               ones_frac, toggle_frac) -> EnergyReport:
+    vendors = sorted(model.by_vendor) if vendors is None else list(vendors)
+    tb = as_trace_batch(traces)
+    return batched_distribution_reports(
+        tb.trace, tb.weight, stack_vendor_params(model, vendors),
+        jnp.asarray(ones_frac, jnp.float32),
+        jnp.asarray(toggle_frac, jnp.float32))

@@ -30,7 +30,8 @@ import numpy as np
 from repro.core import device_sim
 from repro.core.dram import CommandTrace, batch_traces
 from repro.core.energy_model import (PowerParams, charge_from_features,
-                                     extract_features)
+                                     extract_structural_features,
+                                     finalize_features)
 
 
 def stack_params(params: Sequence[PowerParams]) -> PowerParams:
@@ -61,6 +62,23 @@ class ProbeBatch:
         return cls(trace, weight, np.asarray([p.key for p in points]))
 
 
+def batched_pair_totals(tr: CommandTrace, w: jax.Array, sf,
+                        stacked: PowerParams):
+    """The shared core of both batched engines (campaign measurement here,
+    model estimation in ``repro.core.estimate_batch``): one padded item's
+    (per-paramset masked charge, masked cycles). The parameter-independent
+    structural pass ``sf`` ran ONCE for the item; only the open-bank
+    background finalize + charge accumulation is vmapped over the stacked
+    parameter sets."""
+    cycles = jnp.sum(tr.dt * w.astype(jnp.int32), dtype=jnp.int32)
+
+    def one_paramset(pp: PowerParams):
+        charges = charge_from_features(tr, finalize_features(sf, pp), pp)
+        return jnp.sum(charges * w)
+
+    return jax.vmap(one_paramset)(stacked), cycles
+
+
 @jax.jit
 def fleet_measure_current(trace: CommandTrace, weight: jax.Array,
                           stacked: PowerParams) -> jax.Array:
@@ -68,18 +86,13 @@ def fleet_measure_current(trace: CommandTrace, weight: jax.Array,
 
     ``trace``/``weight`` are a ProbeBatch's padded fields; ``stacked`` is
     ``stack_params`` over the fleet. Returns a float32 (modules, probes)
-    matrix. The probe batch is broadcast (not sliced) across the module
-    vmap; feature extraction still runs per module because it depends on
-    the per-module params.
-    """
-    def one_probe(tr: CommandTrace, w: jax.Array, pp: PowerParams):
-        feats = extract_features(tr, pp)
-        charges = charge_from_features(tr, feats, pp)
-        cycles = jnp.sum(tr.dt.astype(jnp.float32) * w)
-        return jnp.sum(charges * w) / jnp.maximum(cycles, 1.0)
+    matrix."""
+    def one_probe(tr: CommandTrace, w: jax.Array):
+        charge, cycles = batched_pair_totals(
+            tr, w, extract_structural_features(tr), stacked)
+        return charge / jnp.maximum(cycles.astype(jnp.float32), 1.0)
 
-    per_module = jax.vmap(one_probe, in_axes=(0, 0, None))
-    return jax.vmap(lambda pp: per_module(trace, weight, pp))(stacked)
+    return jax.vmap(one_probe)(trace, weight).T  # -> (modules, probes)
 
 
 def run_probes(modules, points: Sequence[ProbePoint], *,

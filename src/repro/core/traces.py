@@ -221,6 +221,115 @@ def app_trace(app: AppSpec, n_requests: int = 2000,
                            np.stack(datas).astype(np.uint32), dts)
 
 
+def reschedule_refresh(trace: CommandTrace,
+                       period: int = _T.tREFI) -> CommandTrace:
+    """Re-place the PREA+REF refresh pairs of a trace so every refresh
+    interval meets the ``period`` deadline under the trace's *current* dts.
+
+    Trace transforms that stretch command slots (e.g. the encoding LUT
+    latency, Section 10.1) push the refreshes ``app_trace`` scheduled past
+    the tREFI deadline — the same deadline-accounting bug class PR 1 fixed
+    inside ``app_trace`` itself. This pass rebuilds the schedule with the
+    generator's own rule: strip the existing PREA+REF pairs, walk the
+    commands counting every slot's dt, refresh after the RD/WR that crosses
+    the deadline, and lazily re-ACT banks the moved refresh closed (with a
+    PRE first when a different row is open). RD/WR order, data, and slot
+    durations are preserved; traces without REF pass through unchanged.
+    """
+    cmd = np.asarray(trace.cmd)
+    if not (cmd == REF).any():
+        return trace
+    data = np.asarray(trace.data, dtype=np.uint32)
+    n = len(cmd)
+
+    keep = np.ones(n, dtype=bool)
+    keep[cmd == REF] = False
+    prea_before_ref = np.flatnonzero((cmd[:-1] == dram.PREA)
+                                     & (cmd[1:] == REF))
+    keep[prea_before_ref] = False
+
+    # plain-int working lists: the walk is a Python loop, so per-element
+    # numpy scalar access would dominate its cost; data lines are carried
+    # as source-row indices and gathered once at the end
+    kept = np.flatnonzero(keep)
+    cmd_l = cmd[kept].tolist()
+    bank_l = np.asarray(trace.bank)[kept].tolist()
+    row_l = np.asarray(trace.row)[kept].tolist()
+    col_l = np.asarray(trace.col)[kept].tolist()
+    dt_l = np.asarray(trace.dt)[kept].tolist()
+    src_l = kept.tolist()
+
+    cmds, banks, rows, cols, srcs, dts = [], [], [], [], [], []
+    open_row = [-1] * N_BANKS
+    since = 0
+
+    def emit(c, b, r, co, src, t):
+        nonlocal since
+        cmds.append(c); banks.append(b); rows.append(r)
+        cols.append(co); srcs.append(src); dts.append(t)
+        since += t
+
+    for k in range(len(cmd_l)):
+        c = cmd_l[k]
+        b = bank_l[k]
+        r = row_l[k]
+        if (c == RD or c == WR) and open_row[b] != r:
+            # the moved refresh closed this bank (or another row is open)
+            if open_row[b] >= 0:
+                emit(PRE, b, 0, 0, -1, _T.tRP)
+            emit(ACT, b, r, 0, -1, _T.tRCD)
+            open_row[b] = r
+        if c == ACT:
+            if open_row[b] == r:
+                continue  # bank already open at this row: redundant
+            if open_row[b] >= 0:
+                emit(PRE, b, 0, 0, -1, _T.tRP)
+            open_row[b] = r
+        elif c == PRE:
+            open_row[b] = -1
+        elif c == dram.PREA:
+            open_row = [-1] * N_BANKS
+        emit(c, b, r, col_l[k], src_l[k], dt_l[k])
+        if (c == RD or c == WR) and since >= period:
+            emit(dram.PREA, 0, 0, 0, -1, _T.tRP)
+            emit(REF, 0, 0, 0, -1, _T.tRFC)
+            open_row = [-1] * N_BANKS
+            since = 0
+
+    src = np.asarray(srcs)
+    out_data = np.zeros((len(src), LINE_WORDS), dtype=np.uint32)
+    has_data = src >= 0
+    out_data[has_data] = data[src[has_data]]
+    # hand make_trace numpy arrays: jnp.asarray on a large Python list
+    # walks it element by element and would dominate the whole pass
+    return dram.make_trace(np.asarray(cmds, np.int32),
+                           np.asarray(banks, np.int32),
+                           np.asarray(rows, np.int32),
+                           np.asarray(cols, np.int32), out_data,
+                           dts=np.asarray(dts, np.int32))
+
+
+def refresh_deadline_overshoot(trace: CommandTrace,
+                               period: int = _T.tREFI) -> int:
+    """Worst-case cycles by which any refresh interval of the trace exceeds
+    the scheduling deadline (counted exactly as ``app_trace`` counts it: the
+    PREA+REF slots start a new interval). <= the final slot's dt when the
+    schedule conforms; large when refreshes have drifted."""
+    cmd = np.asarray(trace.cmd)
+    dt = np.asarray(trace.dt, dtype=np.int64)
+    worst = 0
+    since = 0
+    for i in range(len(cmd)):
+        if cmd[i] == REF:
+            worst = max(worst, since - period)
+            since = 0
+            continue
+        if cmd[i] == dram.PREA and i + 1 < len(cmd) and cmd[i + 1] == REF:
+            continue  # the refresh pair's own slots open the next interval
+        since += int(dt[i])
+    return int(max(worst, since - period))
+
+
 def trace_request_lines(trace: CommandTrace) -> np.ndarray:
     """The (n_rw, 16) data lines of the RD/WR commands in a trace."""
     cmd = np.asarray(trace.cmd)

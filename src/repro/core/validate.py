@@ -5,6 +5,12 @@ with n in [0, 764], data 0xAA, bank 0 / row 128, column-interleaved — on a
 randomly selected subset of modules (8 from Vendor A, 7 from B, 7 from C),
 and reports the mean absolute percentage error (MAPE) of VAMPIRE, DRAMPower,
 and the Micron power model against the 'measured' current.
+
+Both sides of the comparison go through the batched engines: the VAMPIRE
+predictions for the whole (sweep x vendor) grid are ONE
+``model.estimate_many`` dispatch (``repro.core.estimate_batch``), and the
+fleet's ground-truth measurements are one padded probe batch through
+``fleet.run_probes`` with stable per-sweep noise keys.
 """
 from __future__ import annotations
 
@@ -13,6 +19,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import baselines_power, device_sim, idd_loops
+from repro.core import fleet as fleet_lib
 from repro.core import params as P
 from repro.core.vampire import Vampire
 
@@ -20,6 +27,11 @@ from repro.core.vampire import Vampire
 N_READS = (0, 1, 2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 24, 32, 48, 64, 96, 128,
            192, 256, 382, 512, 764)
 VALIDATION_COUNTS = {0: 8, 1: 7, 2: 7}  # modules per vendor (paper Sec 9.1)
+
+# noise-key base for the validation sweeps: disjoint from the campaign's
+# IDD (0+) and probe (4096+) key ranges so validation measurements never
+# reuse a campaign measurement's noise draw
+_VALIDATION_KEY_BASE = 1 << 14
 
 
 @dataclasses.dataclass
@@ -39,12 +51,13 @@ class ValidationResult:
         return "\n".join(lines)
 
 
-def select_validation_modules(fleet=None, seed: int = 42):
-    fleet = device_sim.make_fleet() if fleet is None else fleet
+def select_validation_modules(fleet_modules=None, seed: int = 42):
+    fleet_modules = (device_sim.make_fleet() if fleet_modules is None
+                     else fleet_modules)
     rng = np.random.default_rng(seed)
     chosen = []
     for v, k in VALIDATION_COUNTS.items():
-        mods = device_sim.vendor_modules(fleet, v)
+        mods = device_sim.vendor_modules(fleet_modules, v)
         k = min(k, len(mods))
         idx = rng.choice(len(mods), size=k, replace=False)
         chosen += [mods[i] for i in idx]
@@ -56,25 +69,37 @@ def run_validation(model: Vampire, fleet=None, n_values=N_READS,
     modules = select_validation_modules(fleet, seed=seed)
     ds = {v: model.by_vendor[v].idd_datasheet for v in model.by_vendor}
 
-    traces = {n: idd_loops.validation_sweep(n) for n in n_values}
+    n_values = list(n_values)
+    sweeps = [idd_loops.validation_sweep(n) for n in n_values]
+    vendors = sorted({m.spec.vendor for m in modules})
+
+    # ---- VAMPIRE: the whole (sweep x vendor) grid in one dispatch --------
+    vamp = np.asarray(
+        model.estimate_many(sweeps, vendors).avg_current_ma, np.float64)
+
     preds = {name: {} for name in ("vampire", "drampower", "micron")}
+    for j, v in enumerate(vendors):
+        for i, n in enumerate(n_values):
+            preds["vampire"][(v, n)] = float(vamp[i, j])
+            preds["drampower"][(v, n)] = float(
+                baselines_power.drampower(sweeps[i], ds[v]).avg_current_ma)
+            preds["micron"][(v, n)] = float(
+                baselines_power.micron_power(sweeps[i], ds[v])
+                .avg_current_ma)
+
+    # ---- ground truth: one padded probe batch over the held-out modules --
+    points = [fleet_lib.ProbePoint(("validation", n), tr, 0,
+                                   _VALIDATION_KEY_BASE + i)
+              for i, (n, tr) in enumerate(zip(n_values, sweeps))]
+    measured_mat = fleet_lib.run_probes(modules, points, engine="batched")
+
     raw = {}
     errs: dict[str, dict[int, list[float]]] = {
         name: {0: [], 1: [], 2: []} for name in preds}
-
-    for v in sorted({m.spec.vendor for m in modules}):
-        for n, tr in traces.items():
-            preds["vampire"][(v, n)] = float(
-                model.estimate(tr, v).avg_current_ma)
-            preds["drampower"][(v, n)] = float(
-                baselines_power.drampower(tr, ds[v]).avg_current_ma)
-            preds["micron"][(v, n)] = float(
-                baselines_power.micron_power(tr, ds[v]).avg_current_ma)
-
-    for m in modules:
+    for mi, m in enumerate(modules):
         v = m.spec.vendor
-        for n, tr in traces.items():
-            measured = m.measure_current(tr)
+        for i, n in enumerate(n_values):
+            measured = float(measured_mat[mi, i])
             raw[(v, m.spec.module_id, n)] = {
                 "measured": measured,
                 **{name: preds[name][(v, n)] for name in preds}}

@@ -5,15 +5,31 @@ Public API
 ----------
 ``Vampire.fit(fleet)``        run the campaign and build the model
 ``model.estimate(trace, vendor)``           EnergyReport (mean module)
-``model.estimate_range(trace, vendor)``     (lo, mean, hi) across process
-                                            variation captured per vendor
+``model.estimate_range(trace, vendor)``     (lo, mean, hi) EnergyReports
+                                            across the process variation
+                                            captured per vendor
 ``model.estimate_distribution(trace, vendor, ones_frac, toggle_frac)``
     the paper's no-data-trace mode: the caller supplies a distribution of
     ones / toggling instead of actual 64-byte values.
 
-Implementations: ``impl='vectorized'`` (production), ``impl='scan'``
-(oracle), ``impl='kernel'`` (Pallas-fused per-command energy; see
-``repro.kernels.vampire_energy``).
+Batched API (the production estimation path; see
+``repro.core.estimate_batch``) — each evaluates the full
+(traces x vendors) matrix in ONE jitted dispatch over NOP/dt=0-padded
+traces, with every report leaf shaped ``(traces, vendors)``:
+
+``model.estimate_many(traces, vendors)``          EnergyReport matrix
+``model.estimate_range_many(traces, vendors)``    (lo, mean, hi) matrices,
+    the variation band vmapped across the same dispatch
+``model.estimate_distribution_many(traces, vendors, ones_frac=, toggle_frac=)``
+    batched no-data-trace mode (fractions scalar or per trace)
+
+``traces`` may be a single trace, a sequence of ragged traces, or a
+prebuilt ``estimate_batch.TraceBatch`` (reuse one when scoring the same
+set repeatedly — padding is then paid once).
+
+Per-trace implementations: ``impl='vectorized'`` (production),
+``impl='scan'`` (oracle), ``impl='kernel'`` (Pallas-fused per-command
+energy; see ``repro.kernels.vampire_energy``).
 """
 from __future__ import annotations
 
@@ -24,12 +40,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import characterize, device_sim
-from repro.core.dram import LINE_BITS, RD, WR, CommandTrace
+from repro.core.dram import CommandTrace
 from repro.core.energy_model import (EnergyReport, PowerParams,
-                                     charge_from_features, extract_features,
+                                     charge_from_features,
+                                     distribution_features,
+                                     extract_structural_features,
+                                     finalize_features, scale_report,
                                      trace_energy_scan,
-                                     trace_energy_vectorized,
-                                     _exclusive_cummax, _report)
+                                     trace_energy_vectorized, _report)
 
 
 @dataclasses.dataclass
@@ -77,11 +95,44 @@ class Vampire:
             return vops.trace_energy_kernel(trace, pp)
         raise ValueError(impl)
 
-    def estimate_range(self, trace: CommandTrace, vendor: int):
-        rep = self.estimate(trace, vendor)
+    def estimate_range(self, trace: CommandTrace, vendor: int,
+                       impl: str = "vectorized"
+                       ) -> tuple[EnergyReport, EnergyReport, EnergyReport]:
+        """(lo, mean, hi) EnergyReports across the vendor's process-variation
+        band. The band is a multiplicative current factor, so charge and
+        energy carry it too — callers comparing *energy* (e.g. the encoding
+        study) see the same relative band as callers comparing current."""
+        rep = self.estimate(trace, vendor, impl)
         lo, hi = self.variation_band[vendor]
-        return (float(rep.avg_current_ma) * lo, float(rep.avg_current_ma),
-                float(rep.avg_current_ma) * hi)
+        return scale_report(rep, lo), rep, scale_report(rep, hi)
+
+    # -------------------------------------------------------- batched path
+    def estimate_many(self, traces, vendors=None) -> EnergyReport:
+        """Energy reports for every (trace, vendor) pair in ONE dispatch.
+
+        ``traces``: a sequence of (ragged) traces, a single trace, or a
+        prebuilt ``estimate_batch.TraceBatch``; ``vendors`` defaults to all
+        fitted vendors. Every leaf of the returned report has shape
+        ``(len(traces), len(vendors))``."""
+        from repro.core import estimate_batch
+        return estimate_batch.estimate_many(self, traces, vendors)
+
+    def estimate_range_many(self, traces, vendors=None
+                            ) -> tuple[EnergyReport, EnergyReport,
+                                       EnergyReport]:
+        """Batched ``estimate_range``: (lo, mean, hi) report matrices with
+        the per-vendor variation band vmapped over the dispatch."""
+        from repro.core import estimate_batch
+        return estimate_batch.estimate_range_many(self, traces, vendors)
+
+    def estimate_distribution_many(self, traces, vendors=None, *,
+                                   ones_frac, toggle_frac) -> EnergyReport:
+        """Batched no-data-trace mode; fractions are scalars or per-trace
+        arrays."""
+        from repro.core import estimate_batch
+        return estimate_batch.estimate_distribution_many(
+            self, traces, vendors, ones_frac=ones_frac,
+            toggle_frac=toggle_frac)
 
     def estimate_distribution(self, trace: CommandTrace, vendor: int,
                               ones_frac: float, toggle_frac: float
@@ -89,21 +140,9 @@ class Vampire:
         """Traces without data values: approximate data dependency with a
         user-supplied expected fraction of ones and of toggling wires."""
         pp = self.params(vendor)
-        feats = extract_features(trace, pp)
-        is_rw = feats.is_rw
-        n = trace.cmd.shape[0]
-        # match extract_features' first-access handling: the first RD/WR on
-        # the bus has no previous burst to toggle against, so its expected
-        # toggle count is 0 regardless of toggle_frac
-        idx = jnp.arange(n, dtype=jnp.int32)
-        prev_rw = _exclusive_cummax(jnp.where(is_rw, idx, -1))
-        has_prev = prev_rw >= 0
-        ones = jnp.where(is_rw, jnp.asarray(ones_frac * LINE_BITS), 0.0)
-        togg = jnp.where(is_rw & has_prev,
-                         jnp.asarray(toggle_frac * LINE_BITS), 0.0)
-        feats = feats._replace(ones=ones.astype(jnp.float32),
-                               toggles=togg.astype(jnp.float32))
-        charges = charge_from_features(trace, feats, pp)
+        sf = distribution_features(extract_structural_features(trace),
+                                   ones_frac, toggle_frac)
+        charges = charge_from_features(trace, finalize_features(sf, pp), pp)
         return _report(jnp.sum(charges), trace.total_cycles())
 
     # ------------------------------------------------------------------ io

@@ -101,10 +101,14 @@ class Cell:
     kind: str
 
 
-def _shard(mesh, spec_tree):
+def shard_tree(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (shared with serve.py)."""
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+_shard = shard_tree  # internal alias used below
 
 
 def _with_sharding(sds_tree, shard_tree):

@@ -132,7 +132,11 @@ def test_vampire_save_load_roundtrip(quick_vampire, tmp_path):
         np.testing.assert_allclose(
             float(loaded.estimate(tr, v).avg_current_ma),
             float(quick_vampire.estimate(tr, v).avg_current_ma), rtol=1e-6)
-        assert loaded.estimate_range(tr, v) == \
-            quick_vampire.estimate_range(tr, v)
+        for a, b in zip(loaded.estimate_range(tr, v),
+                        quick_vampire.estimate_range(tr, v)):
+            np.testing.assert_allclose(float(a.energy_pj),
+                                       float(b.energy_pj), rtol=1e-6)
+            np.testing.assert_allclose(float(a.avg_current_ma),
+                                       float(b.avg_current_ma), rtol=1e-6)
         assert loaded.by_vendor[v].idd_datasheet == \
             quick_vampire.by_vendor[v].idd_datasheet

@@ -162,6 +162,27 @@ def test_train_loss_decreases():
     assert last < first
 
 
+# ------------------------------------------------------------------ serve
+def test_serve_smoke_with_power_report(quick_vampire, tmp_path):
+    """Serving end-to-end: mesh-sharded params/caches, temperature sampling,
+    and the power-report mode feeding decode HBM traffic through
+    estimate_many (the module's long-promised 'HBM energy estimates')."""
+    from repro.launch.serve import ServeJob, run
+    fit = str(tmp_path / "fit.pkl")
+    quick_vampire.save(fit)
+    res = run(ServeJob(arch="qwen2.5-3b", smoke=True, batch=2, prompt_len=8,
+                       decode_tokens=4, data=1, model=1, temperature=0.7,
+                       power_report=True, vampire_path=fit))
+    assert res["tokens"].shape == (2, 4)
+    pw = res["power"]
+    assert pw["traffic_bytes_per_step"] > 0
+    # one report per (sequence, vendor), all positive
+    assert pw["ddr_energy_pj_per_seq_step"].shape == (2, 3)
+    assert (pw["ddr_energy_pj_per_seq_step"] > 0).all()
+    assert pw["hbm_step_energy_uj"] > 0
+    assert 0.0 <= pw["hbm_ones_frac"] <= 1.0
+
+
 # ---------------------------------------------------------------- elastic
 def test_reshard_plan_reports_fallbacks():
     from repro.launch.mesh import make_local_mesh

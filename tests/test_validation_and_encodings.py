@@ -26,7 +26,13 @@ def test_vampire_range_covers_mean(quick_vampire):
     from repro.core import idd_loops
     tr = idd_loops.validation_sweep(16)
     lo, mid, hi = quick_vampire.estimate_range(tr, 0)
-    assert lo < mid < hi
+    assert float(lo.avg_current_ma) < float(mid.avg_current_ma) \
+        < float(hi.avg_current_ma)
+    # the bugfix: the band reaches *energy* (and charge), not just current
+    assert float(lo.energy_pj) < float(mid.energy_pj) < float(hi.energy_pj)
+    assert float(lo.charge_ma_cycles) < float(hi.charge_ma_cycles)
+    # duration is not a process-variation quantity
+    assert int(lo.cycles) == int(mid.cycles) == int(hi.cycles)
 
 
 def test_distribution_mode_close_to_data_mode(quick_vampire):
@@ -84,10 +90,70 @@ def test_encode_trace_adds_latency_for_lut_encodings():
     app = traces.SPEC_APPS[0]
     tr = traces.app_trace(app, n_requests=100)
     t_opt = encodings.encode_trace(tr, "optimized")
-    import numpy as np
-    rw = (np.asarray(tr.cmd) == RD) | (np.asarray(tr.cmd) == WR)
-    assert (np.asarray(t_opt.dt)[rw] == np.asarray(tr.dt)[rw] + 1).all()
+    rw_o = np.isin(np.asarray(tr.cmd), (RD, WR))
+    rw_e = np.isin(np.asarray(t_opt.cmd), (RD, WR))
+    # rescheduling preserves RD/WR count and order; each slot gains 1 cycle
+    assert rw_o.sum() == rw_e.sum()
+    assert (np.asarray(t_opt.dt)[rw_e] == np.asarray(tr.dt)[rw_o] + 1).all()
     assert int(t_opt.total_cycles()) > int(tr.total_cycles())
+
+
+def test_encode_trace_conforms_refresh_deadline():
+    """The LUT latency must not push the scheduled refreshes past tREFI
+    (the PR-1 deadline-accounting bug class, on the encoding side)."""
+    from repro.core import dram
+    t = dram.TIMING
+    app = traces.SPEC_APPS[7]  # libquantum: dense bursts -> max drift
+    tr = traces.app_trace(app, n_requests=3000)
+    raw = encodings.encode_trace(tr, "owi", conform_refresh=False)
+    fixed = encodings.encode_trace(tr, "owi")
+    slack = 2 * max(t.tBURST + 1, t.tRCD + t.tRP)  # <= one slot's overshoot
+    assert traces.refresh_deadline_overshoot(raw) > \
+        traces.refresh_deadline_overshoot(tr) + 64   # the bug, visible
+    assert traces.refresh_deadline_overshoot(fixed) <= \
+        traces.refresh_deadline_overshoot(tr) + slack
+    # same REF density bound app_trace itself honors
+    total = int(np.asarray(fixed.dt, dtype=np.int64).sum())
+    n_ref = int((np.asarray(fixed.cmd) == dram.REF).sum())
+    assert n_ref >= 0.8 * total / (t.tREFI + t.tRP + t.tRFC)
+
+
+def test_encoded_trace_keeps_row_state_valid():
+    """After rescheduling, every RD/WR must still target the open row."""
+    from repro.core import dram
+    tr = traces.app_trace(traces.SPEC_APPS[3], n_requests=1500)  # low hit
+    enc = encodings.encode_trace(tr, "optimized")
+    cmd = np.asarray(enc.cmd); bank = np.asarray(enc.bank)
+    row = np.asarray(enc.row)
+    open_row = {b: None for b in range(8)}
+    for i in range(len(cmd)):
+        c = cmd[i]
+        if c == dram.ACT:
+            open_row[bank[i]] = row[i]
+        elif c == dram.PRE:
+            open_row[bank[i]] = None
+        elif c in (dram.REF, dram.PREA):
+            open_row = {b: None for b in range(8)}
+        elif c in (RD, WR):
+            assert open_row[bank[i]] == row[i], i
+    for op in (RD, WR):
+        assert (np.asarray(tr.cmd) == op).sum() == (cmd == op).sum()
+
+
+def test_encoding_energy_study_batched_matches_serial(quick_vampire):
+    """One estimate_many dispatch must score the apps x encodings grid the
+    way the per-(app, encoding, vendor) Python loop would."""
+    tba = {a.name: traces.app_trace(a, n_requests=150)
+           for a in traces.SPEC_APPS[:3]}
+    vendors = (0, 2)
+    study = encodings.encoding_energy_study(tba, quick_vampire, vendors)
+    for app, tr in tba.items():
+        for enc in encodings.ENCODINGS:
+            te = encodings.encode_trace(tr, enc)
+            serial = np.mean([float(quick_vampire.estimate(te, v).energy_pj)
+                              for v in vendors])
+            np.testing.assert_allclose(study[app][enc], serial, rtol=2e-6,
+                                       err_msg=f"{app}/{enc}")
 
 
 def test_owi_write_data_is_inverted_optimized():
@@ -97,12 +163,12 @@ def test_owi_write_data_is_inverted_optimized():
         encodings.byte_histogram(traces.trace_request_lines(tr)))
     t_opt = encodings.encode_trace(tr, "optimized", lut=lut)
     t_owi = encodings.encode_trace(tr, "owi", lut=lut)
-    cmd = np.asarray(tr.cmd)
-    wr = cmd == WR
-    rd = cmd == RD
-    assert (np.asarray(t_owi.data)[wr]
-            == np.asarray(~np.asarray(t_opt.data))[wr]).all()
-    assert (np.asarray(t_owi.data)[rd] == np.asarray(t_opt.data)[rd]).all()
+
+    def op_data(t, op):
+        return np.asarray(t.data)[np.asarray(t.cmd) == op]
+
+    assert (op_data(t_owi, WR) == ~op_data(t_opt, WR)).all()
+    assert (op_data(t_owi, RD) == op_data(t_opt, RD)).all()
 
 
 def test_app_traces_row_state_machine():
