@@ -1,8 +1,9 @@
 """Serial vs batched estimation throughput (ours): the runtime-estimation
-dispatch win of ``Vampire.estimate_many`` over the one-(trace, vendor)-per-
-call loop, measured on a ragged fleet of >= 32 application traces x all
-vendors. Emits the ``BENCH_estimate.json`` artifact CI uploads so the perf
-trajectory of the estimation path is tracked across PRs."""
+dispatch win of the unified ``model.estimate`` matrix path over the
+one-(trace, vendor)-per-call loop, measured on a ragged fleet of >= 32
+application traces x all vendors. Emits the ``BENCH_estimate.json``
+artifact CI uploads so the perf trajectory of the estimation path is
+tracked across PRs."""
 from __future__ import annotations
 
 import json
@@ -14,6 +15,7 @@ import numpy as np
 
 from benchmarks.common import ARTIFACTS, fitted_vampire, row
 from repro.core import estimate_batch, traces
+from repro.core.energy_model import trace_energy_vectorized
 
 N_TRACES = 128
 ARTIFACT = os.path.join(ARTIFACTS, "BENCH_estimate.json")
@@ -29,7 +31,7 @@ def _trace_fleet():
 
 def run() -> list[str]:
     model = fitted_vampire()
-    vendors = sorted(model.by_vendor)
+    vendors = list(model.vendors)
     trs = _trace_fleet()
     n_pairs = len(trs) * len(vendors)
 
@@ -38,20 +40,26 @@ def run() -> list[str]:
     # ---- batched: one padded TraceBatch, one dispatch --------------------
     tb = estimate_batch.TraceBatch.from_traces(trs)
     t0 = time.perf_counter()
-    jax.block_until_ready(model.estimate_many(tb, vendors))
+    jax.block_until_ready(model.estimate(tb, vendors))
     cold_batched_s = time.perf_counter() - t0
     batched_s = float("inf")
     for _ in range(8):
         t0 = time.perf_counter()
-        rep = model.estimate_many(tb, vendors)
+        rep = model.estimate(tb, vendors)
         jax.block_until_ready(rep)
         batched_s = min(batched_s, time.perf_counter() - t0)
 
-    # ---- serial: one jitted program per (trace shape, vendor) ------------
+    # ---- serial: one jitted program per (trace shape, vendor), through
+    # the INDEPENDENT per-trace integrator (trace_energy_vectorized), so
+    # the agreement assert below still cross-checks the batched engine
+    # against a different code path (the pre-batching reference)
+    def serial_one(tr, v):
+        return trace_energy_vectorized(tr, model.params(v))
+
     t0 = time.perf_counter()
     for tr in trs:                       # warm every per-shape compile
         for v in vendors:
-            model.estimate(tr, v)
+            serial_one(tr, v)
     cold_serial_s = time.perf_counter() - t0
     serial_s = float("inf")
     for _ in range(3):
@@ -59,7 +67,7 @@ def run() -> list[str]:
         serial = np.zeros((len(trs), len(vendors)))
         for i, tr in enumerate(trs):
             for j, v in enumerate(vendors):
-                serial[i, j] = float(model.estimate(tr, v).energy_pj)
+                serial[i, j] = float(serial_one(tr, v).energy_pj)
         serial_s = min(serial_s, time.perf_counter() - t0)
 
     # the two paths must agree (the batched engine's acceptance bar)

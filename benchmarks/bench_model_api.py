@@ -1,0 +1,121 @@
+"""Unified-protocol dispatch overhead (ours, PR 3): what the model-API
+redesign buys per call.
+
+Two comparisons, emitted to ``artifacts/BENCH_model_api.json`` (uploaded
+by CI like ``BENCH_estimate.json``):
+
+* ``old_path`` vs ``unified``: the pre-redesign per-call pipeline re-padded
+  the trace set and re-stacked the per-vendor ``PowerParams`` pytree on
+  EVERY ``estimate_many`` call; the unified ``model.estimate`` stacks once
+  at fit time and memoizes the padding, so the per-call overhead is one
+  dict lookup.  Same jitted engine underneath — the delta is pure API tax.
+* ``baseline_serial`` vs ``baseline_batched``: the pre-redesign
+  ``validate.py`` scored Micron/DRAMPower with a per-(sweep, vendor)
+  Python loop of tiny JAX programs; the protocol baselines score the whole
+  grid in one vmapped dispatch over the shared structural-feature pass.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ARTIFACTS, fitted_vampire, row
+from repro.core import baselines_power, estimate_batch, traces
+from repro.core.fleet import stack_params
+
+N_TRACES = 36
+N_REPEATS = 12
+ARTIFACT = os.path.join(ARTIFACTS, "BENCH_model_api.json")
+
+
+def _trace_fleet():
+    reps = -(-N_TRACES // len(traces.SPEC_APPS))
+    apps = (traces.SPEC_APPS * reps)[:N_TRACES]
+    return [traces.app_trace(app, n_requests=120 + 10 * (i % 4))
+            for i, app in enumerate(apps)]
+
+
+def _best_of(fn, n=N_REPEATS) -> float:
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[str]:
+    model = fitted_vampire()
+    vendors = list(model.vendors)
+    trs = _trace_fleet()
+
+    # ---- old per-call pipeline: re-pad + re-stack on every call ----------
+    def old_path():
+        tb = estimate_batch.TraceBatch.from_traces(trs)
+        stacked = stack_params([model.params(v) for v in vendors])
+        return estimate_batch.batched_reports(tb.trace, tb.weight, stacked)
+
+    # ---- unified path: fit-time stack, memoized padding ------------------
+    def unified():
+        return model.estimate(trs, vendors)
+
+    jax.block_until_ready(old_path())        # shared engine warm-up
+    jax.block_until_ready(unified())
+    old_s = _best_of(old_path)
+    new_s = _best_of(unified)
+    np.testing.assert_allclose(
+        np.asarray(old_path().energy_pj), np.asarray(unified().energy_pj),
+        rtol=2e-6)
+
+    # ---- baselines: the validate.py grid, serial loop vs one dispatch ----
+    micron = baselines_power.MicronModel.from_vampire(model)
+    ds = {v: model.by_vendor[v].idd_datasheet for v in vendors}
+
+    def baseline_serial():
+        return [baselines_power.micron_power(tr, ds[v]).avg_current_ma
+                for tr in trs for v in vendors]
+
+    def baseline_batched():
+        return micron.estimate(trs, vendors)
+
+    jax.block_until_ready(baseline_serial())
+    jax.block_until_ready(baseline_batched())
+    serial_s = _best_of(baseline_serial, n=3)
+    batched_s = _best_of(baseline_batched)
+    grid = np.asarray(baseline_batched().avg_current_ma,
+                      np.float64).reshape(-1)
+    np.testing.assert_allclose(
+        grid, np.asarray(baseline_serial(), np.float64), rtol=2e-6)
+
+    n_pairs = len(trs) * len(vendors)
+    blob = {
+        "bench": "model_api",
+        "n_traces": len(trs),
+        "n_vendors": len(vendors),
+        "old_path_s": old_s,
+        "unified_s": new_s,
+        "per_call_overhead_removed_us": (old_s - new_s) * 1e6,
+        "unified_speedup": old_s / new_s,
+        "baseline_serial_s": serial_s,
+        "baseline_batched_s": batched_s,
+        "baseline_speedup": serial_s / batched_s,
+    }
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(blob, f, indent=2)
+
+    return [
+        row("model_api.old_path", old_s * 1e6,
+            f"pairs={n_pairs};restack_per_call=yes"),
+        row("model_api.unified", new_s * 1e6,
+            f"pairs={n_pairs};speedup_vs_old={old_s/new_s:.1f}x;"
+            f"artifact=BENCH_model_api.json"),
+        row("model_api.baseline_serial", serial_s * 1e6,
+            f"pairs={n_pairs};loop=per_(trace,vendor)"),
+        row("model_api.baseline_batched", batched_s * 1e6,
+            f"pairs={n_pairs};speedup_vs_serial={serial_s/batched_s:.1f}x"),
+    ]

@@ -1,20 +1,23 @@
 """Shared benchmark infrastructure: the full-fleet characterization is
 expensive (it is the paper's entire measurement campaign), so it is cached
-on disk and reused across benchmark modules."""
+on disk and reused across benchmark modules.
+
+The cache is a regular schema-v2 model blob (``model_api.save_estimator``:
+.npz + JSON manifest) whose manifest ``meta`` records the fit
+configuration; a blob written by different code or a different campaign
+config is refit, not trusted.  The raw campaign sweeps ride along in the
+blob (the per-figure benchmarks plot them)."""
 from __future__ import annotations
 
 import os
-import pickle
 import time
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
-CACHE = os.path.join(ARTIFACTS, "vampire_fit.pkl")
-# provenance of the on-disk fit cache: (schema, engine, fit kwargs); a blob
-# written by different code or a different campaign config is refit, not
-# trusted
+CACHE = os.path.join(ARTIFACTS, "vampire_fit.npz")
 FIT_KW = dict(probe_modules=5, probe_reps=128, n_rows=16)
-# v3: fleet engine shares the structural feature pass across modules (PR 2)
-_CACHE_TAG = ("v3", "batched", tuple(sorted(FIT_KW.items())))
+# v4: unified estimator protocol / schema-v2 blob (PR 3)
+_CACHE_META = {"cache": "bench-fit", "rev": "v4", "engine": "batched",
+               "fit_kw": {k: int(v) for k, v in sorted(FIT_KW.items())}}
 
 _model = None
 _model_engine = None
@@ -38,12 +41,12 @@ def fitted_vampire(refit: bool = False, engine: str = "batched"):
     if _model is not None and not refit and engine == _model_engine:
         return _model
     os.makedirs(ARTIFACTS, exist_ok=True)
+    from repro.core import model_api
     if os.path.exists(CACHE) and not refit and engine == "batched":
         try:
-            with open(CACHE, "rb") as f:
-                blob = pickle.load(f)
-            if isinstance(blob, dict) and blob.get("tag") == _CACHE_TAG:
-                _model = blob["model"]
+            manifest = model_api.read_manifest(CACHE)
+            if manifest and manifest.get("meta") == _CACHE_META:
+                _model = model_api.load_estimator(CACHE)
                 _model_engine = engine
                 return _model
         except Exception:
@@ -53,11 +56,8 @@ def fitted_vampire(refit: bool = False, engine: str = "batched"):
     _model = Vampire.fit(full_fleet(), engine=engine, **FIT_KW)
     _model_engine = engine
     print(f"# characterization campaign ({engine}): {time.time()-t0:.0f}s")
-    for vc in _model.by_vendor.values():
-        vc.build_params()
     if engine == "batched":
-        with open(CACHE, "wb") as f:
-            pickle.dump({"tag": _CACHE_TAG, "model": _model}, f)
+        _model.save(CACHE, meta=_CACHE_META)
     return _model
 
 

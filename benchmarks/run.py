@@ -21,6 +21,7 @@ MODULES = [
     ("applications", "benchmarks.bench_applications"),  # Sec 9.3 examples
     ("throughput", "benchmarks.bench_throughput"),      # ours
     ("estimate", "benchmarks.bench_estimate"),          # ours (PR 2)
+    ("model_api", "benchmarks.bench_model_api"),        # ours (PR 3)
     ("roofline", "benchmarks.bench_roofline"),          # deliverable (g)
 ]
 

@@ -53,7 +53,7 @@ def main():
     }
     for name, arr in corpora.items():
         tr = tensor_trace(arr)
-        rep = model.estimate_many(
+        rep = model.estimate(
             [tr, encodings.encode_trace(tr, "owi")], (vendor,))
         base, owi = np.asarray(rep.energy_pj, np.float64)[:, 0]
         from repro.kernels.bdi.ops import compression_ratio

@@ -2,14 +2,21 @@
 
 1. Build a small simulated DRAM module fleet (the measurement rig).
 2. Run the characterization campaign and fit VAMPIRE.
-3. Validate against held-out measurements vs DRAMPower / Micron.
-4. Estimate the energy of an application trace and of a framework tensor.
+3. Score traces through the ONE estimator entry point,
+   ``model.estimate(traces, vendors, mode=...)`` — every leaf of the
+   returned report is a (traces x vendors) matrix evaluated in a single
+   batched dispatch, and the same call shape works for the datasheet
+   baselines (Micron calculator, DRAMPower).
+4. Validate against held-out measurements vs the baselines.
+5. Save/load the fitted model (versioned .npz + manifest, schema v2).
+6. Estimate the energy of an application trace and of a framework tensor.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core import device_sim, encodings, params as P, traces
+from repro.core.baselines_power import DRAMPowerModel
 from repro.core.validate import run_validation
 from repro.core.vampire import Vampire
 
@@ -28,18 +35,45 @@ def main():
           f"{P.TABLE5[v][1][0][0]:.1f}, {P.TABLE5[v][1][0][1]:.3f}, "
           f"{P.TABLE5[v][1][0][2]:.4f})")
 
-    print("== 3. validation vs baselines (paper Fig 24) ==")
+    print("== 3. the unified estimate() entry point ==")
+    from repro.core import idd_loops
+    sweeps = [idd_loops.validation_sweep(n) for n in (8, 64, 512)]
+    rep = model.estimate(sweeps)                    # (3 traces, 3 vendors)
+    print(f"  mean currents (mA), traces x vendors:\n"
+          f"{np.asarray(rep.avg_current_ma).round(1)}")
+    lo, mid, hi = model.estimate(sweeps, mode="range")
+    print(f"  process-variation band, trace 1 vendor A: "
+          f"[{float(lo.avg_current_ma[1,0]):.1f}, "
+          f"{float(hi.avg_current_ma[1,0]):.1f}] mA")
+    nodata = model.estimate(sweeps, mode="distribution",
+                            ones_frac=0.5, toggle_frac=0.25)
+    print(f"  no-data-trace mode (ones=0.5, toggle=0.25): "
+          f"{float(nodata.avg_current_ma[1,0]):.1f} mA")
+    # the baselines answer through the *same* protocol + batched path
+    dp = DRAMPowerModel.from_vampire(model)
+    print(f"  DRAMPower, same call: "
+          f"{np.asarray(dp.estimate(sweeps).avg_current_ma).round(1)[1]}")
+
+    print("== 4. validation vs baselines (paper Fig 24) ==")
     res = run_validation(model, fleet=fleet,
                          n_values=(0, 2, 8, 32, 128, 512, 764))
     print(res.summary())
 
-    print("== 4. energy of an app trace, per encoding (one dispatch) ==")
+    print("== 5. versioned serialization (schema v2) ==")
+    import tempfile, os
+    path = os.path.join(tempfile.mkdtemp(), "vampire.npz")
+    model.save(path)
+    loaded = Vampire.load(path)
+    print(f"  round-trip OK: "
+          f"{np.allclose(np.asarray(loaded.estimate(sweeps).energy_pj), np.asarray(rep.energy_pj))}")
+
+    print("== 6. energy of an app trace, per encoding (one dispatch) ==")
     tr = traces.app_trace(traces.SPEC_APPS[7], n_requests=500)  # libquantum
     study = encodings.encoding_energy_study({"libquantum": tr}, model)
     for enc in encodings.ENCODINGS:
         print(f"  {enc:10s}: {study['libquantum'][enc]/1e6:.2f} uJ")
 
-    print("== 5. TPU/HBM adaptation: tensor read energy ==")
+    print("== 7. TPU/HBM adaptation: tensor read energy ==")
     import jax
     from repro.core import hbm
     m = hbm.HbmEnergyModel.from_vampire(model.params(0))

@@ -8,3 +8,7 @@ from repro.core.energy_model import (PowerParams, EnergyReport,  # noqa: F401
                                      trace_energy_scan,
                                      trace_energy_vectorized)
 from repro.core.vampire import Vampire, reference_vampire  # noqa: F401
+from repro.core.model_api import (Estimator, load_estimator,  # noqa: F401
+                                  make_estimator, save_estimator)
+from repro.core.baselines_power import (DRAMPowerModel,  # noqa: F401
+                                        MicronModel)

@@ -19,41 +19,75 @@ DRAMPower:
     (IDD3N) — not per-bank;
   * read/write energies from IDD4R/IDD4W over the actual burst windows;
   * no data dependency, no structural variation.
+
+Both are exposed two ways:
+
+* the per-trace functions :func:`micron_power` / :func:`drampower`
+  (one trace, one datasheet dict) — the paper-figure form;
+* :class:`MicronModel` / :class:`DRAMPowerModel`, estimators implementing
+  the unified protocol (``repro.core.model_api``): pytree-native (the
+  stacked (vendors, keys) IDD table is the array leaf), scored over a
+  padded :class:`~repro.core.estimate_batch.TraceBatch` through the SAME
+  shared structural-feature pass as VAMPIRE, one vmapped dispatch per
+  (traces x vendors) grid.
+
+Neither baseline models data dependency or process variation — that is the
+paper's point — so ``mode='distribution'`` degenerates to ``'mean'`` (the
+ones/toggle fractions cannot matter) and ``mode='range'`` returns a
+collapsed (mean, mean, mean) band.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
+import dataclasses
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model_api
 from repro.core.dram import (ACT, RD, WR, REF, CommandTrace, TIMING)
-from repro.core.energy_model import (EnergyReport, _report,
-                                     extract_features, zeros_like_params)
+from repro.core.energy_model import (EnergyReport, StructuralFeatures,
+                                     _report, extract_structural_features)
 
 _T = TIMING
 
-
-def _features(trace: CommandTrace):
-    # reuse the vectorized state machine with dummy params (only bank/PD
-    # state and rw/op masks are needed)
-    return extract_features(trace, zeros_like_params())
+# datasheet keys the baseline formulas consume, in stacked-table order
+BASELINE_IDD_KEYS = ("IDD0", "IDD2N", "IDD2P1", "IDD3N", "IDD4R", "IDD4W",
+                     "IDD5B")
 
 
-def micron_power(trace: CommandTrace, ds: dict[str, float]) -> EnergyReport:
-    """TN-41-01-style estimate from datasheet IDDs."""
-    f = _features(trace)
+def _bg_state(sf: StructuralFeatures):
+    """The two structural facts both baselines consume, from the shared
+    param-independent feature pass: per-command open-bank count and
+    power-down state."""
+    return jnp.sum(sf.open_before.astype(jnp.float32), axis=1), sf.powered_down
+
+
+def _act_pair_charge(ds) -> jax.Array:
+    """ACT/PRE pair charge above the active background, from IDD0 at the
+    specification row-cycle (shared by both baselines)."""
+    q_act = (ds["IDD0"] - (ds["IDD3N"] * _T.tRAS + ds["IDD2N"] * _T.tRP)
+             / _T.tRC) * _T.tRC
+    return jnp.maximum(q_act, 0.0)
+
+
+def micron_charges(trace: CommandTrace, open_banks, powered_down,
+                   ds) -> jax.Array:
+    """Per-command charge (mA*cycles) of the TN-41-01-style estimate.
+    ``ds`` maps IDD key -> current; values broadcast against the trace."""
+    del open_banks  # the calculator's documented flaw: bank count ignored
     dt = trace.dt.astype(jnp.float32)
     # Worst-case background: all-banks-active current whenever not powered
     # down (the flaw reported by [65] and Section 9.1).
-    i_bg = jnp.where(f.powered_down, ds["IDD2P1"], ds["IDD3N"])
+    i_bg = jnp.where(powered_down, ds["IDD2P1"], ds["IDD3N"])
     charge = i_bg * dt
     # ACT/PRE power at the *specification* row-cycling rate: the calculator
     # charges one ACT/PRE pair per spec tRC of active time, regardless of the
     # actual command spacing in the trace ([26]'s "does not account for any
     # additional time that may elapse between two DRAM commands").
-    q_act = (ds["IDD0"] - (ds["IDD3N"] * _T.tRAS + ds["IDD2N"] * _T.tRP)
-             / _T.tRC) * _T.tRC
-    q_act = jnp.maximum(q_act, 0.0)
+    q_act = _act_pair_charge(ds)
     any_act = jnp.any(trace.cmd == ACT)
-    charge = charge + jnp.where(~f.powered_down & any_act,
+    charge = charge + jnp.where(~powered_down & any_act,
                                 q_act * dt / _T.tRC, 0.0)
     # Read/write power stacked on the (already worst-case) background — the
     # calculator's documented mishandling of bank-state/command interaction
@@ -63,25 +97,22 @@ def micron_power(trace: CommandTrace, ds: dict[str, float]) -> EnergyReport:
     charge = charge + jnp.where(trace.cmd == WR, ds["IDD4W"] * burst, 0.0)
     charge = charge + jnp.where(
         trace.cmd == REF, (ds["IDD5B"] - ds["IDD2N"]) * _T.tRFC, 0.0)
-    return _report(jnp.sum(charge), trace.total_cycles())
+    return charge
 
 
-def drampower(trace: CommandTrace, ds: dict[str, float]) -> EnergyReport:
-    """DRAMPower-style estimate: datasheet IDDs, actual timing."""
-    f = _features(trace)
+def drampower_charges(trace: CommandTrace, open_banks, powered_down,
+                      ds) -> jax.Array:
+    """Per-command charge (mA*cycles) of the DRAMPower-style estimate:
+    datasheet IDDs, actual timing."""
     dt = trace.dt.astype(jnp.float32)
     # Bank-sensitive background (DRAMPower includes the [65, 107] extension:
     # linear interpolation between IDD2N and IDD3N by open-bank count), but
     # with datasheet values and no per-bank structure.
     i_bg = jnp.where(
-        f.powered_down, ds["IDD2P1"],
-        ds["IDD2N"] + (ds["IDD3N"] - ds["IDD2N"]) * f.open_banks / 8.0)
+        powered_down, ds["IDD2P1"],
+        ds["IDD2N"] + (ds["IDD3N"] - ds["IDD2N"]) * open_banks / 8.0)
     charge = i_bg * dt
-    # ACT/PRE pair charge above the active background, from IDD0:
-    q_act = (ds["IDD0"] - (ds["IDD3N"] * _T.tRAS + ds["IDD2N"] * _T.tRP)
-             / _T.tRC) * _T.tRC
-    q_act = jnp.maximum(q_act, 0.0)
-    charge = charge + jnp.where(trace.cmd == ACT, q_act, 0.0)
+    charge = charge + jnp.where(trace.cmd == ACT, _act_pair_charge(ds), 0.0)
     burst = jnp.minimum(dt, float(_T.tBURST))
     charge = charge + jnp.where(
         trace.cmd == RD, (ds["IDD4R"] - i_bg) * burst, 0.0)
@@ -89,7 +120,163 @@ def drampower(trace: CommandTrace, ds: dict[str, float]) -> EnergyReport:
         trace.cmd == WR, (ds["IDD4W"] - i_bg) * burst, 0.0)
     charge = charge + jnp.where(
         trace.cmd == REF, (ds["IDD5B"] - ds["IDD2N"]) * _T.tRFC, 0.0)
+    return charge
+
+
+_CHARGE_FNS = {"micron": micron_charges, "drampower": drampower_charges}
+
+
+def micron_power(trace: CommandTrace, ds: dict[str, float]) -> EnergyReport:
+    """TN-41-01-style estimate from datasheet IDDs (single trace)."""
+    ob, pd = _bg_state(extract_structural_features(trace))
+    charge = micron_charges(trace, ob, pd,
+                            {k: jnp.float32(ds[k]) for k in BASELINE_IDD_KEYS})
+    return _report(jnp.sum(charge), trace.total_cycles())
+
+
+def drampower(trace: CommandTrace, ds: dict[str, float]) -> EnergyReport:
+    """DRAMPower-style estimate: datasheet IDDs, actual timing (single
+    trace)."""
+    ob, pd = _bg_state(extract_structural_features(trace))
+    charge = drampower_charges(
+        trace, ob, pd, {k: jnp.float32(ds[k]) for k in BASELINE_IDD_KEYS})
     return _report(jnp.sum(charge), trace.total_cycles())
 
 
 MODELS = {"micron": micron_power, "drampower": drampower}
+
+
+# ---------------------------------------------------------------------------
+# Batched dispatches (one per baseline, shared skeleton)
+# ---------------------------------------------------------------------------
+def _batched_baseline(charge_fn):
+    @jax.jit
+    def dispatch(trace: CommandTrace, weight: jax.Array,
+                 table: jax.Array) -> EnergyReport:
+        """Energy reports of every (trace, vendor) pair in one dispatch.
+        ``trace``/``weight`` are a TraceBatch's padded fields; ``table`` is
+        the stacked (vendors, len(BASELINE_IDD_KEYS)) datasheet matrix."""
+        def one_trace(tr: CommandTrace, w: jax.Array):
+            ob, pd = _bg_state(extract_structural_features(tr))
+            cycles = jnp.sum(tr.dt * w.astype(jnp.int32), dtype=jnp.int32)
+
+            def one_vendor(row):
+                ds = {k: row[i] for i, k in enumerate(BASELINE_IDD_KEYS)}
+                return jnp.sum(charge_fn(tr, ob, pd, ds) * w)
+
+            return jax.vmap(one_vendor)(table), cycles
+
+        charge, cycles = jax.vmap(one_trace)(trace, weight)   # (T, V), (T,)
+        return _report(charge,
+                       jnp.broadcast_to(cycles[:, None], charge.shape))
+    return dispatch
+
+
+_BATCHED = {kind: _batched_baseline(fn) for kind, fn in _CHARGE_FNS.items()}
+
+
+# ---------------------------------------------------------------------------
+# Protocol estimators
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DatasheetModel(model_api.StackedEstimatorMixin):
+    """Base of the baseline estimators: per-vendor datasheet IDD values as
+    one stacked pytree leaf, scored through the shared batched engine."""
+    datasheets: dict[int, dict[str, float]]
+    idd_table: jax.Array = None  # type: ignore  # (V, K) float32 leaf
+
+    kind = None  # class attribute (NOT a field), overridden per subclass
+
+    def __post_init__(self):
+        if self.idd_table is None:
+            self.idd_table = jnp.asarray(
+                [[self.datasheets[v][k] for k in BASELINE_IDD_KEYS]
+                 for v in sorted(self.datasheets)], jnp.float32)
+
+    # ------------------------------------------------------- construction
+    @classmethod
+    def from_datasheets(cls, datasheets: dict[int, dict[str, float]]):
+        return cls(datasheets={v: dict(d) for v, d in datasheets.items()})
+
+    @classmethod
+    def from_vampire(cls, model):
+        """Share the fitted VAMPIRE model's derived per-vendor datasheets
+        (what the vendor would publish; paper Section 4)."""
+        return cls.from_datasheets(
+            {v: model.by_vendor[v].idd_datasheet for v in model.by_vendor})
+
+    @property
+    def vendors(self) -> tuple[int, ...]:
+        return tuple(sorted(self.datasheets))
+
+    def _table_for(self, idx: tuple[int, ...]) -> jax.Array:
+        if idx == tuple(range(self.idd_table.shape[0])):
+            return self.idd_table
+        return self._memo_subset(
+            idx, self.idd_table,
+            lambda: self.idd_table[jnp.asarray(idx, jnp.int32)])
+
+    # ----------------------------------------------------------- estimate
+    def estimate(self, traces, vendors=None, *,
+                 mode: model_api.EstimateMode = "mean",
+                 impl: str = "vectorized", ones_frac=None, toggle_frac=None):
+        """Unified protocol entry point.  ``mode='distribution'`` equals
+        ``'mean'`` (no data dependency to feed the fractions into) and
+        ``mode='range'`` collapses to (mean, mean, mean) — these baselines
+        model neither, which is Section 9.1's finding."""
+        if impl != "vectorized":
+            raise ValueError(f"{type(self).__name__} only implements "
+                             f"impl='vectorized' (got {impl!r})")
+        # one shared argument contract across every estimator: fractions
+        # are required WITH mode='distribution' (even though this physics
+        # ignores their values) and rejected without it
+        model_api.validate_estimate_args(mode, ones_frac, toggle_frac)
+        _, idx = model_api.resolve_vendor_indices(self.vendors, vendors)
+        tb = self._batch_cache.get(traces)
+        rep = _BATCHED[self.kind](tb.trace, tb.weight, self._table_for(idx))
+        if mode == "range":
+            return rep, rep, rep
+        return rep
+
+    # ----------------------------------------------------------------- io
+    def save(self, path: str, *, meta: dict | None = None):
+        model_api.save_estimator(self, path, meta=meta)
+
+    @classmethod
+    def load(cls, path: str):
+        model = model_api.load_estimator(path)
+        if not isinstance(model, cls):
+            raise TypeError(f"{path} holds a {type(model).__name__}, "
+                            f"not a {cls.__name__}")
+        return model
+
+
+@dataclasses.dataclass
+class MicronModel(DatasheetModel):
+    kind = "micron"
+
+
+@dataclasses.dataclass
+class DRAMPowerModel(DatasheetModel):
+    kind = "drampower"
+
+
+def _baseline_flatten(m):
+    return (m.idd_table,), (m._aux_static(m.datasheets),)
+
+
+def _make_baseline_unflatten(cls):
+    def unflatten(aux, children):
+        m = object.__new__(cls)
+        m.datasheets = aux[0].value
+        m.idd_table = children[0]
+        m.__dict__["_aux"] = aux[0]   # stable treedefs across round trips
+        return m
+    return unflatten
+
+
+for _cls in (MicronModel, DRAMPowerModel):
+    jax.tree_util.register_pytree_node(_cls, _baseline_flatten,
+                                       _make_baseline_unflatten(_cls))
+
+BASELINE_MODELS = {"micron": MicronModel, "drampower": DRAMPowerModel}

@@ -199,16 +199,17 @@ def encoding_energy_study(traces_by_app: dict[str, CommandTrace],
     """Total DRAM energy (pJ) of every (app, encoding) pair, averaged over
     ``vendors``, scored in ONE batched dispatch.
 
-    All ``len(traces_by_app) x 4`` encoded traces are padded into a single
-    ``estimate_batch.TraceBatch`` and the full (traces x vendors) report
-    matrix comes from one ``model.estimate_many`` call — the per-pair
-    Python-loop version dispatched (and compiled) one JAX program per
-    (app, encoding, vendor) triple."""
-    vendors = sorted(model.by_vendor) if vendors is None else list(vendors)
+    ``model`` is any estimator implementing the unified protocol
+    (``repro.core.model_api``).  All ``len(traces_by_app) x 4`` encoded
+    traces are padded into a single ``estimate_batch.TraceBatch`` and the
+    full (traces x vendors) report matrix comes from one ``model.estimate``
+    call — the per-pair Python-loop version dispatched (and compiled) one
+    JAX program per (app, encoding, vendor) triple."""
+    vendors = list(model.vendors) if vendors is None else list(vendors)
     apps = list(traces_by_app)
     encoded = [encode_trace(traces_by_app[app], enc)
                for app in apps for enc in ENCODINGS]
-    rep = model.estimate_many(encoded, vendors)
+    rep = model.estimate(encoded, vendors)
     energy = np.asarray(rep.energy_pj, dtype=np.float64).mean(axis=1)
     energy = energy.reshape(len(apps), len(ENCODINGS))
     return {app: {enc: float(energy[i, j])

@@ -2,7 +2,7 @@
 ``repro.core.fleet``).
 
 ``fleet`` collapsed the *characterization* campaign into vmapped dispatches;
-this module does the same for the fitted model's *estimation* path, which is
+this module does the same for a fitted model's *estimation* path, which is
 where every downstream study (encodings, validation, serving) spends its
 time once a model exists. One (trace, vendor) pair per Python call is one
 separately-dispatched, separately-compiled JAX program per trace length;
@@ -12,17 +12,22 @@ here the whole (traces x vendors) energy-report matrix is a single jitted
 * heterogeneous :class:`CommandTrace` lengths are NOP/dt=0-padded into one
   fixed-shape :class:`TraceBatch` (``dram.batch_traces`` — a zero-cycle NOP
   draws no charge and perturbs no integrator state, so padding is exact);
-* fitted per-vendor :class:`PowerParams` are stacked with
-  ``fleet.stack_params`` along a leading vendor axis;
-* :func:`batched_reports` evaluates every pair in one dispatch and returns
-  an :class:`EnergyReport` whose leaves have shape ``(traces, vendors)``;
+* :func:`batched_reports` evaluates every (trace, paramset) pair in one
+  dispatch and returns an :class:`EnergyReport` whose leaves have shape
+  ``(traces, vendors)``;
 * :func:`batched_range_reports` additionally vmaps the per-vendor process-
   variation band -> (lo, mean, hi) report matrices;
 * :func:`batched_distribution_reports` is the paper's no-data-trace mode
   (caller-supplied ones/toggle fractions) over the same batch.
 
-Callers scoring the same trace set repeatedly (the serving power loop, the
-encoding study) should build the :class:`TraceBatch` once and reuse it.
+This module holds the ENGINE only.  The model-facing surface is the
+unified estimator protocol (``repro.core.model_api``): every estimator's
+``estimate(traces, vendors, mode=...)`` feeds these dispatches with its
+own stacked parameter leaves (stacked once at fit/construction time, not
+per call).  Callers scoring the same trace set repeatedly (the serving
+power loop, the encoding study) should build the :class:`TraceBatch` once
+and reuse it — models also memoize the padding of recently seen trace
+sets (``model_api.TraceBatchCache``).
 """
 from __future__ import annotations
 
@@ -37,7 +42,7 @@ from repro.core.energy_model import (EnergyReport, PowerParams, _report,
                                      distribution_features,
                                      extract_structural_features,
                                      scale_report)
-from repro.core.fleet import batched_pair_totals, stack_params
+from repro.core.fleet import batched_pair_totals
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,11 +70,6 @@ def as_trace_batch(traces) -> TraceBatch:
     if isinstance(traces, CommandTrace):
         traces = [traces]
     return TraceBatch.from_traces(list(traces))
-
-
-def stack_vendor_params(model, vendors: Sequence[int]) -> PowerParams:
-    """``fleet.stack_params`` over a model's fitted per-vendor params."""
-    return stack_params([model.params(v) for v in vendors])
 
 
 # ---------------------------------------------------------------------------
@@ -130,35 +130,3 @@ def batched_distribution_reports(trace: CommandTrace, weight: jax.Array,
     charge, cycles = jax.vmap(one_trace)(trace, weight, ones_frac,
                                          toggle_frac)
     return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))
-
-
-# ---------------------------------------------------------------------------
-# Model-level entry points (used by Vampire.estimate_many & friends)
-# ---------------------------------------------------------------------------
-def estimate_many(model, traces, vendors: Sequence[int] | None = None
-                  ) -> EnergyReport:
-    """The full (traces x vendors) energy-report matrix in one dispatch."""
-    vendors = sorted(model.by_vendor) if vendors is None else list(vendors)
-    tb = as_trace_batch(traces)
-    return batched_reports(tb.trace, tb.weight,
-                           stack_vendor_params(model, vendors))
-
-
-def estimate_range_many(model, traces, vendors: Sequence[int] | None = None
-                        ) -> tuple[EnergyReport, EnergyReport, EnergyReport]:
-    vendors = sorted(model.by_vendor) if vendors is None else list(vendors)
-    tb = as_trace_batch(traces)
-    band = jnp.asarray([model.variation_band[v] for v in vendors],
-                       jnp.float32)
-    return batched_range_reports(tb.trace, tb.weight,
-                                 stack_vendor_params(model, vendors), band)
-
-
-def estimate_distribution_many(model, traces, vendors=None, *,
-                               ones_frac, toggle_frac) -> EnergyReport:
-    vendors = sorted(model.by_vendor) if vendors is None else list(vendors)
-    tb = as_trace_batch(traces)
-    return batched_distribution_reports(
-        tb.trace, tb.weight, stack_vendor_params(model, vendors),
-        jnp.asarray(ones_frac, jnp.float32),
-        jnp.asarray(toggle_frac, jnp.float32))

@@ -1,0 +1,464 @@
+"""The unified estimator protocol and versioned model serialization.
+
+Every power model in this repo — the fitted VAMPIRE model and the
+datasheet-driven baselines (Micron calculator, DRAMPower) — implements ONE
+entry point:
+
+    model.estimate(traces, vendors=None, *, mode='mean'|'range'|'distribution',
+                   impl='vectorized', ones_frac=None, toggle_frac=None)
+
+* ``traces`` is a single :class:`~repro.core.dram.CommandTrace`, a sequence
+  of (ragged) traces, or a prebuilt :class:`~repro.core.estimate_batch.TraceBatch`;
+* ``vendors`` defaults to every vendor the model covers;
+* every leaf of the returned :class:`~repro.core.energy_model.EnergyReport`
+  has shape ``(traces, vendors)`` — ``mode='range'`` returns a
+  ``(lo, mean, hi)`` triple of such reports;
+* ``mode='distribution'`` is the paper's no-data-trace mode and takes
+  ``ones_frac``/``toggle_frac`` (scalar or per trace).
+
+Models are pytrees: their parameters are array leaves stacked along a
+leading vendor axis, so a model can be ``jax.jit``-traced, ``jax.vmap``-ped,
+``jax.device_put`` onto a mesh, and scored through the shared batched
+engine (``repro.core.estimate_batch``) regardless of which physics it
+implements.  ``validate.run_validation``, the encoding study, and
+``launch/serve.py --power-report`` all consume the protocol, never a
+concrete class.
+
+Serialization (schema v2)
+-------------------------
+:func:`save_estimator` writes a single file: a ``.npz`` archive whose
+entries are plain (pickle-free) numpy arrays plus a ``__manifest__`` JSON
+string recording the schema version, the estimator kind, the vendor/IDD-key
+ordering of the arrays, and optional caller metadata.  :func:`load_estimator`
+sniffs the on-disk format and also accepts the legacy schema-v1 pickle
+blobs (``Vampire.save`` before the unified API) with a
+``DeprecationWarning`` — re-save to migrate.
+"""
+from __future__ import annotations
+
+import json
+import pickle
+import warnings
+import zipfile
+from typing import Literal, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+SCHEMA_VERSION = 2
+MANIFEST_KEY = "__manifest__"
+
+EstimateMode = Literal["mean", "range", "distribution"]
+
+
+# ---------------------------------------------------------------------------
+# The protocol
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class Estimator(Protocol):
+    """What every power model exposes (see the module docstring).
+
+    Portable protocol code passes ``vendors`` as a sequence or ``None``.
+    A bare int vendor together with a single ``CommandTrace`` is reserved
+    for ``Vampire``'s legacy ``estimate(trace, vendor)`` shim (scalar-leaf
+    report + ``DeprecationWarning``); estimators without a legacy API
+    treat an int vendor as a one-element sequence."""
+
+    kind: str                        # 'vampire' | 'micron' | 'drampower'
+
+    @property
+    def vendors(self) -> tuple[int, ...]:
+        """Vendor ids the model covers, in the stacked-leaf order."""
+        ...
+
+    def estimate(self, traces, vendors=None, *, mode: EstimateMode = "mean",
+                 impl: str = "vectorized", ones_frac=None, toggle_frac=None):
+        ...
+
+    def save(self, path: str) -> None:
+        ...
+
+
+class _Static:
+    """Hashable identity wrapper for non-array pytree aux data (the
+    characterization detail a model carries alongside its array leaves).
+    Hash/eq are by identity: two flattenings of the SAME model share a
+    treedef (so jit caches hit), distinct models never collide."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value):
+        self.value = value
+
+    def __hash__(self):
+        return id(self.value)
+
+    def __eq__(self, other):
+        return isinstance(other, _Static) and self.value is other.value
+
+
+def _tracer_type():
+    """The JAX tracer class, resolved defensively: ``jax.core.Tracer`` has
+    moved between jax releases, and this module must import (and the
+    deprecation-clean CI job must pass) on whichever jax the environment
+    provides.  Returns ``None`` when no tracer class can be found — callers
+    then skip caching entirely (fail safe: never cache a possible tracer)."""
+    import jax
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for resolve in (lambda: jax.core.Tracer,
+                        lambda: jax.extend.core.Tracer):
+            try:
+                return resolve()
+            except AttributeError:
+                continue
+    return None
+
+
+def validate_estimate_args(mode: str, ones_frac, toggle_frac) -> None:
+    """The one argument contract every estimator's ``estimate`` enforces
+    (shared so the implementations cannot drift): fractions are required
+    with ``mode='distribution'`` and rejected with any other mode."""
+    if mode not in ("mean", "range", "distribution"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if mode == "distribution":
+        if ones_frac is None or toggle_frac is None:
+            raise ValueError("mode='distribution' requires ones_frac "
+                             "and toggle_frac")
+    elif ones_frac is not None or toggle_frac is not None:
+        raise ValueError("ones_frac/toggle_frac are only meaningful "
+                         "with mode='distribution'")
+
+
+def resolve_vendor_indices(order: Sequence[int],
+                           vendors) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Normalize a ``vendors`` argument against a model's stacked vendor
+    order -> (vendor ids, row indices into the stacked leaves)."""
+    order = list(order)
+    if vendors is None:
+        vs = tuple(order)
+    elif isinstance(vendors, (int, np.integer)):
+        vs = (int(vendors),)
+    else:
+        vs = tuple(int(v) for v in vendors)
+    try:
+        idx = tuple(order.index(v) for v in vs)
+    except ValueError:
+        missing = [v for v in vs if v not in order]
+        raise KeyError(f"vendor(s) {missing} not fitted; model covers "
+                       f"{order}") from None
+    return vs, idx
+
+
+# ---------------------------------------------------------------------------
+# Trace-batch padding cache (shared by every estimator implementation)
+# ---------------------------------------------------------------------------
+class TraceBatchCache:
+    """Remembers the padded :class:`TraceBatch` of the last few trace sets
+    scored through a model, keyed by trace identity, so repeated
+    ``estimate`` calls over the same (sequence of) trace objects stop
+    re-padding per call.  Entries hold strong references to the traces, so
+    an id can never be recycled while its entry is alive."""
+
+    def __init__(self, maxsize: int = 4):
+        self.maxsize = maxsize
+        self._entries: list[tuple[tuple, object]] = []
+
+    def get(self, traces):
+        from repro.core.dram import CommandTrace
+        from repro.core.estimate_batch import TraceBatch, as_trace_batch
+        if isinstance(traces, TraceBatch):
+            return traces
+        key = ((traces,) if isinstance(traces, CommandTrace)
+               else tuple(traces))
+        for held, tb in self._entries:
+            if len(held) == len(key) and all(a is b
+                                             for a, b in zip(held, key)):
+                return tb
+        tb = as_trace_batch(list(key))
+        self._entries.append((key, tb))
+        del self._entries[:-self.maxsize]
+        return tb
+
+
+class StackedEstimatorMixin:
+    """The per-model caches every stacked estimator shares:
+
+    * ``_batch_cache`` — the :class:`TraceBatchCache` padding memo;
+    * ``_memo_subset`` — memoizes vendor-subset slices of the stacked
+      leaves per vendor-index tuple, EXCEPT while the stacked leaves are
+      being traced (a cached tracer would escape its trace).
+
+    Lives in ``__dict__`` (not dataclass fields) so pytree-unflattened
+    instances — which skip ``__init__`` — lazily grow fresh caches."""
+
+    @property
+    def _batch_cache(self) -> TraceBatchCache:
+        return self.__dict__.setdefault("_batches", TraceBatchCache())
+
+    def _memo_subset(self, idx: tuple[int, ...], stacked, build):
+        import jax
+        cache = self.__dict__.setdefault("_subsets", {})
+        hit = cache.get(idx)
+        if hit is None:
+            hit = build()
+            tracer = _tracer_type()
+            if tracer is not None and not any(
+                    isinstance(leaf, tracer)
+                    for leaf in jax.tree_util.tree_leaves(stacked)):
+                cache[idx] = hit
+        return hit
+
+    def _aux_static(self, value) -> _Static:
+        """The pytree aux wrapper, built ONCE per instance: repeated
+        flattens of the same model must yield equal treedefs (identity-
+        hashed aux), or every jit over the model retraces per call."""
+        aux = self.__dict__.get("_aux")
+        if aux is None:
+            aux = _Static(value)
+            self.__dict__["_aux"] = aux
+        return aux
+
+
+# ---------------------------------------------------------------------------
+# Versioned serialization
+# ---------------------------------------------------------------------------
+def save_estimator(model, path: str, *, meta: dict | None = None) -> None:
+    """Write any estimator as a schema-v2 ``.npz`` + JSON-manifest file.
+
+    ``meta`` is caller metadata stored verbatim in the manifest (e.g. the
+    benchmark cache's fit-configuration tag)."""
+    kind = getattr(model, "kind", None)
+    if kind == "vampire":
+        arrays, manifest = _vampire_payload(model)
+    elif kind in ("micron", "drampower"):
+        arrays, manifest = _baseline_payload(model)
+    else:
+        raise TypeError(f"cannot serialize estimator kind {kind!r}")
+    manifest["schema"] = SCHEMA_VERSION
+    manifest["kind"] = kind
+    if meta is not None:
+        manifest["meta"] = meta
+    payload = {MANIFEST_KEY: np.array(json.dumps(manifest))}
+    payload.update(arrays)
+    with open(path, "wb") as f:
+        np.savez(f, **payload)
+
+
+def read_manifest(path: str) -> dict | None:
+    """The v2 manifest of a saved estimator, or ``None`` for v1 pickles."""
+    if not zipfile.is_zipfile(path):
+        return None
+    with np.load(path, allow_pickle=False) as npz:
+        return json.loads(npz[MANIFEST_KEY].item())
+
+
+def load_estimator(path: str):
+    """Load any saved estimator, from schema v2 (``.npz`` + manifest) or a
+    legacy schema-v1 pickle blob (with a :class:`DeprecationWarning`)."""
+    if not zipfile.is_zipfile(path):
+        return _load_v1_pickle(path)
+    with np.load(path, allow_pickle=False) as npz:
+        manifest = json.loads(npz[MANIFEST_KEY].item())
+        schema = manifest.get("schema")
+        if schema != SCHEMA_VERSION:
+            raise ValueError(f"unsupported model schema {schema!r} in {path}")
+        kind = manifest.get("kind")
+        if kind == "vampire":
+            return _vampire_from_payload(npz, manifest)
+        if kind in ("micron", "drampower"):
+            return _baseline_from_payload(npz, manifest)
+        raise ValueError(f"unknown estimator kind {kind!r} in {path}")
+
+
+# ---- VAMPIRE payload ------------------------------------------------------
+_FITTED_FIELDS = ("datadep", "datadep_r2", "i2n", "bank_open_delta",
+                  "bank_read_factor", "bank_write_factor", "q_actpre",
+                  "row_ones_slope", "q_ref", "i_pd")
+_SWEEP_FIELDS = ("ones", "toggles", "current", "corrected")
+
+
+def _vampire_payload(model) -> tuple[dict, dict]:
+    vs = sorted(model.by_vendor)
+    arrays: dict[str, np.ndarray] = {
+        "vendor_ids": np.asarray(vs, np.int64),
+        "band": np.asarray([model.variation_band[v] for v in vs], np.float64),
+    }
+    for field in _FITTED_FIELDS:
+        arrays[field] = np.stack(
+            [np.asarray(getattr(model.by_vendor[v], field), np.float64)
+             for v in vs])
+    idd_keys = sorted(model.by_vendor[vs[0]].idd_datasheet)
+    arrays["idd_datasheet"] = np.asarray(
+        [[model.by_vendor[v].idd_datasheet[k] for k in idd_keys] for v in vs],
+        np.float64)
+    manifest: dict = {"vendors": vs, "idd_keys": idd_keys,
+                      "idd_r2": {}, "row_r2": {}, "raw": False}
+    # raw campaign data (present on freshly fitted models; benchmarks plot
+    # the sweeps, so the bench fit cache must round-trip them)
+    for v in vs:
+        vc = model.by_vendor[v]
+        manifest["idd_r2"][str(v)] = dict(vc.idd_extrapolation_r2)
+        if vc.row_sweep:
+            manifest["row_r2"][str(v)] = float(vc.row_sweep.get("r2", 0.0))
+        if not (vc.idd_measured or vc.ones_sweep or vc.row_sweep):
+            continue
+        manifest["raw"] = True
+        for key, arr in vc.idd_measured.items():
+            arrays[f"raw/{v}/idd_measured/{key}"] = np.asarray(arr, np.float64)
+        for (mode, op), sweep in vc.ones_sweep.items():
+            for field in _SWEEP_FIELDS:
+                arrays[f"raw/{v}/ones_sweep/{mode}/{op}/{field}"] = \
+                    np.asarray(sweep[field], np.float64)
+        for field in ("row_ones", "current"):
+            if vc.row_sweep:
+                arrays[f"raw/{v}/row_sweep/{field}"] = \
+                    np.asarray(vc.row_sweep[field], np.float64)
+    return arrays, manifest
+
+
+def _rebuild_vendor(vendor: int, fitted: dict, *, idd_measured=None,
+                    idd_r2=None, datadep_r2=None, ones_sweep=None,
+                    row_sweep=None):
+    """Reconstruct one fitted ``VendorCharacterization`` from plain values
+    (the single shared reconstruction used by both the v2 and the legacy
+    v1 loaders; raw campaign records are optional)."""
+    from repro.core import characterize
+    vc = characterize.VendorCharacterization(
+        vendor=vendor,
+        idd_measured=idd_measured or {},
+        idd_datasheet=dict(fitted["idd_datasheet"]),
+        idd_extrapolation_r2=idd_r2 or {},
+        datadep=np.asarray(fitted["datadep"]),
+        datadep_r2=(np.asarray(datadep_r2) if datadep_r2 is not None
+                    else np.zeros((4, 2))),
+        ones_sweep=ones_sweep or {},
+        i2n=float(fitted["i2n"]),
+        bank_open_delta=np.asarray(fitted["bank_open_delta"]),
+        bank_read_factor=np.asarray(fitted["bank_read_factor"]),
+        bank_write_factor=np.asarray(fitted["bank_write_factor"]),
+        q_actpre=float(fitted["q_actpre"]),
+        row_ones_slope=float(fitted["row_ones_slope"]),
+        row_sweep=row_sweep or {},
+        q_ref=float(fitted["q_ref"]),
+        i_pd=float(fitted["i_pd"]))
+    vc.build_params()
+    return vc
+
+
+def _vampire_from_payload(npz, manifest):
+    from repro.core.vampire import Vampire
+    vs = [int(v) for v in np.asarray(npz["vendor_ids"])]
+    idd_keys = list(manifest["idd_keys"])
+    by_vendor, bands = {}, {}
+    for i, v in enumerate(vs):
+        raw_idd, raw_sweep, raw_row = {}, {}, {}
+        if manifest.get("raw"):
+            prefix = f"raw/{v}/"
+            for name in npz.files:
+                if not name.startswith(prefix):
+                    continue
+                parts = name[len(prefix):].split("/")
+                if parts[0] == "idd_measured":
+                    raw_idd[parts[1]] = np.asarray(npz[name])
+                elif parts[0] == "ones_sweep":
+                    mode, op, field = parts[1], parts[2], parts[3]
+                    raw_sweep.setdefault((mode, op), {})[field] = \
+                        np.asarray(npz[name])
+                elif parts[0] == "row_sweep":
+                    raw_row[parts[1]] = np.asarray(npz[name])
+            if raw_row:
+                raw_row["r2"] = manifest.get("row_r2", {}).get(str(v), 0.0)
+        fitted = {field: npz[field][i] for field in _FITTED_FIELDS
+                  if field != "datadep_r2"}
+        fitted["idd_datasheet"] = {k: float(npz["idd_datasheet"][i, j])
+                                   for j, k in enumerate(idd_keys)}
+        by_vendor[v] = _rebuild_vendor(
+            v, fitted,
+            idd_measured=raw_idd,
+            idd_r2={k: float(r) for k, r in
+                    manifest.get("idd_r2", {}).get(str(v), {}).items()},
+            datadep_r2=npz["datadep_r2"][i],
+            ones_sweep=raw_sweep, row_sweep=raw_row)
+        bands[v] = (float(npz["band"][i, 0]), float(npz["band"][i, 1]))
+    return Vampire(by_vendor=by_vendor, variation_band=bands)
+
+
+# ---- baseline payload -----------------------------------------------------
+def _baseline_payload(model) -> tuple[dict, dict]:
+    vs = list(model.vendors)
+    idd_keys = sorted(model.datasheets[vs[0]])
+    arrays = {
+        "vendor_ids": np.asarray(vs, np.int64),
+        "idd_table": np.asarray(
+            [[model.datasheets[v][k] for k in idd_keys] for v in vs],
+            np.float64),
+    }
+    return arrays, {"vendors": vs, "idd_keys": idd_keys}
+
+
+def _baseline_from_payload(npz, manifest):
+    from repro.core.baselines_power import BASELINE_MODELS
+    cls = BASELINE_MODELS[manifest["kind"]]
+    vs = [int(v) for v in np.asarray(npz["vendor_ids"])]
+    idd_keys = list(manifest["idd_keys"])
+    table = np.asarray(npz["idd_table"], np.float64)
+    return cls.from_datasheets(
+        {v: {k: float(table[i, j]) for j, k in enumerate(idd_keys)}
+         for i, v in enumerate(vs)})
+
+
+# ---- legacy v1 pickle -----------------------------------------------------
+def _load_v1_pickle(path: str):
+    """Load a schema-v1 pickle: either a ``Vampire.save`` blob (dict keyed
+    by vendor id) or the old benchmark fit cache (``{"tag", "model"}``)."""
+    from repro.core.vampire import Vampire
+    with open(path, "rb") as f:
+        blob = pickle.load(f)
+    warnings.warn(
+        f"{path} is a schema-v1 pickle model blob; loading via the legacy "
+        "migration path. Re-save it with model.save() to get the v2 "
+        ".npz + manifest format.", DeprecationWarning, stacklevel=2)
+    if isinstance(blob, dict) and isinstance(blob.get("model"), Vampire):
+        return blob["model"]     # old benchmarks/common.py fit cache
+    if not (isinstance(blob, dict)
+            and all(isinstance(v, (int, np.integer)) for v in blob)):
+        raise ValueError(f"unrecognized v1 model blob in {path}")
+    by_vendor = {v: _rebuild_vendor(v, d) for v, d in blob.items()}
+    bands = {v: tuple(d["band"]) for v, d in blob.items()}
+    return Vampire(by_vendor=by_vendor, variation_band=bands)
+
+
+def _save_v1_pickle(model, path: str) -> None:
+    """Write the legacy schema-v1 pickle blob.  Kept ONLY to generate
+    migration-test fixtures; production code saves v2."""
+    blob = {v: {"datadep": np.asarray(vc.datadep),
+                "i2n": vc.i2n,
+                "bank_open_delta": np.asarray(vc.bank_open_delta),
+                "bank_read_factor": np.asarray(vc.bank_read_factor),
+                "bank_write_factor": np.asarray(vc.bank_write_factor),
+                "q_actpre": vc.q_actpre,
+                "row_ones_slope": vc.row_ones_slope,
+                "q_ref": vc.q_ref, "i_pd": vc.i_pd,
+                "idd_datasheet": vc.idd_datasheet,
+                "band": model.variation_band[v]}
+            for v, vc in model.by_vendor.items()}
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+
+
+# ---------------------------------------------------------------------------
+# Registry (the serving CLI's --power-model flag resolves through this)
+# ---------------------------------------------------------------------------
+def make_estimator(kind: str, vampire) -> "Estimator":
+    """Build the requested estimator kind from a fitted VAMPIRE model (the
+    baselines share its derived per-vendor datasheets)."""
+    if kind == "vampire":
+        return vampire
+    from repro.core.baselines_power import BASELINE_MODELS
+    if kind in BASELINE_MODELS:
+        return BASELINE_MODELS[kind].from_vampire(vampire)
+    raise ValueError(f"unknown estimator kind {kind!r}; expected 'vampire', "
+                     f"'micron', or 'drampower'")
+
+
+ESTIMATOR_KINDS = ("vampire", "micron", "drampower")

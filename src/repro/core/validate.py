@@ -6,9 +6,11 @@ randomly selected subset of modules (8 from Vendor A, 7 from B, 7 from C),
 and reports the mean absolute percentage error (MAPE) of VAMPIRE, DRAMPower,
 and the Micron power model against the 'measured' current.
 
-Both sides of the comparison go through the batched engines: the VAMPIRE
-predictions for the whole (sweep x vendor) grid are ONE
-``model.estimate_many`` dispatch (``repro.core.estimate_batch``), and the
+Every model is scored through the unified estimator protocol
+(``repro.core.model_api``): the whole (sweep x vendor) prediction grid of
+each estimator is ONE ``estimate`` dispatch over a shared padded
+``TraceBatch`` — VAMPIRE and the datasheet baselines ride the identical
+batched code path, there is no per-(sweep, vendor) Python loop.  The
 fleet's ground-truth measurements are one padded probe batch through
 ``fleet.run_probes`` with stable per-sweep noise keys.
 """
@@ -18,9 +20,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import baselines_power, device_sim, idd_loops
+from repro.core import device_sim, estimate_batch, idd_loops
 from repro.core import fleet as fleet_lib
-from repro.core import params as P
+from repro.core.baselines_power import DRAMPowerModel, MicronModel
+from repro.core.model_api import Estimator
 from repro.core.vampire import Vampire
 
 # n values swept in the validation experiments (paper: 0..764)
@@ -64,28 +67,35 @@ def select_validation_modules(fleet_modules=None, seed: int = 42):
     return chosen
 
 
+def default_estimators(model: Vampire) -> dict[str, Estimator]:
+    """The paper's comparison set: the fitted VAMPIRE model plus both
+    datasheet baselines built from its derived per-vendor datasheets."""
+    return {"vampire": model,
+            "drampower": DRAMPowerModel.from_vampire(model),
+            "micron": MicronModel.from_vampire(model)}
+
+
 def run_validation(model: Vampire, fleet=None, n_values=N_READS,
-                   seed: int = 42) -> ValidationResult:
+                   seed: int = 42,
+                   estimators: dict[str, Estimator] | None = None
+                   ) -> ValidationResult:
+    """Score ``estimators`` (default: VAMPIRE + Micron + DRAMPower built
+    from ``model``) against held-out fleet measurements.  Any object
+    implementing the estimator protocol can ride along — each one's full
+    (sweep x vendor) grid is a single batched dispatch."""
     modules = select_validation_modules(fleet, seed=seed)
-    ds = {v: model.by_vendor[v].idd_datasheet for v in model.by_vendor}
+    if estimators is None:
+        estimators = default_estimators(model)
 
     n_values = list(n_values)
     sweeps = [idd_loops.validation_sweep(n) for n in n_values]
     vendors = sorted({m.spec.vendor for m in modules})
 
-    # ---- VAMPIRE: the whole (sweep x vendor) grid in one dispatch --------
-    vamp = np.asarray(
-        model.estimate_many(sweeps, vendors).avg_current_ma, np.float64)
-
-    preds = {name: {} for name in ("vampire", "drampower", "micron")}
-    for j, v in enumerate(vendors):
-        for i, n in enumerate(n_values):
-            preds["vampire"][(v, n)] = float(vamp[i, j])
-            preds["drampower"][(v, n)] = float(
-                baselines_power.drampower(sweeps[i], ds[v]).avg_current_ma)
-            preds["micron"][(v, n)] = float(
-                baselines_power.micron_power(sweeps[i], ds[v])
-                .avg_current_ma)
+    # ---- every estimator: the whole (sweep x vendor) grid, one dispatch --
+    batch = estimate_batch.TraceBatch.from_traces(sweeps)
+    grids = {name: np.asarray(est.estimate(batch, vendors).avg_current_ma,
+                              np.float64)
+             for name, est in estimators.items()}        # each (S, V)
 
     # ---- ground truth: one padded probe batch over the held-out modules --
     points = [fleet_lib.ProbePoint(("validation", n), tr, 0,
@@ -93,19 +103,21 @@ def run_validation(model: Vampire, fleet=None, n_values=N_READS,
               for i, (n, tr) in enumerate(zip(n_values, sweeps))]
     measured_mat = fleet_lib.run_probes(modules, points, engine="batched")
 
+    vcol = {v: j for j, v in enumerate(vendors)}
     raw = {}
     errs: dict[str, dict[int, list[float]]] = {
-        name: {0: [], 1: [], 2: []} for name in preds}
+        name: {v: [] for v in vendors} for name in grids}
     for mi, m in enumerate(modules):
         v = m.spec.vendor
         for i, n in enumerate(n_values):
             measured = float(measured_mat[mi, i])
             raw[(v, m.spec.module_id, n)] = {
                 "measured": measured,
-                **{name: preds[name][(v, n)] for name in preds}}
-            for name in preds:
+                **{name: float(grids[name][i, vcol[v]]) for name in grids}}
+            for name in grids:
                 errs[name][v].append(
-                    abs(preds[name][(v, n)] - measured) / measured * 100.0)
+                    abs(float(grids[name][i, vcol[v]]) - measured)
+                    / measured * 100.0)
 
     mape = {name: {v: float(np.mean(e)) for v, e in per_v.items() if e}
             for name, per_v in errs.items()}

@@ -1,61 +1,94 @@
 """VAMPIRE — Variation-Aware model of Memory Power Informed by Real
 Experiments (paper Section 9), fitted from the characterization campaign.
 
-Public API
-----------
-``Vampire.fit(fleet)``        run the campaign and build the model
-``model.estimate(trace, vendor)``           EnergyReport (mean module)
-``model.estimate_range(trace, vendor)``     (lo, mean, hi) EnergyReports
-                                            across the process variation
-                                            captured per vendor
-``model.estimate_distribution(trace, vendor, ones_frac, toggle_frac)``
-    the paper's no-data-trace mode: the caller supplies a distribution of
-    ones / toggling instead of actual 64-byte values.
+Public API (the unified estimator protocol, ``repro.core.model_api``)
+---------------------------------------------------------------------
+``Vampire.fit(fleet)``       run the campaign and build the model
+``model.estimate(traces, vendors=None, *, mode='mean', impl='vectorized',
+                 ones_frac=None, toggle_frac=None)``
+    ONE entry point for every estimation question.  ``traces`` is a single
+    trace, a sequence of ragged traces, or a prebuilt
+    ``estimate_batch.TraceBatch``; the full (traces x vendors) report
+    matrix is evaluated in one jitted ``vmap(vmap)`` dispatch and every
+    leaf of the returned ``EnergyReport`` has shape ``(traces, vendors)``.
 
-Batched API (the production estimation path; see
-``repro.core.estimate_batch``) — each evaluates the full
-(traces x vendors) matrix in ONE jitted dispatch over NOP/dt=0-padded
-traces, with every report leaf shaped ``(traces, vendors)``:
+    * ``mode='mean'``          the report matrix.
+    * ``mode='range'``         (lo, mean, hi) matrices across each vendor's
+      process-variation band (captured from the per-module IDD spread).
+    * ``mode='distribution'``  the paper's no-data-trace mode: the caller
+      supplies ``ones_frac``/``toggle_frac`` (scalar or per trace) instead
+      of actual 64-byte values.
+    * ``impl='vectorized'`` is the production batched engine;
+      ``impl='scan'`` (lax.scan oracle) and ``impl='kernel'`` (Pallas
+      per-command energy) evaluate pair-by-pair and exist for
+      cross-checking.
 
-``model.estimate_many(traces, vendors)``          EnergyReport matrix
-``model.estimate_range_many(traces, vendors)``    (lo, mean, hi) matrices,
-    the variation band vmapped across the same dispatch
-``model.estimate_distribution_many(traces, vendors, ones_frac=, toggle_frac=)``
-    batched no-data-trace mode (fractions scalar or per trace)
+``model.save(path)`` / ``Vampire.load(path)``
+    schema-v2 ``.npz`` + JSON-manifest serialization; v1 pickle blobs
+    still load with a ``DeprecationWarning`` (``repro.core.model_api``).
 
-``traces`` may be a single trace, a sequence of ragged traces, or a
-prebuilt ``estimate_batch.TraceBatch`` (reuse one when scoring the same
-set repeatedly — padding is then paid once).
+The model IS a pytree
+---------------------
+The fitted state lives in a :class:`FleetModel`: per-vendor
+:class:`PowerParams` stacked once at fit time along a leading vendor axis,
+with the variation bands, datasheet IDD tables, and vendor ids as array
+leaves.  ``Vampire`` itself is a registered pytree whose children are those
+leaves (the raw characterization record rides along as static aux data), so
+a fitted model can be passed straight through ``jax.jit`` / ``jax.vmap`` /
+``jax.device_put`` — e.g. ``jax.jit(lambda m: m.estimate(batch))(model)``
+compiles with the model as a traced argument.
 
-Per-trace implementations: ``impl='vectorized'`` (production),
-``impl='scan'`` (oracle), ``impl='kernel'`` (Pallas-fused per-command
-energy; see ``repro.kernels.vampire_energy``).
+The pre-unification methods (``estimate(trace, vendor)`` positional,
+``estimate_range``, ``estimate_distribution`` and their ``*_many``
+variants) remain as thin shims that delegate to ``estimate`` and emit
+``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import dataclasses
-import pickle
+import warnings
+from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import characterize, device_sim
+from repro.core import characterize, device_sim, model_api
 from repro.core.dram import CommandTrace
-from repro.core.energy_model import (EnergyReport, PowerParams,
-                                     charge_from_features,
-                                     distribution_features,
-                                     extract_structural_features,
-                                     finalize_features, scale_report,
-                                     trace_energy_scan,
-                                     trace_energy_vectorized, _report)
+from repro.core.energy_model import (EnergyReport, PowerParams, scale_report,
+                                     trace_energy_scan)
+from repro.core.fleet import stack_params
+
+
+class FleetModel(NamedTuple):
+    """The pytree-native fitted state: every leaf carries a leading vendor
+    axis, so the whole bundle jits, vmaps, and shards as one unit."""
+    params: PowerParams        # stacked (V, ...) fitted per-vendor params
+    band: jax.Array            # (V, 2) multiplicative (lo, hi) variation
+    idd_datasheet: jax.Array   # (V, K) datasheet IDDs (keys in `idd_keys`)
+    vendor_ids: jax.Array      # (V,) int32
+
+
+def _squeeze_pair(rep: EnergyReport) -> EnergyReport:
+    """(1, 1)-shaped report matrix -> scalar-leaf report (legacy shape)."""
+    return jax.tree_util.tree_map(lambda x: x[0, 0], rep)
+
+
+def _shim_warning(old: str, new: str):
+    warnings.warn(
+        f"Vampire.{old} is deprecated; call Vampire.{new} instead "
+        "(the unified estimator protocol, repro.core.model_api).",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
-class Vampire:
+class Vampire(model_api.StackedEstimatorMixin):
     by_vendor: dict[int, characterize.VendorCharacterization]
     # multiplicative process-variation band per vendor (lo, hi) captured from
     # the spread of per-module IDD measurements during characterization
     variation_band: dict[int, tuple[float, float]] = None  # type: ignore
+
+    kind = "vampire"
 
     def __post_init__(self):
         if self.variation_band is None:
@@ -77,125 +110,219 @@ class Vampire:
         ``engine='batched'`` (default) runs the campaign through the vmapped
         fleet engine (``repro.core.fleet``); ``engine='serial'`` replays it
         one measurement at a time (the correctness oracle)."""
-        return cls(by_vendor=characterize.characterize_fleet(fleet, **kw))
+        model = cls(by_vendor=characterize.characterize_fleet(fleet, **kw))
+        model.fleet  # stack the per-vendor params ONCE, at fit time
+        return model
+
+    @property
+    def vendors(self) -> tuple[int, ...]:
+        return tuple(sorted(self.by_vendor))
 
     def params(self, vendor: int) -> PowerParams:
         return self.by_vendor[vendor].fitted
 
-    # ------------------------------------------------------------- estimate
-    def estimate(self, trace: CommandTrace, vendor: int,
-                 impl: str = "vectorized") -> EnergyReport:
-        pp = self.params(vendor)
-        if impl == "vectorized":
-            return trace_energy_vectorized(trace, pp)
-        if impl == "scan":
-            return trace_energy_scan(trace, pp)
-        if impl == "kernel":
-            from repro.kernels.vampire_energy import ops as vops
-            return vops.trace_energy_kernel(trace, pp)
-        raise ValueError(impl)
+    # -------------------------------------------------- the pytree bundle
+    @property
+    def fleet(self) -> FleetModel:
+        fm = self.__dict__.get("_fleet")
+        if fm is None:
+            fm = self._build_fleet()
+            self.__dict__["_fleet"] = fm
+        return fm
 
+    def _build_fleet(self) -> FleetModel:
+        vs = self.vendors
+        for v in vs:
+            if self.by_vendor[v].fitted is None:
+                self.by_vendor[v].build_params()
+        idd_keys = sorted(self.by_vendor[vs[0]].idd_datasheet)
+        return FleetModel(
+            params=stack_params([self.by_vendor[v].fitted for v in vs]),
+            band=jnp.asarray([self.variation_band[v] for v in vs],
+                             jnp.float32),
+            idd_datasheet=jnp.asarray(
+                [[self.by_vendor[v].idd_datasheet[k] for k in idd_keys]
+                 for v in vs], jnp.float32),
+            vendor_ids=jnp.asarray(vs, jnp.int32))
+
+    def _stacked_for(self, idx: tuple[int, ...]):
+        """(stacked params, band) rows for the requested vendor indices;
+        subsets are sliced once and memoized per vendor tuple
+        (``model_api.StackedEstimatorMixin``)."""
+        fm = self.fleet
+        if idx == tuple(range(fm.band.shape[0])):
+            return fm.params, fm.band
+
+        def build():
+            sel = jnp.asarray(idx, jnp.int32)
+            return (jax.tree_util.tree_map(lambda x: x[sel], fm.params),
+                    fm.band[sel])
+
+        return self._memo_subset(idx, fm, build)
+
+    # ------------------------------------------------------------- estimate
+    def estimate(self, traces, vendors=None, *legacy_impl,
+                 mode: model_api.EstimateMode = "mean",
+                 impl: str = "vectorized", ones_frac=None, toggle_frac=None):
+        """The unified entry point (see the module docstring).
+
+        NOTE: portable protocol code must pass ``vendors`` as a sequence
+        (or ``None``).  The (single trace, bare int vendor) call shape is
+        reserved for the legacy ``estimate(trace, vendor)`` form — it
+        emits ``DeprecationWarning`` and returns the historical
+        scalar-leaf report rather than a (1, 1) matrix."""
+        if legacy_impl or (isinstance(traces, CommandTrace)
+                           and isinstance(vendors, (int, np.integer))):
+            if not (isinstance(traces, CommandTrace)
+                    and isinstance(vendors, (int, np.integer))):
+                raise TypeError("positional impl is only accepted by the "
+                                "legacy estimate(trace, vendor, impl) form "
+                                "(one CommandTrace, one int vendor)")
+            if mode != "mean" or ones_frac is not None \
+                    or toggle_frac is not None:
+                # the legacy form is mean-mode only; silently forcing
+                # mode='mean' here would return numerically wrong results
+                raise TypeError(
+                    "the legacy estimate(trace, vendor) form does not "
+                    "accept mode/ones_frac/toggle_frac; pass vendors as a "
+                    "sequence, e.g. estimate([trace], (vendor,), mode=...)")
+            _shim_warning("estimate(trace, vendor)",
+                          "estimate(traces, vendors)")
+            impl = legacy_impl[0] if legacy_impl else impl
+            return _squeeze_pair(self._estimate(
+                traces, (int(vendors),), mode="mean", impl=impl))
+        return self._estimate(traces, vendors, mode=mode, impl=impl,
+                              ones_frac=ones_frac, toggle_frac=toggle_frac)
+
+    def _estimate(self, traces, vendors=None, *, mode="mean",
+                  impl="vectorized", ones_frac=None, toggle_frac=None):
+        from repro.core import estimate_batch
+        model_api.validate_estimate_args(mode, ones_frac, toggle_frac)
+        _, idx = model_api.resolve_vendor_indices(self.vendors, vendors)
+        stacked, band = self._stacked_for(idx)
+        tb = self._batch_cache.get(traces)
+
+        if mode == "distribution":
+            if impl != "vectorized":
+                raise ValueError("mode='distribution' is only implemented "
+                                 "for impl='vectorized'")
+            return estimate_batch.batched_distribution_reports(
+                tb.trace, tb.weight, stacked,
+                jnp.asarray(ones_frac, jnp.float32),
+                jnp.asarray(toggle_frac, jnp.float32))
+
+        if impl == "vectorized":
+            if mode == "range":
+                return estimate_batch.batched_range_reports(
+                    tb.trace, tb.weight, stacked, band)
+            return estimate_batch.batched_reports(tb.trace, tb.weight,
+                                                  stacked)
+        mean = self._oracle_matrix(traces, tb, stacked, impl)
+        if mode == "mean":
+            return mean
+        lo = scale_report(mean, band[None, :, 0])
+        hi = scale_report(mean, band[None, :, 1])
+        return lo, mean, hi
+
+    def _oracle_matrix(self, traces, tb, stacked: PowerParams,
+                       impl: str) -> EnergyReport:
+        """The cross-check implementations, pair by pair: scan (lax.scan
+        state machine) and kernel (Pallas per-command energy).  Prefers the
+        caller's original ragged traces; falls back to the padded rows
+        (exact: a dt=0 NOP draws no charge and moves no state)."""
+        if isinstance(traces, CommandTrace):
+            originals = [traces]
+        elif isinstance(traces, (list, tuple)):
+            originals = list(traces)
+        else:
+            originals = [jax.tree_util.tree_map(lambda x: x[i], tb.trace)
+                         for i in range(tb.n_traces)]
+        n_vendors = len(jax.tree_util.tree_leaves(stacked)[0])
+        if impl == "scan":
+            per_trace = [jax.vmap(lambda pp, tr=tr: trace_energy_scan(tr, pp)
+                                  )(stacked) for tr in originals]
+        elif impl == "kernel":
+            from repro.kernels.vampire_energy import ops as vops
+            per_trace = []
+            for tr in originals:
+                reps = [vops.trace_energy_kernel(
+                    tr, jax.tree_util.tree_map(lambda x: x[j], stacked))
+                    for j in range(n_vendors)]
+                per_trace.append(jax.tree_util.tree_map(
+                    lambda *leaves: jnp.stack(leaves), *reps))
+        else:
+            raise ValueError(impl)
+        return jax.tree_util.tree_map(lambda *rows: jnp.stack(rows),
+                                      *per_trace)
+
+    # --------------------------------------------------- deprecated shims
     def estimate_range(self, trace: CommandTrace, vendor: int,
                        impl: str = "vectorized"
                        ) -> tuple[EnergyReport, EnergyReport, EnergyReport]:
-        """(lo, mean, hi) EnergyReports across the vendor's process-variation
-        band. The band is a multiplicative current factor, so charge and
-        energy carry it too — callers comparing *energy* (e.g. the encoding
-        study) see the same relative band as callers comparing current."""
-        rep = self.estimate(trace, vendor, impl)
-        lo, hi = self.variation_band[vendor]
-        return scale_report(rep, lo), rep, scale_report(rep, hi)
-
-    # -------------------------------------------------------- batched path
-    def estimate_many(self, traces, vendors=None) -> EnergyReport:
-        """Energy reports for every (trace, vendor) pair in ONE dispatch.
-
-        ``traces``: a sequence of (ragged) traces, a single trace, or a
-        prebuilt ``estimate_batch.TraceBatch``; ``vendors`` defaults to all
-        fitted vendors. Every leaf of the returned report has shape
-        ``(len(traces), len(vendors))``."""
-        from repro.core import estimate_batch
-        return estimate_batch.estimate_many(self, traces, vendors)
-
-    def estimate_range_many(self, traces, vendors=None
-                            ) -> tuple[EnergyReport, EnergyReport,
-                                       EnergyReport]:
-        """Batched ``estimate_range``: (lo, mean, hi) report matrices with
-        the per-vendor variation band vmapped over the dispatch."""
-        from repro.core import estimate_batch
-        return estimate_batch.estimate_range_many(self, traces, vendors)
-
-    def estimate_distribution_many(self, traces, vendors=None, *,
-                                   ones_frac, toggle_frac) -> EnergyReport:
-        """Batched no-data-trace mode; fractions are scalars or per-trace
-        arrays."""
-        from repro.core import estimate_batch
-        return estimate_batch.estimate_distribution_many(
-            self, traces, vendors, ones_frac=ones_frac,
-            toggle_frac=toggle_frac)
+        _shim_warning("estimate_range", "estimate(..., mode='range')")
+        return tuple(_squeeze_pair(r) for r in self._estimate(
+            trace, (int(vendor),), mode="range", impl=impl))
 
     def estimate_distribution(self, trace: CommandTrace, vendor: int,
                               ones_frac: float, toggle_frac: float
                               ) -> EnergyReport:
-        """Traces without data values: approximate data dependency with a
-        user-supplied expected fraction of ones and of toggling wires."""
-        pp = self.params(vendor)
-        sf = distribution_features(extract_structural_features(trace),
-                                   ones_frac, toggle_frac)
-        charges = charge_from_features(trace, finalize_features(sf, pp), pp)
-        return _report(jnp.sum(charges), trace.total_cycles())
+        _shim_warning("estimate_distribution",
+                      "estimate(..., mode='distribution')")
+        return _squeeze_pair(self._estimate(
+            trace, (int(vendor),), mode="distribution",
+            ones_frac=ones_frac, toggle_frac=toggle_frac))
+
+    def estimate_many(self, traces, vendors=None) -> EnergyReport:
+        _shim_warning("estimate_many", "estimate")
+        return self._estimate(traces, vendors)
+
+    def estimate_range_many(self, traces, vendors=None
+                            ) -> tuple[EnergyReport, EnergyReport,
+                                       EnergyReport]:
+        _shim_warning("estimate_range_many", "estimate(..., mode='range')")
+        return self._estimate(traces, vendors, mode="range")
+
+    def estimate_distribution_many(self, traces, vendors=None, *,
+                                   ones_frac, toggle_frac) -> EnergyReport:
+        _shim_warning("estimate_distribution_many",
+                      "estimate(..., mode='distribution')")
+        return self._estimate(traces, vendors, mode="distribution",
+                              ones_frac=ones_frac, toggle_frac=toggle_frac)
 
     # ------------------------------------------------------------------ io
-    def save(self, path: str):
-        blob = {v: {"datadep": np.asarray(vc.datadep),
-                    "i2n": vc.i2n,
-                    "bank_open_delta": np.asarray(vc.bank_open_delta),
-                    "bank_read_factor": np.asarray(vc.bank_read_factor),
-                    "bank_write_factor": np.asarray(vc.bank_write_factor),
-                    "q_actpre": vc.q_actpre,
-                    "row_ones_slope": vc.row_ones_slope,
-                    "q_ref": vc.q_ref, "i_pd": vc.i_pd,
-                    "idd_datasheet": vc.idd_datasheet,
-                    "band": self.variation_band[v]}
-                for v, vc in self.by_vendor.items()}
-        with open(path, "wb") as f:
-            pickle.dump(blob, f)
+    def save(self, path: str, *, meta: dict | None = None):
+        """Schema-v2 ``.npz`` + JSON-manifest blob (``repro.core.model_api``);
+        round-trips the fitted params, bands, datasheets, and — when present
+        — the raw campaign sweeps the benchmarks plot."""
+        model_api.save_estimator(self, path, meta=meta)
 
     @classmethod
     def load(cls, path: str) -> "Vampire":
-        """Rebuild a fitted model from a ``save`` blob.
+        """Load a ``save`` blob (v2 ``.npz``, or a v1 pickle with a
+        ``DeprecationWarning``)."""
+        model = model_api.load_estimator(path)
+        if not isinstance(model, cls):
+            raise TypeError(f"{path} holds a {type(model).__name__}, "
+                            "not a Vampire model")
+        return model
 
-        The blob stores only the fitted quantities (not the raw campaign
-        sweeps), so the reconstructed ``VendorCharacterization`` carries
-        empty measurement containers — everything ``estimate*`` needs
-        (fitted :class:`PowerParams`, datasheet values, the variation band)
-        round-trips exactly."""
-        with open(path, "rb") as f:
-            blob = pickle.load(f)
-        by_vendor = {}
-        bands = {}
-        for v, d in blob.items():
-            vc = characterize.VendorCharacterization(
-                vendor=v,
-                idd_measured={},
-                idd_datasheet=dict(d["idd_datasheet"]),
-                idd_extrapolation_r2={},
-                datadep=np.asarray(d["datadep"]),
-                datadep_r2=np.zeros((4, 2)),
-                ones_sweep={},
-                i2n=float(d["i2n"]),
-                bank_open_delta=np.asarray(d["bank_open_delta"]),
-                bank_read_factor=np.asarray(d["bank_read_factor"]),
-                bank_write_factor=np.asarray(d["bank_write_factor"]),
-                q_actpre=float(d["q_actpre"]),
-                row_ones_slope=float(d["row_ones_slope"]),
-                row_sweep={},
-                q_ref=float(d["q_ref"]),
-                i_pd=float(d["i_pd"]))
-            vc.build_params()
-            by_vendor[v] = vc
-            bands[v] = tuple(d["band"])
-        return cls(by_vendor=by_vendor, variation_band=bands)
+
+def _vampire_flatten(m: Vampire):
+    return (m.fleet,), (m._aux_static((m.by_vendor, m.variation_band)),)
+
+
+def _vampire_unflatten(aux, children) -> Vampire:
+    m = object.__new__(Vampire)
+    by_vendor, band = aux[0].value
+    m.by_vendor = by_vendor
+    m.variation_band = band
+    m.__dict__["_fleet"] = children[0]
+    m.__dict__["_aux"] = aux[0]   # keep treedefs equal across round trips
+    return m
+
+
+jax.tree_util.register_pytree_node(Vampire, _vampire_flatten,
+                                   _vampire_unflatten)
 
 
 def reference_vampire() -> Vampire:

@@ -13,12 +13,16 @@ smoke path exercises the production layout (trivially, on one device).
 HBM traffic (execution-count-weighted HLO analysis, as in the dry run) is
 apportioned per sequence, wrapped into DRAM command traces carrying the
 decode batch's actual output bytes, and scored against every requested
-vendor in ONE batched ``Vampire.estimate_many`` dispatch per batch —
-plus the HBM2e-anchored extrapolation (``repro.core.hbm``).
+vendor in ONE batched ``estimate`` dispatch per batch — plus the
+HBM2e-anchored extrapolation (``repro.core.hbm``).  The scorer is any
+unified-protocol estimator (``repro.core.model_api``): ``--power-model
+vampire|micron|drampower`` picks the physics, ``--vampire PATH`` loads a
+saved model (v2 ``.npz`` or legacy v1 pickle) instead of the quick
+reference fit.
 
     python -m repro.launch.serve --arch qwen2.5-3b --smoke --batch 4 \
         --prompt-len 64 --decode-tokens 32 --data 1 --model 1 \
-        --temperature 0.7 --power-report
+        --temperature 0.7 --power-report --power-model vampire
 """
 from __future__ import annotations
 
@@ -55,7 +59,8 @@ class ServeJob:
     # power reporting (off by default: it fits/loads a VAMPIRE model)
     power_report: bool = False
     power_vendors: tuple[int, ...] = (0, 1, 2)
-    vampire_path: str | None = None   # fitted-model pickle (Vampire.save)
+    power_model: str = "vampire"      # estimator kind: vampire|micron|drampower
+    vampire_path: str | None = None   # saved model blob (model_api v2 / v1)
 
 
 def run(job: ServeJob) -> dict:
@@ -152,11 +157,23 @@ def _decode_traffic_bytes(compiled) -> float:
     return float(ca.get("bytes accessed", 0.0)) if ca else 0.0
 
 
-def _load_vampire(job: ServeJob):
-    from repro.core.vampire import Vampire, reference_vampire
+def _load_estimator(job: ServeJob):
+    """Resolve the power model: a saved blob if given (any kind the v2
+    loader knows), else the quick reference fit — then adapt it to the
+    requested ``--power-model`` kind through the protocol registry."""
+    from repro.core import model_api
+    from repro.core.vampire import reference_vampire
     if job.vampire_path:
-        return Vampire.load(job.vampire_path)
-    return reference_vampire()
+        model = model_api.load_estimator(job.vampire_path)
+        if model.kind == job.power_model:
+            return model
+        if model.kind != "vampire":
+            raise ValueError(
+                f"{job.vampire_path} holds a {model.kind!r} estimator but "
+                f"--power-model={job.power_model!r} was requested")
+    else:
+        model = reference_vampire()
+    return model_api.make_estimator(job.power_model, model)
 
 
 def power_report(job: ServeJob, compiled_decode, logits, tokens, *,
@@ -164,14 +181,14 @@ def power_report(job: ServeJob, compiled_decode, logits, tokens, *,
     """Score one decode batch's HBM traffic through the batched estimator.
 
     One DRAM command trace per sequence (carrying that sequence's actual
-    logits/token bytes as line data), one ``estimate_many`` dispatch for
-    the whole (sequences x vendors) matrix, energies scaled from the
-    trace's modeled bytes to the step's measured traffic share."""
+    logits/token bytes as line data), one unified-protocol ``estimate``
+    dispatch for the whole (sequences x vendors) matrix, energies scaled
+    from the trace's modeled bytes to the step's measured traffic share."""
     from repro.core import hbm, traces
     from repro.core.dram import LINE_BYTES
 
-    model = _load_vampire(job)
-    vendors = [v for v in job.power_vendors if v in model.by_vendor]
+    model = _load_estimator(job)
+    vendors = [v for v in job.power_vendors if v in model.vendors]
     traffic = _decode_traffic_bytes(compiled_decode)
     # the HLO traffic is per DEVICE; with the batch sharded over the data
     # axis each device's step only covers batch/n_data sequences
@@ -197,29 +214,33 @@ def power_report(job: ServeJob, compiled_decode, logits, tokens, *,
         seq_traces.append(traces.app_trace(spec, n_requests=n_req,
                                            lines=lines))
 
-    rep = model.estimate_many(seq_traces, vendors)       # (B, V) reports
+    rep = model.estimate(seq_traces, vendors)            # (B, V) reports
     modeled_bytes = np.asarray(
         [traces.trace_request_lines(tr).shape[0] * LINE_BYTES
          for tr in seq_traces], np.float64)
     scale = (bytes_per_seq / np.maximum(modeled_bytes, 1.0))[:, None]
     energy_pj = np.asarray(rep.energy_pj, np.float64) * scale  # per step
 
-    ones_frac, toggle_frac = hbm.tensor_stats(logits)
-    hmodel = hbm.HbmEnergyModel.from_vampire(model.params(vendors[0]))
-    step = hbm.step_energy(hmodel, read_bytes=traffic * 0.85,
-                           write_bytes=traffic * 0.15,
-                           step_seconds=step_seconds,
-                           ones_frac=ones_frac, toggle_frac=toggle_frac)
-    return {
+    out = {
         "vendors": list(vendors),
+        "power_model": model.kind,
         "traffic_bytes_per_step": traffic,
         "bytes_per_seq_per_step": bytes_per_seq,
         "ddr_energy_pj_per_seq_step": energy_pj,          # (B, V)
         "ddr_energy_uj_per_token_mean": float(energy_pj.mean() * 1e-6),
-        "hbm_step_energy_uj": step.total_pj * 1e-6,
-        "hbm_ones_frac": ones_frac,
-        "hbm_toggle_frac": toggle_frac,
     }
+    # the HBM2e-anchored extrapolation needs fitted VAMPIRE PowerParams;
+    # the datasheet baselines have none (no data dependency to anchor)
+    if model.kind == "vampire":
+        ones_frac, toggle_frac = hbm.tensor_stats(logits)
+        hmodel = hbm.HbmEnergyModel.from_vampire(model.params(vendors[0]))
+        step = hbm.step_energy(hmodel, read_bytes=traffic * 0.85,
+                               write_bytes=traffic * 0.15,
+                               step_seconds=step_seconds,
+                               ones_frac=ones_frac, toggle_frac=toggle_frac)
+        out.update(hbm_step_energy_uj=step.total_pj * 1e-6,
+                   hbm_ones_frac=ones_frac, hbm_toggle_frac=toggle_frac)
+    return out
 
 
 def main():
@@ -236,9 +257,12 @@ def main():
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--power-report", action="store_true")
+    p.add_argument("--power-model", default="vampire",
+                   choices=("vampire", "micron", "drampower"),
+                   help="estimator kind scoring the decode HBM traffic")
     p.add_argument("--vampire", default=None,
-                   help="fitted VAMPIRE pickle (Vampire.save); quick "
-                        "reference fit when omitted")
+                   help="saved model blob (model.save: v2 .npz, or legacy "
+                        "v1 pickle); quick reference fit when omitted")
     args = p.parse_args()
     res = run(ServeJob(arch=args.arch, smoke=args.smoke, batch=args.batch,
                        prompt_len=args.prompt_len,
@@ -246,15 +270,19 @@ def main():
                        data=args.data, model=args.model, seed=args.seed,
                        temperature=args.temperature,
                        power_report=args.power_report,
+                       power_model=args.power_model,
                        vampire_path=args.vampire))
     print(f"prefill={res['prefill_s']:.2f}s decode p50={res['decode_p50_ms']:.1f}ms "
           f"p99={res['decode_p99_ms']:.1f}ms throughput={res['tokens_per_s']:.1f} tok/s")
     if "power" in res:
         pw = res["power"]
-        print(f"power: {pw['traffic_bytes_per_step']/1e6:.1f} MB/step HBM "
-              f"traffic, DDR-model {pw['ddr_energy_uj_per_token_mean']:.2f} "
-              f"uJ/token (vendors {pw['vendors']}), HBM2e-anchored "
-              f"{pw['hbm_step_energy_uj']:.1f} uJ/step")
+        line = (f"power[{pw['power_model']}]: "
+                f"{pw['traffic_bytes_per_step']/1e6:.1f} MB/step HBM "
+                f"traffic, DDR-model {pw['ddr_energy_uj_per_token_mean']:.2f} "
+                f"uJ/token (vendors {pw['vendors']})")
+        if "hbm_step_energy_uj" in pw:
+            line += f", HBM2e-anchored {pw['hbm_step_energy_uj']:.1f} uJ/step"
+        print(line)
 
 
 if __name__ == "__main__":

@@ -1,10 +1,18 @@
 """Batched multi-trace estimation engine: estimate_many equivalence with the
 per-trace path (leaf-by-leaf, over ragged padding and PDE/PDX traces), the
 vmapped variation band, batched distribution mode, and scan-vs-vectorized
-first-RD/WR-per-bank interleave edge cases."""
+first-RD/WR-per-bank interleave edge cases.
+
+These tests predate the unified ``estimate`` entry point and deliberately
+keep exercising the legacy ``estimate*`` shims (which now delegate to it
+with a DeprecationWarning — hence the module-wide filter); the unified API
+itself is covered leaf-for-leaf in ``test_model_api.py``."""
 import hypothesis
 import hypothesis.strategies as st
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 from repro.core import device_sim, dram, estimate_batch, idd_loops, traces
 from repro.core.dram import ACT, PDE, PDX, PRE, PREA, RD, WR, TIMING

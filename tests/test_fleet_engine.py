@@ -1,7 +1,13 @@
 """Batched fleet-evaluation engine: padding/masking invariance, counter-based
-measurement noise, batched-vs-serial campaign equivalence, model IO."""
+measurement noise, batched-vs-serial campaign equivalence, model IO.
+
+Some tests keep exercising the legacy ``estimate*`` shims on purpose
+(module-wide DeprecationWarning filter); ``test_model_api.py`` covers the
+unified entry point."""
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 import jax.numpy as jnp
 

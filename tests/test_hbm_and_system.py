@@ -1,8 +1,13 @@
-"""TPU/HBM adaptation layer + end-to-end system behaviour."""
+"""TPU/HBM adaptation layer + end-to-end system behaviour.
+
+``test_end_to_end_power_study`` keeps exercising the legacy per-(trace,
+vendor) shim on purpose (DeprecationWarning filter below)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 
 def test_hbm_model_data_dependency(quick_vampire):

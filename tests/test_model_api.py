@@ -1,0 +1,393 @@
+"""The unified estimator protocol (``repro.core.model_api``).
+
+* golden equivalence: the new ``estimate(mode=...)`` entry point matches
+  the legacy ``estimate``/``estimate_range``/``estimate_distribution``
+  (+``_many``) outputs leaf for leaf;
+* the legacy methods are shims that emit ``DeprecationWarning``;
+* the model is a registered pytree (jit with the model as a traced
+  argument, ``device_put``);
+* repeated ``estimate`` calls re-use the fit-time parameter stack and the
+  memoized trace padding — no re-stacking, no recompilation;
+* the datasheet baselines implement the same protocol through the same
+  batched path;
+* schema-v2 save/load round-trips every estimator type and still loads
+  v1 pickles (with a warning).
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import estimate_batch, idd_loops, model_api, traces
+from repro.core.baselines_power import (DRAMPowerModel, MicronModel,
+                                        drampower, micron_power)
+from repro.core.vampire import Vampire
+
+
+def _leafwise_close(a, b, rtol=2e-6, squeeze=False):
+    for name, la, lb in zip(a._fields, a, b):
+        la, lb = np.asarray(la), np.asarray(lb)
+        if squeeze:
+            la = la[0, 0]
+        np.testing.assert_allclose(la, lb, rtol=rtol, err_msg=f"leaf {name}")
+
+
+@pytest.fixture(scope="module")
+def ragged_traces():
+    trs = [traces.app_trace(traces.SPEC_APPS[i], n_requests=n)
+           for i, n in ((0, 100), (5, 180))]
+    trs.append(idd_loops.validation_sweep(24))
+    return trs
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: unified entry point vs the six legacy methods
+# ---------------------------------------------------------------------------
+def test_estimate_matches_legacy_estimate_leaf_for_leaf(quick_vampire,
+                                                        ragged_traces):
+    rep = quick_vampire.estimate(ragged_traces)
+    assert rep.energy_pj.shape == (len(ragged_traces), 3)
+    for i, tr in enumerate(ragged_traces):
+        for j, v in enumerate(quick_vampire.vendors):
+            with pytest.warns(DeprecationWarning):
+                legacy = quick_vampire.estimate(tr, v)
+            for name, a, b in zip(rep._fields, rep, legacy):
+                np.testing.assert_allclose(
+                    np.asarray(a)[i, j], np.asarray(b), rtol=2e-6,
+                    err_msg=f"trace {i} vendor {v} leaf {name}")
+
+
+def test_estimate_mode_range_matches_legacy_range(quick_vampire,
+                                                  ragged_traces):
+    tr, v = ragged_traces[1], 2
+    new = quick_vampire.estimate([tr], (v,), mode="range")
+    with pytest.warns(DeprecationWarning):
+        old = quick_vampire.estimate_range(tr, v)
+    for n, o in zip(new, old):
+        _leafwise_close(n, o, squeeze=True)
+    with pytest.warns(DeprecationWarning):
+        old_many = quick_vampire.estimate_range_many(ragged_traces)
+    new_many = quick_vampire.estimate(ragged_traces, mode="range")
+    for n, o in zip(new_many, old_many):
+        _leafwise_close(n, o)
+
+
+def test_estimate_mode_distribution_matches_legacy(quick_vampire,
+                                                   ragged_traces):
+    new = quick_vampire.estimate(ragged_traces, mode="distribution",
+                                 ones_frac=0.4, toggle_frac=0.2)
+    with pytest.warns(DeprecationWarning):
+        old = quick_vampire.estimate_distribution_many(
+            ragged_traces, ones_frac=0.4, toggle_frac=0.2)
+    _leafwise_close(new, old)
+    with pytest.warns(DeprecationWarning):
+        one = quick_vampire.estimate_distribution(ragged_traces[0], 1,
+                                                  0.4, 0.2)
+    np.testing.assert_allclose(np.asarray(new.energy_pj)[0, 1],
+                               float(one.energy_pj), rtol=2e-6)
+
+
+def test_estimate_matches_legacy_many(quick_vampire, ragged_traces):
+    with pytest.warns(DeprecationWarning):
+        old = quick_vampire.estimate_many(ragged_traces, (0, 2))
+    _leafwise_close(quick_vampire.estimate(ragged_traces, (0, 2)), old)
+
+
+def test_every_legacy_method_warns(quick_vampire):
+    tr = idd_loops.validation_sweep(4)
+    for call in (lambda: quick_vampire.estimate(tr, 0),
+                 lambda: quick_vampire.estimate_range(tr, 0),
+                 lambda: quick_vampire.estimate_distribution(tr, 0, 0.5, 0.1),
+                 lambda: quick_vampire.estimate_many([tr]),
+                 lambda: quick_vampire.estimate_range_many([tr]),
+                 lambda: quick_vampire.estimate_distribution_many(
+                     [tr], ones_frac=0.5, toggle_frac=0.1)):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            call()
+
+
+def test_unified_api_does_not_warn(quick_vampire, ragged_traces):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        quick_vampire.estimate(ragged_traces, (0, 1))
+        quick_vampire.estimate(ragged_traces[0])       # single trace, new API
+        quick_vampire.estimate(ragged_traces, mode="range")
+
+
+def test_estimate_scan_impl_matches_vectorized(quick_vampire, ragged_traces):
+    vec = quick_vampire.estimate(ragged_traces, (1,))
+    scan = quick_vampire.estimate(ragged_traces, (1,), impl="scan")
+    _leafwise_close(scan, vec, rtol=1e-5)
+
+
+def test_estimate_argument_validation(quick_vampire, ragged_traces):
+    with pytest.raises(ValueError, match="distribution"):
+        quick_vampire.estimate(ragged_traces, mode="distribution")
+    with pytest.raises(ValueError, match="unknown mode"):
+        quick_vampire.estimate(ragged_traces, mode="typo")
+    with pytest.raises(ValueError, match="only meaningful"):
+        quick_vampire.estimate(ragged_traces, ones_frac=0.5)
+    with pytest.raises(KeyError, match="not fitted"):
+        quick_vampire.estimate(ragged_traces, (7,))
+    # the legacy (trace, int vendor) form is mean-mode only: explicit
+    # new-API kwargs must be rejected, not silently discarded
+    tr = ragged_traces[0]
+    with pytest.raises(TypeError, match="legacy"):
+        quick_vampire.estimate(tr, 0, mode="range")
+    with pytest.raises(TypeError, match="legacy"):
+        quick_vampire.estimate(tr, 0, mode="distribution",
+                               ones_frac=0.5, toggle_frac=0.2)
+    # positional impl (the legacy 3-arg form) demands exactly one trace:
+    # squeezing a multi-trace matrix would silently drop every other trace
+    with pytest.raises(TypeError, match="one CommandTrace"):
+        quick_vampire.estimate(list(ragged_traces), 0, "scan")
+
+
+# ---------------------------------------------------------------------------
+# Pytree-native model
+# ---------------------------------------------------------------------------
+def test_vampire_is_a_pytree_jit_and_device_put(quick_vampire,
+                                                ragged_traces):
+    """The acceptance bar: the model compiles as a TRACED argument and can
+    be placed on devices as a pytree."""
+    tb = estimate_batch.TraceBatch.from_traces(ragged_traces)
+    ref = np.asarray(quick_vampire.estimate(tb).energy_pj)
+
+    jitted = jax.jit(lambda m: m.estimate(tb).energy_pj)
+    np.testing.assert_allclose(np.asarray(jitted(quick_vampire)), ref,
+                               rtol=2e-6)
+
+    moved = jax.device_put(quick_vampire)
+    assert isinstance(moved, Vampire)
+    np.testing.assert_allclose(np.asarray(moved.estimate(tb).energy_pj),
+                               ref, rtol=2e-6)
+
+    leaves = jax.tree_util.tree_leaves(quick_vampire)
+    assert all(hasattr(leaf, "shape") for leaf in leaves)
+    # the stacked bundle leads with the vendor axis
+    fm = quick_vampire.fleet
+    assert fm.params.datadep.shape[0] == fm.band.shape[0] \
+        == fm.vendor_ids.shape[0] == len(quick_vampire.vendors)
+
+
+def test_flatten_yields_stable_treedefs_and_no_retrace(quick_vampire,
+                                                       baseline_models,
+                                                       ragged_traces):
+    """Regression: the pytree aux is built once per instance, so repeated
+    flattens compare equal and a jitted function taking the model as a
+    traced argument compiles exactly once."""
+    micron, _ = baseline_models
+    for model in (quick_vampire, micron):
+        _, td1 = jax.tree_util.tree_flatten(model)
+        _, td2 = jax.tree_util.tree_flatten(model)
+        assert td1 == td2
+        # device_put round trip keeps the treedef too
+        _, td3 = jax.tree_util.tree_flatten(jax.device_put(model))
+        assert td1 == td3
+    tb = estimate_batch.TraceBatch.from_traces(list(ragged_traces))
+    jitted = jax.jit(lambda m: m.estimate(tb).energy_pj)
+    jitted(quick_vampire)
+    jitted(quick_vampire)
+    assert jitted._cache_size() == 1
+
+
+def test_fleet_params_stacked_once_and_reused(quick_vampire, ragged_traces):
+    fm1 = quick_vampire.fleet
+    quick_vampire.estimate(ragged_traces)
+    quick_vampire.estimate(ragged_traces, (0, 2))
+    assert quick_vampire.fleet is fm1          # no re-stacking per call
+    # vendor subsets are sliced once and memoized per vendor tuple
+    s1 = quick_vampire._stacked_for((0, 2))
+    s2 = quick_vampire._stacked_for((0, 2))
+    assert s1[0] is s2[0] and s1[1] is s2[1]
+
+
+def test_second_estimate_call_triggers_no_recompilation(quick_vampire,
+                                                        ragged_traces):
+    """Regression: repeated estimate calls over the same vendor set must
+    re-use the fit-time stack and the memoized padding — i.e. hit the jit
+    cache instead of recompiling (cache-size check)."""
+    trs = list(ragged_traces)
+    quick_vampire.estimate(trs)                 # warm (pad + compile)
+    n_programs = estimate_batch.batched_reports._cache_size()
+    tb1 = quick_vampire._batch_cache.get(trs)
+    quick_vampire.estimate(trs)                 # same list object again
+    assert estimate_batch.batched_reports._cache_size() == n_programs
+    assert quick_vampire._batch_cache.get(trs) is tb1   # padding memoized
+    # a different vendor subset of the same batch: still no new program
+    quick_vampire.estimate(trs, (0, 1))
+    quick_vampire.estimate(trs, (0, 1))
+    assert estimate_batch.batched_reports._cache_size() <= n_programs + 1
+
+
+# ---------------------------------------------------------------------------
+# Baselines through the same protocol
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def baseline_models(quick_vampire):
+    return (MicronModel.from_vampire(quick_vampire),
+            DRAMPowerModel.from_vampire(quick_vampire))
+
+
+def test_baselines_match_per_trace_functions(quick_vampire, baseline_models,
+                                             ragged_traces):
+    micron, dpow = baseline_models
+    ds = {v: quick_vampire.by_vendor[v].idd_datasheet
+          for v in quick_vampire.vendors}
+    for model, fn in ((micron, micron_power), (dpow, drampower)):
+        rep = model.estimate(ragged_traces)
+        assert rep.energy_pj.shape == (len(ragged_traces), 3)
+        for i, tr in enumerate(ragged_traces):
+            for j, v in enumerate(model.vendors):
+                np.testing.assert_allclose(
+                    np.asarray(rep.avg_current_ma)[i, j],
+                    float(fn(tr, ds[v]).avg_current_ma), rtol=2e-6,
+                    err_msg=f"{model.kind} trace {i} vendor {v}")
+
+
+def test_baseline_modes_degenerate_without_variation(baseline_models,
+                                                     ragged_traces):
+    micron, _ = baseline_models
+    mean = micron.estimate(ragged_traces)
+    lo, mid, hi = micron.estimate(ragged_traces, mode="range")
+    np.testing.assert_array_equal(np.asarray(lo.energy_pj),
+                                  np.asarray(hi.energy_pj))
+    dist = micron.estimate(ragged_traces, mode="distribution",
+                           ones_frac=0.9, toggle_frac=0.9)
+    np.testing.assert_array_equal(np.asarray(dist.energy_pj),
+                                  np.asarray(mean.energy_pj))
+
+
+def test_baseline_argument_validation_matches_vampire(baseline_models,
+                                                      ragged_traces):
+    micron, _ = baseline_models
+    with pytest.raises(ValueError, match="only meaningful"):
+        micron.estimate(ragged_traces, ones_frac=0.5)
+    with pytest.raises(ValueError, match="requires ones_frac"):
+        micron.estimate(ragged_traces, mode="distribution")
+    with pytest.raises(ValueError, match="unknown mode"):
+        micron.estimate(ragged_traces, mode="typo")
+    with pytest.raises(ValueError, match="vectorized"):
+        micron.estimate(ragged_traces, impl="scan")
+    with pytest.raises(KeyError, match="not fitted"):
+        micron.estimate(ragged_traces, (9,))
+
+
+def test_baselines_are_pytrees(baseline_models, ragged_traces):
+    micron, _ = baseline_models
+    tb = estimate_batch.TraceBatch.from_traces(list(ragged_traces))
+    ref = np.asarray(micron.estimate(tb).energy_pj)
+    jitted = jax.jit(lambda m: m.estimate(tb).energy_pj)
+    np.testing.assert_allclose(np.asarray(jitted(micron)), ref, rtol=2e-6)
+    moved = jax.device_put(micron)
+    assert isinstance(moved, MicronModel)
+    np.testing.assert_allclose(np.asarray(moved.estimate(tb).energy_pj),
+                               ref, rtol=2e-6)
+
+
+def test_run_validation_accepts_any_estimator(quick_vampire, tiny_fleet,
+                                              baseline_models):
+    from repro.core.validate import run_validation
+    micron, dpow = baseline_models
+    res = run_validation(quick_vampire, fleet=tiny_fleet,
+                         n_values=(0, 8, 64),
+                         estimators={"vampire": quick_vampire,
+                                     "micron": micron,
+                                     "drampower": dpow})
+    assert set(res.mape) == {"vampire", "micron", "drampower"}
+    assert all(np.isfinite(m) for m in res.mape_mean.values())
+
+
+def test_make_estimator_registry(quick_vampire):
+    assert model_api.make_estimator("vampire", quick_vampire) \
+        is quick_vampire
+    assert isinstance(model_api.make_estimator("micron", quick_vampire),
+                      MicronModel)
+    assert isinstance(model_api.make_estimator("drampower", quick_vampire),
+                      DRAMPowerModel)
+    with pytest.raises(ValueError, match="unknown estimator kind"):
+        model_api.make_estimator("speculative", quick_vampire)
+
+
+# ---------------------------------------------------------------------------
+# Versioned serialization
+# ---------------------------------------------------------------------------
+def test_v2_roundtrip_every_estimator_type(quick_vampire, baseline_models,
+                                           ragged_traces, tmp_path):
+    estimators = (quick_vampire,) + baseline_models
+    for est in estimators:
+        path = str(tmp_path / f"{est.kind}.npz")
+        est.save(path)
+        manifest = model_api.read_manifest(path)
+        assert manifest["schema"] == model_api.SCHEMA_VERSION
+        assert manifest["kind"] == est.kind
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")     # v2 loads silently
+            loaded = model_api.load_estimator(path)
+        assert type(loaded) is type(est)
+        assert loaded.vendors == est.vendors
+        _leafwise_close(loaded.estimate(ragged_traces),
+                        est.estimate(ragged_traces), rtol=1e-6)
+
+
+def test_v2_manifest_meta_roundtrip(quick_vampire, tmp_path):
+    path = str(tmp_path / "tagged.npz")
+    quick_vampire.save(path, meta={"fit_kw": {"probe_reps": 64}})
+    assert model_api.read_manifest(path)["meta"] == {
+        "fit_kw": {"probe_reps": 64}}
+
+
+def test_v1_pickle_migrates_with_warning(quick_vampire, ragged_traces,
+                                         tmp_path):
+    """v1 pickle -> load (warns) -> v2 save -> load (silent): the fitted
+    quantities survive both hops exactly."""
+    v1 = str(tmp_path / "model_v1.pkl")
+    model_api._save_v1_pickle(quick_vampire, v1)
+    with pytest.warns(DeprecationWarning, match="schema-v1 pickle"):
+        migrated = Vampire.load(v1)
+    for v in quick_vampire.vendors:
+        for name, a, b in zip(migrated.params(v)._fields,
+                              migrated.params(v), quick_vampire.params(v)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"vendor {v} leaf {name}")
+        assert migrated.variation_band[v] == quick_vampire.variation_band[v]
+    v2 = str(tmp_path / "model_v2.npz")
+    migrated.save(v2)
+    reloaded = model_api.load_estimator(v2)
+    _leafwise_close(reloaded.estimate(ragged_traces),
+                    quick_vampire.estimate(ragged_traces), rtol=1e-6)
+
+
+def test_v1_fixture_artifact_loads(ragged_traces):
+    """The checked-in v1 fixture (the pre-redesign benchmark fit cache)
+    must keep loading through the migration path."""
+    import os
+    fixture = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "vampire_fit_v1.pkl")
+    if not os.path.exists(fixture):
+        pytest.skip("v1 fixture artifact not present")
+    with pytest.warns(DeprecationWarning, match="schema-v1 pickle"):
+        model = model_api.load_estimator(fixture)
+    assert isinstance(model, Vampire)
+    rep = model.estimate(ragged_traces)
+    assert np.all(np.asarray(rep.energy_pj) > 0)
+
+
+def test_v2_roundtrips_raw_campaign_sweeps(quick_vampire, tmp_path):
+    """The benchmark fit cache rides the same format, so the raw sweep
+    record must survive (the per-figure benchmarks plot it)."""
+    path = str(tmp_path / "with_raw.npz")
+    quick_vampire.save(path)
+    loaded = Vampire.load(path)
+    for v, vc in quick_vampire.by_vendor.items():
+        lvc = loaded.by_vendor[v]
+        assert lvc.idd_datasheet == vc.idd_datasheet     # exact (float64)
+        for key, arr in vc.idd_measured.items():
+            np.testing.assert_array_equal(lvc.idd_measured[key], arr)
+        assert set(lvc.ones_sweep) == set(vc.ones_sweep)
+        sk = ("none", "RD")
+        np.testing.assert_array_equal(lvc.ones_sweep[sk]["current"],
+                                      vc.ones_sweep[sk]["current"])
+        np.testing.assert_array_equal(lvc.row_sweep["row_ones"],
+                                      vc.row_sweep["row_ones"])

@@ -1,6 +1,12 @@
-"""Model validation ordering (paper Fig 24) + encoding study (Section 10)."""
+"""Model validation ordering (paper Fig 24) + encoding study (Section 10).
+
+Several tests here predate the unified ``estimate`` entry point and keep
+exercising the legacy shims on purpose (module-wide DeprecationWarning
+filter); ``test_model_api.py`` covers the unified API."""
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 from repro.core import encodings, traces
 from repro.core.dram import RD, WR
