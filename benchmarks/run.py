@@ -22,6 +22,7 @@ MODULES = [
     ("throughput", "benchmarks.bench_throughput"),      # ours
     ("estimate", "benchmarks.bench_estimate"),          # ours (PR 2)
     ("model_api", "benchmarks.bench_model_api"),        # ours (PR 3)
+    ("kernels", "benchmarks.bench_kernels"),            # ours (PR 4)
     ("roofline", "benchmarks.bench_roofline"),          # deliverable (g)
 ]
 

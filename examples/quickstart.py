@@ -54,6 +54,20 @@ def main():
     print(f"  DRAMPower, same call: "
           f"{np.asarray(dp.estimate(sweeps).avg_current_ma).round(1)[1]}")
 
+    print("== 3b. the impl registry: HOW the matrix is evaluated ==")
+    # impl= picks a registered evaluation path (model_api.resolve_impl):
+    # 'vectorized' (jnp/XLA, default), 'pallas' (fused kernels — compiled
+    # on TPU, interpret-mode elsewhere), 'reference' (per-command oracle).
+    # Every estimator kind supports every impl for every mode.
+    from repro.core import model_api
+    for impl in model_api.registered_impls():
+        r = model.estimate(sweeps, impl=impl)
+        print(f"  impl={impl:10s} ({model_api.impl_execution_mode(impl)}): "
+              f"trace 1 vendor A {float(r.avg_current_ma[1,0]):.2f} mA")
+    # new impls register like estimator kinds:
+    #   model_api.register_impl(model_api.EstimateImpl(
+    #       "my-impl", "description", modes=("mean",)))
+
     print("== 4. validation vs baselines (paper Fig 24) ==")
     res = run_validation(model, fleet=fleet,
                          n_values=(0, 2, 8, 32, 128, 512, 764))

@@ -63,12 +63,17 @@ def _bg_state(sf: StructuralFeatures):
     return jnp.sum(sf.open_before.astype(jnp.float32), axis=1), sf.powered_down
 
 
-def _act_pair_charge(ds) -> jax.Array:
+def act_pair_charge(idd0, idd2n, idd3n) -> jax.Array:
     """ACT/PRE pair charge above the active background, from IDD0 at the
-    specification row-cycle (shared by both baselines)."""
-    q_act = (ds["IDD0"] - (ds["IDD3N"] * _T.tRAS + ds["IDD2N"] * _T.tRP)
-             / _T.tRC) * _T.tRC
-    return jnp.maximum(q_act, 0.0)
+    specification row-cycle — the ONE definition of this physics, shared
+    by both baselines here and by the fused ``kernels/baseline_energy``
+    kernel (so ``impl='pallas'`` cannot drift from ``'vectorized'``)."""
+    return jnp.maximum(
+        (idd0 - (idd3n * _T.tRAS + idd2n * _T.tRP) / _T.tRC) * _T.tRC, 0.0)
+
+
+def _act_pair_charge(ds) -> jax.Array:
+    return act_pair_charge(ds["IDD0"], ds["IDD2N"], ds["IDD3N"])
 
 
 def micron_charges(trace: CommandTrace, open_banks, powered_down,
@@ -223,20 +228,47 @@ class DatasheetModel(model_api.StackedEstimatorMixin):
         """Unified protocol entry point.  ``mode='distribution'`` equals
         ``'mean'`` (no data dependency to feed the fractions into) and
         ``mode='range'`` collapses to (mean, mean, mean) — these baselines
-        model neither, which is Section 9.1's finding."""
-        if impl != "vectorized":
-            raise ValueError(f"{type(self).__name__} only implements "
-                             f"impl='vectorized' (got {impl!r})")
+        model neither, which is Section 9.1's finding.  ``impl`` resolves
+        through the shared registry: ``'vectorized'`` (one vmapped
+        dispatch), ``'pallas'`` (the fused baseline-energy kernel gridded
+        over vendors), ``'reference'`` (the pair-at-a-time per-trace
+        functions ``micron_power``/``drampower``)."""
         # one shared argument contract across every estimator: fractions
         # are required WITH mode='distribution' (even though this physics
         # ignores their values) and rejected without it
         model_api.validate_estimate_args(mode, ones_frac, toggle_frac)
+        impl = model_api.resolve_impl(impl, mode=mode).name
         _, idx = model_api.resolve_vendor_indices(self.vendors, vendors)
         tb = self._batch_cache.get(traces)
-        rep = _BATCHED[self.kind](tb.trace, tb.weight, self._table_for(idx))
+        if impl == "vectorized":
+            rep = _BATCHED[self.kind](tb.trace, tb.weight,
+                                      self._table_for(idx))
+        elif impl == "pallas":
+            from repro.kernels.baseline_energy import ops as bops
+            charge, cycles = bops.baseline_charge_matrix(
+                tb.trace, tb.weight, self._table_for(idx), self.kind)
+            rep = _report(charge,
+                          jnp.broadcast_to(cycles[:, None], charge.shape))
+        else:
+            rep = self._reference_matrix(traces, tb, idx)
         if mode == "range":
             return rep, rep, rep
         return rep
+
+    def _reference_matrix(self, traces, tb, idx) -> EnergyReport:
+        """``impl='reference'``: the paper-figure per-trace functions
+        (``micron_power``/``drampower``), one call per (trace, vendor)."""
+        from repro.core.estimate_batch import original_traces
+        originals = original_traces(traces, tb)
+        order = self.vendors
+        fn = MODELS[self.kind]
+        per_trace = [
+            jax.tree_util.tree_map(
+                lambda *leaves: jnp.stack(leaves),
+                *[fn(tr, self.datasheets[order[j]]) for j in idx])
+            for tr in originals]
+        return jax.tree_util.tree_map(lambda *rows: jnp.stack(rows),
+                                      *per_trace)
 
     # ----------------------------------------------------------------- io
     def save(self, path: str, *, meta: dict | None = None):

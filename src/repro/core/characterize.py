@@ -257,18 +257,20 @@ def campaign_plan(probe_reps: int = 256, n_rows: int = 24,
 # ---------------------------------------------------------------------------
 def characterize_vendor(modules, vendor: int, *, probe_modules: int = 5,
                         probe_reps: int = 256, n_rows: int = 24,
-                        rng_seed: int = 0,
-                        engine: str = "batched") -> VendorCharacterization:
+                        rng_seed: int = 0, engine: str = "batched",
+                        impl: str = "vectorized") -> VendorCharacterization:
     probes = modules[:probe_modules]
     plan = campaign_plan(probe_reps=probe_reps, n_rows=n_rows,
                          rng_seed=rng_seed)
 
     # ---- measurement: two batched dispatches (or the serial oracle) -------
+    # ``impl`` picks the batched engine's evaluation path (vectorized jnp
+    # vs the fused Pallas kernels) through the shared impl registry
     idd_currents = fleet.run_probes(            # (all modules, 9 IDD loops)
-        modules, plan.idd_points, engine=engine,
+        modules, plan.idd_points, engine=engine, impl=impl,
         batch=plan.idd_batch if engine == "batched" else None)
     probe_currents = fleet.run_probes(          # (probe modules, all probes)
-        probes, plan.probe_points, engine=engine,
+        probes, plan.probe_points, engine=engine, impl=impl,
         batch=plan.probe_batch if engine == "batched" else None)
     probe_mean = probe_currents.mean(axis=0)
     cur = {pt.label: float(probe_mean[i])

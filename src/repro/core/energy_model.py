@@ -43,7 +43,34 @@ from repro.core import dram
 from repro.core.dram import (ACT, PRE, PREA, RD, WR, REF, PDE, PDX,
                              IL_NONE, IL_COL, IL_BANK, IL_BANKCOL,
                              LINE_BITS, N_BANKS, TIMING, TCK_NS, VDD,
-                             CommandTrace, line_ones, popcount_u32)
+                             CommandTrace, line_ones, line_toggles,
+                             popcount_u32)
+
+
+class DataOps(NamedTuple):
+    """The two data-stream reductions of the feature pass — per-line
+    popcount and bus-XOR toggle count — as injectable callables: the seam
+    that isolates the O(N x 512 bit) work from the index bookkeeping.
+    ``extract_structural_features`` takes one, so a SINGLE-trace feature
+    pass can run through the ``kernels/popcount`` / ``kernels/toggle``
+    Pallas ops (:func:`kernel_data_ops`; the parity suite pins it equal
+    to the jnp default).  The batched ``impl='pallas'`` path does not
+    come through here — it fuses both reductions into one kernel over the
+    whole batch (``kernels/vampire_energy.batched_features_pallas``)."""
+    line_ones: object    # (N, 16) uint32 -> (N,) counts
+    line_toggles: object  # ((N, 16), (N, 16)) uint32 -> (N,) counts
+
+
+JNP_DATA_OPS = DataOps(line_ones=line_ones, line_toggles=line_toggles)
+
+
+def kernel_data_ops() -> DataOps:
+    """The Pallas-kernel-backed :class:`DataOps` (``kernels/popcount`` +
+    ``kernels/toggle``), resolved lazily so importing this module never
+    pulls in the kernel stack."""
+    from repro.kernels.popcount import ops as pc_ops
+    from repro.kernels.toggle import ops as tg_ops
+    return DataOps(line_ones=pc_ops.line_ones, line_toggles=tg_ops.line_toggles)
 
 
 class PowerParams(NamedTuple):
@@ -112,8 +139,22 @@ def _exclusive_cummax(x: jax.Array) -> jax.Array:
     return shifted
 
 
-def extract_structural_features(trace: CommandTrace) -> StructuralFeatures:
-    """The parameter-independent feature pass (see StructuralFeatures)."""
+class StructuralState(NamedTuple):
+    """The index-bookkeeping half of the structural pass: everything the
+    trace alone determines EXCEPT the O(N x 512 bit) data reductions.
+    Splitting it out lets the Pallas impl run the same state machine and
+    feed ``prev_data`` to its fused feature kernel over a whole batch."""
+    is_rw: jax.Array        # (N,) bool
+    op: jax.Array           # (N,) int32
+    il_mode: jax.Array      # (N,) int32 in [0,4)
+    open_before: jax.Array  # (N, 8) bool
+    powered_down: jax.Array  # (N,) bool
+    row_ones: jax.Array     # (N,) int32
+    prev_data: jax.Array    # (N, 16) uint32: previous RD/WR line (0 if none)
+    has_prev: jax.Array     # (N,) bool
+
+
+def structural_state(trace: CommandTrace) -> StructuralState:
     cmd, bank = trace.cmd, trace.bank
     n = cmd.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32)
@@ -138,7 +179,8 @@ def extract_structural_features(trace: CommandTrace) -> StructuralFeatures:
     prev_rw = _exclusive_cummax(jnp.where(is_rw, idx, -1))            # (N,)
     has_prev = prev_rw >= 0
     prev_rw_c = jnp.maximum(prev_rw, 0)
-    prev_data = trace.data[prev_rw_c]                                 # (N,16)
+    prev_data = jnp.where(has_prev[:, None], trace.data[prev_rw_c],
+                          jnp.zeros_like(trace.data))                 # (N,16)
     prev_bank = jnp.where(has_prev, bank[prev_rw_c], -1)
 
     # last RD/WR column per bank, before each command
@@ -160,14 +202,24 @@ def extract_structural_features(trace: CommandTrace) -> StructuralFeatures:
                   jnp.where(same_col_in_bank, IL_BANK, IL_BANKCOL)))
     il_mode = il_mode.astype(jnp.int32)
 
-    ones = line_ones(trace.data)
-    toggles = jnp.where(
-        has_prev & is_rw,
-        line_ones(jnp.bitwise_xor(trace.data, prev_data)), 0)
-
     row_ones = popcount_u32(trace.row.astype(jnp.uint32))
-    return StructuralFeatures(is_rw, op, il_mode, ones, toggles,
-                              open_before, powered_down, row_ones)
+    return StructuralState(is_rw, op, il_mode, open_before, powered_down,
+                           row_ones, prev_data, has_prev)
+
+
+def extract_structural_features(trace: CommandTrace,
+                                data_ops: DataOps = JNP_DATA_OPS
+                                ) -> StructuralFeatures:
+    """The parameter-independent feature pass (see StructuralFeatures).
+
+    ``data_ops`` injects the popcount/toggle reductions — pure jnp by
+    default, the Pallas kernel ops under the ``impl`` registry."""
+    st = structural_state(trace)
+    ones = data_ops.line_ones(trace.data)
+    toggles = jnp.where(st.has_prev & st.is_rw,
+                        data_ops.line_toggles(trace.data, st.prev_data), 0)
+    return StructuralFeatures(st.is_rw, st.op, st.il_mode, ones, toggles,
+                              st.open_before, st.powered_down, st.row_ones)
 
 
 def finalize_features(sf: StructuralFeatures,
@@ -227,16 +279,20 @@ def rw_current(pp: PowerParams, op, il_mode, ones, toggles, bank):
     return base * factor + io
 
 
-def charge_from_features(trace: CommandTrace, feats: TraceFeatures,
-                         pp: PowerParams):
-    """Per-command charge (mA*cycles). Returns (N,) charges."""
+def integrate_charges(trace: CommandTrace, feats: TraceFeatures,
+                      pp: PowerParams, i_rw: jax.Array) -> jax.Array:
+    """The integrator: bank-state background over each command's slot,
+    RD/WR burst crediting, ACT (+PRE pair) and REF charges — the
+    fixed-shape form every ``impl`` shares.  ``i_rw`` is the
+    data-dependent RD/WR current, supplied by the caller (``rw_current``
+    on the vectorized path, the fused Pallas kernel on the ``pallas``
+    path).  Returns per-command (N,) charges in mA*cycles; a dt=0 pad
+    slot contributes exactly zero."""
     dt = trace.dt.astype(jnp.float32)
     i_bg = jnp.where(feats.powered_down, pp.i_pd, pp.i2n + feats.bg_delta_sum)
     charge = i_bg * dt
 
     # RD/WR burst charge above background
-    i_rw = rw_current(pp, feats.op, feats.il_mode, feats.ones, feats.toggles,
-                      trace.bank)
     burst = jnp.minimum(dt, float(TIMING.tBURST))
     charge = charge + jnp.where(feats.is_rw, (i_rw - i_bg) * burst, 0.0)
 
@@ -248,6 +304,23 @@ def charge_from_features(trace: CommandTrace, feats: TraceFeatures,
     # REF charge above background
     charge = charge + jnp.where(trace.cmd == REF, pp.q_ref, 0.0)
     return charge
+
+
+def charge_from_features(trace: CommandTrace, feats: TraceFeatures,
+                         pp: PowerParams):
+    """Per-command charge (mA*cycles). Returns (N,) charges."""
+    i_rw = rw_current(pp, feats.op, feats.il_mode, feats.ones, feats.toggles,
+                      trace.bank)
+    return integrate_charges(trace, feats, pp, i_rw)
+
+
+def masked_totals(trace: CommandTrace, weight: jax.Array,
+                  charges: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Reduce per-command charges to (masked charge, masked cycles) under a
+    validity/measurement mask — the shared tail of every fixed-shape
+    batched evaluation (padding and setup slots carry weight 0)."""
+    cycles = jnp.sum(trace.dt * weight.astype(jnp.int32), dtype=jnp.int32)
+    return jnp.sum(charges * weight), cycles
 
 
 class EnergyReport(NamedTuple):

@@ -18,7 +18,11 @@ here the whole (traces x vendors) energy-report matrix is a single jitted
 * :func:`batched_range_reports` additionally vmaps the per-vendor process-
   variation band -> (lo, mean, hi) report matrices;
 * :func:`batched_distribution_reports` is the paper's no-data-trace mode
-  (caller-supplied ones/toggle fractions) over the same batch.
+  (caller-supplied ones/toggle fractions) over the same batch;
+* the ``pallas_*`` twins evaluate the identical contracts through the
+  fused Pallas kernel family (``impl='pallas'`` in the registry): the
+  param-independent feature kernel once per batch, the per-vendor energy
+  kernel gridded over the vendor axis.
 
 This module holds the ENGINE only.  The model-facing surface is the
 unified estimator protocol (``repro.core.model_api``): every estimator's
@@ -70,6 +74,19 @@ def as_trace_batch(traces) -> TraceBatch:
     if isinstance(traces, CommandTrace):
         traces = [traces]
     return TraceBatch.from_traces(list(traces))
+
+
+def original_traces(traces, tb: TraceBatch) -> list[CommandTrace]:
+    """The caller's ragged traces when recoverable from the ``estimate``
+    argument, else the padded batch rows — exact either way (a dt=0 NOP
+    draws no charge and moves no integrator state).  Shared by every
+    pair-at-a-time ``impl='reference'`` oracle."""
+    if isinstance(traces, CommandTrace):
+        return [traces]
+    if isinstance(traces, (list, tuple)):
+        return list(traces)
+    return [jax.tree_util.tree_map(lambda x: x[i], tb.trace)
+            for i in range(tb.n_traces)]
 
 
 # ---------------------------------------------------------------------------
@@ -129,4 +146,46 @@ def batched_distribution_reports(trace: CommandTrace, weight: jax.Array,
 
     charge, cycles = jax.vmap(one_trace)(trace, weight, ones_frac,
                                          toggle_frac)
+    return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))
+
+
+# ---------------------------------------------------------------------------
+# The fused Pallas dispatches (impl='pallas'): same contracts as the
+# vectorized trio above, evaluated by the batched kernel family in
+# ``repro.kernels.vampire_energy`` (feature kernel once per batch, energy
+# kernel gridded over the vendor axis).  Interpret-vs-compiled resolves per
+# call inside ``ops.batched_charge_matrix``.
+# ---------------------------------------------------------------------------
+def pallas_batched_reports(trace: CommandTrace, weight: jax.Array,
+                           stacked: PowerParams) -> EnergyReport:
+    """impl='pallas' twin of :func:`batched_reports`."""
+    from repro.kernels.vampire_energy import ops as vops
+    charge, cycles = vops.batched_charge_matrix(trace, weight, stacked)
+    return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))
+
+
+def pallas_batched_range_reports(trace: CommandTrace, weight: jax.Array,
+                                 stacked: PowerParams, band: jax.Array
+                                 ) -> tuple[EnergyReport, EnergyReport,
+                                            EnergyReport]:
+    """impl='pallas' twin of :func:`batched_range_reports`."""
+    mean = pallas_batched_reports(trace, weight, stacked)
+    lo = scale_report(mean, band[None, :, 0])
+    hi = scale_report(mean, band[None, :, 1])
+    return lo, mean, hi
+
+
+def pallas_batched_distribution_reports(trace: CommandTrace,
+                                        weight: jax.Array,
+                                        stacked: PowerParams,
+                                        ones_frac: jax.Array,
+                                        toggle_frac: jax.Array
+                                        ) -> EnergyReport:
+    """impl='pallas' twin of :func:`batched_distribution_reports` (the
+    feature kernel is skipped; expected fractions feed the energy kernel
+    directly — scalar or per-trace, normalized by the kernel assembler —
+    with first-access toggles pinned to 0)."""
+    from repro.kernels.vampire_energy import ops as vops
+    charge, cycles = vops.batched_charge_matrix(
+        trace, weight, stacked, ones_frac=ones_frac, toggle_frac=toggle_frac)
     return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))

@@ -31,7 +31,7 @@ from repro.core import device_sim
 from repro.core.dram import CommandTrace, batch_traces
 from repro.core.energy_model import (PowerParams, charge_from_features,
                                      extract_structural_features,
-                                     finalize_features)
+                                     finalize_features, masked_totals)
 
 
 def stack_params(params: Sequence[PowerParams]) -> PowerParams:
@@ -70,13 +70,12 @@ def batched_pair_totals(tr: CommandTrace, w: jax.Array, sf,
     structural pass ``sf`` ran ONCE for the item; only the open-bank
     background finalize + charge accumulation is vmapped over the stacked
     parameter sets."""
-    cycles = jnp.sum(tr.dt * w.astype(jnp.int32), dtype=jnp.int32)
-
     def one_paramset(pp: PowerParams):
         charges = charge_from_features(tr, finalize_features(sf, pp), pp)
-        return jnp.sum(charges * w)
+        return masked_totals(tr, w, charges)
 
-    return jax.vmap(one_paramset)(stacked), cycles
+    charge, cycles = jax.vmap(one_paramset)(stacked)
+    return charge, cycles[0]
 
 
 @jax.jit
@@ -95,9 +94,23 @@ def fleet_measure_current(trace: CommandTrace, weight: jax.Array,
     return jax.vmap(one_probe)(trace, weight).T  # -> (modules, probes)
 
 
+def fleet_measure_current_pallas(trace: CommandTrace, weight: jax.Array,
+                                 stacked: PowerParams) -> jax.Array:
+    """The ``impl='pallas'`` twin of :func:`fleet_measure_current`: the
+    same (modules, probes) matrix through the fused batched kernel family
+    (``kernels/vampire_energy``), with the probe axis as the kernel's
+    trace axis and the module axis as its vendor axis.  The true simulator
+    params' ``ones_quad`` curvature is part of the kernel, so the
+    characterization campaign measures identical currents on this path."""
+    from repro.kernels.vampire_energy import ops as vops
+    charge, cycles = vops.batched_charge_matrix(trace, weight, stacked)
+    return (charge / jnp.maximum(cycles.astype(jnp.float32), 1.0)[:, None]).T
+
+
 def run_probes(modules, points: Sequence[ProbePoint], *,
                engine: str = "batched", noisy: bool = True,
-               batch: ProbeBatch | None = None) -> np.ndarray:
+               batch: ProbeBatch | None = None,
+               impl: str = "vectorized") -> np.ndarray:
     """Measure every probe point on every module -> (modules, probes) mA.
 
     ``engine='batched'`` is the production path (a single jitted dispatch per
@@ -106,19 +119,36 @@ def run_probes(modules, points: Sequence[ProbePoint], *,
     oracle — both draw identical per-(module, probe) noise. Callers issuing
     the same point list repeatedly should pass a prebuilt ``batch`` to skip
     re-padding (see ``characterize.CampaignPlan``).
+
+    ``impl`` picks the batched engine's evaluation path through the shared
+    registry: ``'vectorized'`` (vmapped jnp) or ``'pallas'`` (the fused
+    kernels).  The per-command oracle is spelled ``engine='serial'`` here;
+    contradictions are loud errors rather than silent substitutions
+    (``impl='reference'`` with the batched engine points at
+    ``engine='serial'``, ``impl='pallas'`` with the serial engine raises).
     """
+    from repro.core import model_api
+    impl = model_api.resolve_impl(impl).name
     if engine == "serial":
+        if impl == "pallas":
+            raise ValueError("engine='serial' is the per-command oracle; "
+                             "impl='pallas' requires engine='batched'")
         return np.asarray(
             [[m.measure_current(p.trace, noisy=noisy, skip=p.skip,
                                 probe_key=p.key)
               for p in points] for m in modules])
     if engine != "batched":
         raise ValueError(f"unknown engine {engine!r}")
+    if impl == "reference":
+        raise ValueError("impl='reference' for the campaign is "
+                         "engine='serial' (the per-command oracle)")
     if batch is None:
         batch = ProbeBatch.from_points(points)
     stacked = stack_params([m.params for m in modules])
-    currents = np.asarray(fleet_measure_current(batch.trace, batch.weight,
-                                                stacked), dtype=np.float64)
+    measure = (fleet_measure_current_pallas if impl == "pallas"
+               else fleet_measure_current)
+    currents = np.asarray(measure(batch.trace, batch.weight, stacked),
+                          dtype=np.float64)
     if noisy:
         currents = currents * device_sim.measurement_noise_factors(
             [m.spec for m in modules], batch.keys)

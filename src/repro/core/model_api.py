@@ -14,7 +14,14 @@ entry point:
   has shape ``(traces, vendors)`` — ``mode='range'`` returns a
   ``(lo, mean, hi)`` triple of such reports;
 * ``mode='distribution'`` is the paper's no-data-trace mode and takes
-  ``ones_frac``/``toggle_frac`` (scalar or per trace).
+  ``ones_frac``/``toggle_frac`` (scalar or per trace);
+* ``impl`` picks HOW the matrix is evaluated, through the impl registry
+  (:func:`register_impl` / :func:`resolve_impl`): ``'vectorized'`` (the
+  jnp/XLA batched engine), ``'pallas'`` (the fused Pallas kernel family —
+  compiled on TPU, interpret-mode fallback elsewhere), or ``'reference'``
+  (the pair-at-a-time per-command oracle; ``'scan'`` is a legacy alias).
+  Every estimator kind supports every registered impl for every mode, and
+  the parity suite holds them allclose to each other.
 
 Models are pytrees: their parameters are array leaves stacked along a
 leading vendor axis, so a model can be ``jax.jit``-traced, ``jax.vmap``-ped,
@@ -36,6 +43,7 @@ blobs (``Vampire.save`` before the unified API) with a
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import pickle
 import warnings
@@ -112,6 +120,78 @@ def _tracer_type():
             except AttributeError:
                 continue
     return None
+
+
+# ---------------------------------------------------------------------------
+# Impl registry: HOW an estimate() is evaluated, orthogonal to the estimator
+# kind (WHICH physics).  Registered like estimator kinds; every estimator's
+# estimate() resolves its ``impl=`` argument here, so all three estimators
+# and all three modes dispatch through one registry.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EstimateImpl:
+    """One way of evaluating the (traces, vendors) report matrix."""
+    name: str
+    description: str
+    modes: tuple[str, ...] = ("mean", "range", "distribution")
+    aliases: tuple[str, ...] = ()
+
+
+_IMPLS: dict[str, EstimateImpl] = {}
+_IMPL_ALIASES: dict[str, str] = {}
+
+
+def register_impl(impl: EstimateImpl) -> EstimateImpl:
+    """Register an impl (or re-register to override). Returns it, so the
+    definition can double as a module-level constant."""
+    _IMPLS[impl.name] = impl
+    for alias in impl.aliases:
+        _IMPL_ALIASES[alias] = impl.name
+    return impl
+
+
+def registered_impls() -> tuple[str, ...]:
+    return tuple(sorted(_IMPLS))
+
+
+def resolve_impl(name: str, *, mode: str | None = None) -> EstimateImpl:
+    """Resolve an ``impl=`` argument (canonical name or alias) against the
+    registry, with the capability check against the requested mode."""
+    impl = _IMPLS.get(_IMPL_ALIASES.get(name, name))
+    if impl is None:
+        raise ValueError(f"unknown impl {name!r}; registered impls: "
+                         f"{list(registered_impls())}")
+    if mode is not None and mode not in impl.modes:
+        raise ValueError(f"impl {impl.name!r} does not support mode "
+                         f"{mode!r} (supports {list(impl.modes)})")
+    return impl
+
+
+def impl_execution_mode(name: str) -> str:
+    """``'compiled'`` or ``'interpret'`` — how the impl would execute on
+    the current backend.  The ``pallas`` impl compiles on TPU and falls
+    back to Pallas interpret mode everywhere else (so it is runnable,
+    parity-checkable, but exempt from speed expectations off-TPU)."""
+    impl = resolve_impl(name)
+    if impl.name != "pallas":
+        return "compiled"
+    from repro.kernels.common import interpret_default
+    return "interpret" if interpret_default() else "compiled"
+
+
+VECTORIZED_IMPL = register_impl(EstimateImpl(
+    "vectorized",
+    "fused-elementwise jnp over the (traces, vendors) grid, one jitted "
+    "vmap(vmap) dispatch (the XLA production path)"))
+PALLAS_IMPL = register_impl(EstimateImpl(
+    "pallas",
+    "fused Pallas kernel family: one param-independent popcount/toggle "
+    "feature kernel per batch + a per-vendor current/energy kernel gridded "
+    "over (vendors, traces, blocks); compiled on TPU, interpret elsewhere"))
+REFERENCE_IMPL = register_impl(EstimateImpl(
+    "reference",
+    "pair-at-a-time per-command oracle (lax.scan state machine for "
+    "measured-data modes), kept for cross-checking", aliases=("scan",)))
 
 
 def validate_estimate_args(mode: str, ones_frac, toggle_frac) -> None:

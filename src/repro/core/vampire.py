@@ -18,10 +18,11 @@ Public API (the unified estimator protocol, ``repro.core.model_api``)
     * ``mode='distribution'``  the paper's no-data-trace mode: the caller
       supplies ``ones_frac``/``toggle_frac`` (scalar or per trace) instead
       of actual 64-byte values.
-    * ``impl='vectorized'`` is the production batched engine;
-      ``impl='scan'`` (lax.scan oracle) and ``impl='kernel'`` (Pallas
-      per-command energy) evaluate pair-by-pair and exist for
-      cross-checking.
+    * ``impl`` resolves through the registry (``model_api.resolve_impl``):
+      ``'vectorized'`` is the jnp/XLA batched engine, ``'pallas'`` the
+      fused (traces x vendors) Pallas kernel family (compiled on TPU,
+      interpret-mode elsewhere), and ``'reference'`` (alias ``'scan'``)
+      the pair-at-a-time per-command oracle kept for cross-checking.
 
 ``model.save(path)`` / ``Vampire.load(path)``
     schema-v2 ``.npz`` + JSON-manifest serialization; v1 pickle blobs
@@ -55,7 +56,11 @@ import numpy as np
 
 from repro.core import characterize, device_sim, model_api
 from repro.core.dram import CommandTrace
-from repro.core.energy_model import (EnergyReport, PowerParams, scale_report,
+from repro.core.energy_model import (EnergyReport, PowerParams, _report,
+                                     charge_from_features,
+                                     distribution_features,
+                                     extract_structural_features,
+                                     finalize_features, scale_report,
                                      trace_energy_scan)
 from repro.core.fleet import stack_params
 
@@ -198,18 +203,23 @@ class Vampire(model_api.StackedEstimatorMixin):
                   impl="vectorized", ones_frac=None, toggle_frac=None):
         from repro.core import estimate_batch
         model_api.validate_estimate_args(mode, ones_frac, toggle_frac)
+        impl = model_api.resolve_impl(impl, mode=mode).name
         _, idx = model_api.resolve_vendor_indices(self.vendors, vendors)
         stacked, band = self._stacked_for(idx)
         tb = self._batch_cache.get(traces)
 
         if mode == "distribution":
-            if impl != "vectorized":
-                raise ValueError("mode='distribution' is only implemented "
-                                 "for impl='vectorized'")
-            return estimate_batch.batched_distribution_reports(
-                tb.trace, tb.weight, stacked,
-                jnp.asarray(ones_frac, jnp.float32),
-                jnp.asarray(toggle_frac, jnp.float32))
+            if impl == "vectorized":
+                return estimate_batch.batched_distribution_reports(
+                    tb.trace, tb.weight, stacked,
+                    jnp.asarray(ones_frac, jnp.float32),
+                    jnp.asarray(toggle_frac, jnp.float32))
+            if impl == "pallas":
+                return estimate_batch.pallas_batched_distribution_reports(
+                    tb.trace, tb.weight, stacked, ones_frac, toggle_frac)
+            return self._reference_matrix(traces, tb, stacked,
+                                          ones_frac=ones_frac,
+                                          toggle_frac=toggle_frac)
 
         if impl == "vectorized":
             if mode == "range":
@@ -217,41 +227,45 @@ class Vampire(model_api.StackedEstimatorMixin):
                     tb.trace, tb.weight, stacked, band)
             return estimate_batch.batched_reports(tb.trace, tb.weight,
                                                   stacked)
-        mean = self._oracle_matrix(traces, tb, stacked, impl)
+        if impl == "pallas":
+            if mode == "range":
+                return estimate_batch.pallas_batched_range_reports(
+                    tb.trace, tb.weight, stacked, band)
+            return estimate_batch.pallas_batched_reports(tb.trace, tb.weight,
+                                                         stacked)
+        mean = self._reference_matrix(traces, tb, stacked)
         if mode == "mean":
             return mean
         lo = scale_report(mean, band[None, :, 0])
         hi = scale_report(mean, band[None, :, 1])
         return lo, mean, hi
 
-    def _oracle_matrix(self, traces, tb, stacked: PowerParams,
-                       impl: str) -> EnergyReport:
-        """The cross-check implementations, pair by pair: scan (lax.scan
-        state machine) and kernel (Pallas per-command energy).  Prefers the
-        caller's original ragged traces; falls back to the padded rows
-        (exact: a dt=0 NOP draws no charge and moves no state)."""
-        if isinstance(traces, CommandTrace):
-            originals = [traces]
-        elif isinstance(traces, (list, tuple)):
-            originals = list(traces)
+    def _reference_matrix(self, traces, tb, stacked: PowerParams, *,
+                          ones_frac=None, toggle_frac=None) -> EnergyReport:
+        """``impl='reference'``: the pair-at-a-time oracle — the lax.scan
+        per-command state machine for measured-data modes, the per-trace
+        feature-override path for ``mode='distribution'``."""
+        from repro.core.estimate_batch import original_traces
+        originals = original_traces(traces, tb)
+        if ones_frac is not None:
+            of = np.broadcast_to(np.asarray(ones_frac, np.float32),
+                                 (len(originals),))
+            tf = np.broadcast_to(np.asarray(toggle_frac, np.float32),
+                                 (len(originals),))
+
+            def one_pair(tr, pp, i):
+                sf = distribution_features(
+                    extract_structural_features(tr), of[i], tf[i])
+                charges = charge_from_features(
+                    tr, finalize_features(sf, pp), pp)
+                return _report(jnp.sum(charges), tr.total_cycles())
+
+            per_trace = [jax.vmap(lambda pp, tr=tr, i=i: one_pair(tr, pp, i)
+                                  )(stacked)
+                         for i, tr in enumerate(originals)]
         else:
-            originals = [jax.tree_util.tree_map(lambda x: x[i], tb.trace)
-                         for i in range(tb.n_traces)]
-        n_vendors = len(jax.tree_util.tree_leaves(stacked)[0])
-        if impl == "scan":
             per_trace = [jax.vmap(lambda pp, tr=tr: trace_energy_scan(tr, pp)
                                   )(stacked) for tr in originals]
-        elif impl == "kernel":
-            from repro.kernels.vampire_energy import ops as vops
-            per_trace = []
-            for tr in originals:
-                reps = [vops.trace_energy_kernel(
-                    tr, jax.tree_util.tree_map(lambda x: x[j], stacked))
-                    for j in range(n_vendors)]
-                per_trace.append(jax.tree_util.tree_map(
-                    lambda *leaves: jnp.stack(leaves), *reps))
-        else:
-            raise ValueError(impl)
         return jax.tree_util.tree_map(lambda *rows: jnp.stack(rows),
                                       *per_trace)
 

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused (traces x vendors) datasheet-baseline energy.
+
+The ``impl='pallas'`` path for the Micron-calculator and DRAMPower
+estimators (``repro.core.baselines_power``).  Both physics are pure
+per-command formulas over the shared structural facts (open-bank count,
+power-down state) and a per-vendor datasheet IDD row, so one kernel body
+per baseline, gridded over ``(vendors, traces, command blocks)`` exactly
+like the VAMPIRE energy kernel, covers the whole report matrix: per grid
+cell it reads one (1, BLOCK) slab of per-command planes plus this vendor's
+(1, K) IDD row and writes one masked partial charge sum.
+
+IDD row layout follows ``baselines_power.BASELINE_IDD_KEYS``:
+``(IDD0, IDD2N, IDD2P1, IDD3N, IDD4R, IDD4W, IDD5B)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.baselines_power import act_pair_charge
+from repro.core.dram import TIMING
+from repro.kernels.common import cdiv, interpret_default, pad_to
+
+BLOCK_N = 512
+_T = TIMING
+
+# per-command (T, N) planes, in kernel argument order
+PLANES = ("dt", "is_rd", "is_wr", "is_act", "is_ref", "open_banks", "pd", "w")
+
+
+def _make_kernel(kind: str):
+    def kernel(dt_ref, isrd_ref, iswr_ref, isact_ref, isref_ref, open_ref,
+               pd_ref, w_ref, anyact_ref, idd_ref, o_ref):
+        dt = dt_ref[0]                    # (B,) f32
+        is_rd, is_wr = isrd_ref[0], iswr_ref[0]
+        is_act, is_ref = isact_ref[0], isref_ref[0]
+        open_banks = open_ref[0]          # (B,) f32 count in [0, 8]
+        pd = pd_ref[0]                    # (B,) f32
+        w = w_ref[0]
+        any_act = anyact_ref[0]           # () f32: trace contains an ACT
+        idd = idd_ref[0]                  # (K,) datasheet row
+        idd0, idd2n, idd2p1, idd3n = idd[0], idd[1], idd[2], idd[3]
+        idd4r, idd4w, idd5b = idd[4], idd[5], idd[6]
+
+        burst = jnp.minimum(dt, float(_T.tBURST))
+        q_act = act_pair_charge(idd0, idd2n, idd3n)
+        if kind == "micron":
+            # worst-case background, spec-rate ACT/PRE, RD/WR stacked on top
+            i_bg = jnp.where(pd > 0, idd2p1, idd3n)
+            charge = i_bg * dt
+            charge = charge + (1.0 - pd) * any_act * q_act * dt / _T.tRC
+            charge = charge + is_rd * idd4r * burst + is_wr * idd4w * burst
+        else:                             # drampower: actual timing
+            i_bg = jnp.where(
+                pd > 0, idd2p1, idd2n + (idd3n - idd2n) * open_banks / 8.0)
+            charge = i_bg * dt
+            charge = charge + is_act * q_act
+            charge = charge + is_rd * (idd4r - i_bg) * burst
+            charge = charge + is_wr * (idd4w - i_bg) * burst
+        charge = charge + is_ref * (idd5b - idd2n) * _T.tRFC
+        o_ref[0, 0, 0] = jnp.sum(charge * w)
+    return kernel
+
+
+_KERNELS = {kind: _make_kernel(kind) for kind in ("micron", "drampower")}
+
+
+def baseline_energy_pallas(kind: str, planes: dict, any_act, table,
+                           block_n: int = BLOCK_N,
+                           interpret: bool | None = None) -> jax.Array:
+    """(T, V) masked charge matrix of one baseline physics.  ``planes``
+    maps :data:`PLANES` to (T, N) f32 arrays; ``any_act`` is (T,) f32;
+    ``table`` is the stacked (V, K) datasheet matrix."""
+    if interpret is None:
+        interpret = interpret_default()
+    padded = {}
+    for name in PLANES:
+        padded[name], _ = pad_to(planes[name].astype(jnp.float32),
+                                 block_n, axis=1)
+    n_traces, n_pad = padded["dt"].shape
+    n_vendors, n_keys = table.shape
+    grid_n = cdiv(n_pad, block_n)
+    grid = (n_vendors, n_traces, grid_n)
+
+    spec_2d = pl.BlockSpec((1, block_n), lambda v, t, i: (t, i))
+    partial = pl.pallas_call(
+        _KERNELS[kind],
+        grid=grid,
+        in_specs=[spec_2d] * len(PLANES) + [
+            pl.BlockSpec((1,), lambda v, t, i: (t,)),
+            pl.BlockSpec((1, n_keys), lambda v, t, i: (v, 0))],
+        out_specs=pl.BlockSpec((1, 1, 1), lambda v, t, i: (v, t, i)),
+        out_shape=jax.ShapeDtypeStruct((n_vendors, n_traces, grid_n),
+                                       jnp.float32),
+        interpret=interpret,
+    )(*[padded[n] for n in PLANES], any_act.astype(jnp.float32),
+      table.astype(jnp.float32))
+    return jnp.sum(partial, axis=2).T        # (T, V)

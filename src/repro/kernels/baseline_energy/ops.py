@@ -1,0 +1,48 @@
+"""Jitted assembler for the fused baseline (Micron / DRAMPower) path:
+builds the per-command structural planes from a padded TraceBatch and runs
+the (vendors, traces, blocks)-gridded baseline energy kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dram import ACT, RD, REF, WR, CommandTrace
+from repro.core.energy_model import structural_state
+from repro.kernels.baseline_energy.baseline_energy import (
+    BLOCK_N, baseline_energy_pallas)
+from repro.kernels.common import interpret_default
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "block_n", "interpret"))
+def _charge_matrix(trace: CommandTrace, weight, table, kind: str,
+                   block_n: int, interpret: bool):
+    st = jax.vmap(structural_state)(trace)
+    planes = {
+        "dt": trace.dt.astype(jnp.float32),
+        "is_rd": (trace.cmd == RD).astype(jnp.float32),
+        "is_wr": (trace.cmd == WR).astype(jnp.float32),
+        "is_act": (trace.cmd == ACT).astype(jnp.float32),
+        "is_ref": (trace.cmd == REF).astype(jnp.float32),
+        "open_banks": jnp.sum(st.open_before.astype(jnp.float32), axis=2),
+        "pd": st.powered_down.astype(jnp.float32),
+        "w": weight.astype(jnp.float32),
+    }
+    any_act = jnp.any(trace.cmd == ACT, axis=1).astype(jnp.float32)
+    charge = baseline_energy_pallas(kind, planes, any_act, table,
+                                    block_n=block_n, interpret=interpret)
+    cycles = jnp.sum(trace.dt * weight.astype(jnp.int32), axis=1,
+                     dtype=jnp.int32)
+    return charge, cycles
+
+
+def baseline_charge_matrix(trace: CommandTrace, weight, table, kind: str, *,
+                           block_n: int = BLOCK_N,
+                           interpret: bool | None = None):
+    """Masked charge of every (trace, vendor) pair for one baseline kind
+    -> ``((T, V) charge in mA*cycles, (T,) masked cycles)``."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _charge_matrix(trace, weight, table, kind, block_n, interpret)

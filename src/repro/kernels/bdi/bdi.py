@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import INTERPRET, cdiv, pad_to
+from repro.kernels.common import cdiv, interpret_default, pad_to
 
 BLOCK_N = 512
 
@@ -102,7 +102,7 @@ def bdi_sizes_pallas(bytes_i32: jax.Array, block_n: int = BLOCK_N,
                      interpret: bool | None = None):
     """(N, 64) int32 bytes -> (sizes (N,), schemes (N,)) int32."""
     if interpret is None:
-        interpret = INTERPRET
+        interpret = interpret_default()
     x, n = pad_to(bytes_i32.astype(jnp.int32), block_n, axis=0)
     grid = (cdiv(x.shape[0], block_n),)
     sizes, schemes = pl.pallas_call(

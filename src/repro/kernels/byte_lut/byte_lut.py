@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import INTERPRET, cdiv, pad_to
+from repro.kernels.common import cdiv, interpret_default, pad_to
 
 BLOCK_B = 2048
 
@@ -36,7 +36,7 @@ def _kernel(b_ref, lut_ref, o_ref):
 def byte_lut_pallas(b: jax.Array, lut: jax.Array, block_b: int = BLOCK_B,
                     interpret: bool | None = None) -> jax.Array:
     if interpret is None:
-        interpret = INTERPRET
+        interpret = interpret_default()
     b32 = b.astype(jnp.int32)
     x, n = pad_to(b32, block_b, axis=0)
     grid = (cdiv(x.shape[0], block_b),)

@@ -1,9 +1,13 @@
 """Shared Pallas kernel plumbing.
 
 All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
-validated on CPU with ``interpret=True``, which executes the kernel body in
-Python. ``INTERPRET`` flips automatically off-TPU; set REPRO_PALLAS_INTERPRET
-to force either way.
+validated everywhere else with ``interpret=True``, which executes the kernel
+body in Python.  :func:`interpret_default` resolves the mode *per call* from
+``jax.default_backend()`` — compiled on TPU, interpreted on CPU/GPU — so the
+kernels are runnable on any backend without a hand-set flag, and a backend
+selected after import (tests, ``jax.config`` changes) is still honoured.
+Set ``REPRO_PALLAS_INTERPRET`` to force either way (the CI pallas-interpret
+job exports ``REPRO_PALLAS_INTERPRET=1``).
 """
 from __future__ import annotations
 
@@ -11,11 +15,15 @@ import os
 
 import jax
 
-_env = os.environ.get("REPRO_PALLAS_INTERPRET")
-if _env is not None:
-    INTERPRET = _env not in ("0", "false", "False")
-else:
-    INTERPRET = jax.default_backend() != "tpu"
+
+def interpret_default() -> bool:
+    """Whether a kernel launched *now* should run in interpret mode:
+    the ``REPRO_PALLAS_INTERPRET`` env override if set, else compiled on
+    TPU and interpreted everywhere else."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
 
 
 def cdiv(a: int, b: int) -> int:

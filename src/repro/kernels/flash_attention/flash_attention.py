@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import INTERPRET, cdiv
+from repro.kernels.common import cdiv, interpret_default
 
 DEFAULT_BLOCK_Q = 256
 DEFAULT_BLOCK_K = 256
@@ -77,7 +77,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            interpret: bool | None = None):
     """q (BH, Sq, D); k, v (BH_kv, Skv, D) with BH % BH_kv == 0."""
     if interpret is None:
-        interpret = INTERPRET
+        interpret = interpret_default()
     bh, sq, d = q.shape
     bh_kv, skv, _ = k.shape
     assert bh % bh_kv == 0, (bh, bh_kv)

@@ -17,16 +17,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import INTERPRET, cdiv, pad_to
+from repro.core.dram import popcount_u32 as _popcount_u32
+from repro.kernels.common import cdiv, interpret_default, pad_to
 
 BLOCK_N = 1024
-
-
-def _popcount_u32(x):
-    x = x - ((x >> 1) & jnp.uint32(0x55555555))
-    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
-    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
-    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
 
 
 def _kernel(x_ref, o_ref):
@@ -38,7 +32,7 @@ def line_ones_pallas(lines: jax.Array, block_n: int = BLOCK_N,
                      interpret: bool | None = None) -> jax.Array:
     """(N, 16) uint32 -> (N,) int32 ones per line."""
     if interpret is None:
-        interpret = INTERPRET
+        interpret = interpret_default()
     x, n = pad_to(lines.astype(jnp.uint32), block_n, axis=0)
     grid = (cdiv(x.shape[0], block_n),)
     out = pl.pallas_call(

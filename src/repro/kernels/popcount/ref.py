@@ -1,18 +1,8 @@
-"""Pure-jnp oracle for the popcount kernel."""
+"""Pure-jnp oracle for the popcount kernel.
+
+The single bit-twiddle definition lives in ``repro.core.dram``; this module
+re-exports it so kernel tests keep one oracle import path (the duplicated
+helper that used to live here is gone)."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-
-def popcount_u32(x: jax.Array) -> jax.Array:
-    x = x.astype(jnp.uint32)
-    x = x - ((x >> 1) & jnp.uint32(0x55555555))
-    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
-    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
-    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
-
-
-def line_ones(lines: jax.Array) -> jax.Array:
-    """(N, 16) uint32 -> (N,) int32."""
-    return jnp.sum(popcount_u32(lines), axis=-1)
+from repro.core.dram import line_ones, popcount_u32  # noqa: F401

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import INTERPRET, cdiv, pad_to
+from repro.kernels.common import cdiv, interpret_default, pad_to
 from repro.kernels.popcount.popcount import _popcount_u32
 
 BLOCK_N = 1024
@@ -28,7 +28,7 @@ def line_toggles_pallas(cur: jax.Array, prev: jax.Array,
                         block_n: int = BLOCK_N,
                         interpret: bool | None = None) -> jax.Array:
     if interpret is None:
-        interpret = INTERPRET
+        interpret = interpret_default()
     cur, n = pad_to(cur.astype(jnp.uint32), block_n, axis=0)
     prev, _ = pad_to(prev.astype(jnp.uint32), block_n, axis=0)
     grid = (cdiv(cur.shape[0], block_n),)

@@ -1,42 +1,100 @@
-"""Jitted wrapper: full-trace VAMPIRE energy with the fused Pallas kernel
-on the RD/WR hot path. Semantics identical to
-``repro.core.energy_model.trace_energy_vectorized`` for linear (fitted)
-params (``ones_quad == 0``)."""
+"""Jitted assembler for the fused (traces x vendors) VAMPIRE energy path.
+
+:func:`batched_charge_matrix` is the single entry point both consumers of
+``impl='pallas'`` share — the estimation engine
+(``repro.core.estimate_batch``) and the characterization fleet engine
+(``repro.core.fleet``, where the "vendor" axis is the stacked module
+params).  It runs the vectorized ``structural_state`` bookkeeping over the
+padded batch, the param-independent feature kernel once, and the
+per-vendor fused energy kernel over the (vendors, traces, blocks) grid.
+
+``mode='distribution'`` support: passing ``ones_frac``/``toggle_frac``
+skips the feature kernel and substitutes the expected per-command data
+features (first-access toggles stay 0, matching
+``energy_model.distribution_features``).
+
+The old single-(trace, paramset) entry point ``trace_energy_kernel`` is a
+shim onto the batched kernels (a (1, 1) grid)."""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dram import ACT, REF, TIMING, CommandTrace, popcount_u32
+from repro.core.dram import ACT, LINE_BITS, N_BANKS, REF, CommandTrace
 from repro.core.energy_model import (EnergyReport, PowerParams, _report,
-                                     _exclusive_cummax, extract_features)
-from repro.kernels.vampire_energy.vampire_energy import rw_current_pallas
+                                     structural_state)
+from repro.kernels.common import interpret_default
+from repro.kernels.vampire_energy.vampire_energy import (
+    BLOCK_N, batched_energy_pallas, batched_features_pallas,
+    pack_param_blocks)
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
+                   ones_frac, toggle_frac, block_n: int, interpret: bool):
+    st = jax.vmap(structural_state)(trace)
+    t, n = trace.cmd.shape
+    if ones_frac is None:
+        # measured-data modes: the fused popcount/toggle feature kernel
+        # over the whole batch's data stream, once
+        tmask = (st.has_prev & st.is_rw).astype(jnp.float32)
+        ones, togg = batched_features_pallas(
+            trace.data.reshape(t * n, -1), st.prev_data.reshape(t * n, -1),
+            tmask.reshape(t * n), block_n=block_n, interpret=interpret)
+        ones, togg = ones.reshape(t, n), togg.reshape(t, n)
+    else:
+        # no-data-trace mode: expected fractions replace the data features
+        of = jnp.broadcast_to(jnp.asarray(ones_frac, jnp.float32), (t,))
+        tf = jnp.broadcast_to(jnp.asarray(toggle_frac, jnp.float32), (t,))
+        ones = jnp.where(st.is_rw, of[:, None] * LINE_BITS, 0.0)
+        togg = jnp.where(st.is_rw & st.has_prev, tf[:, None] * LINE_BITS, 0.0)
+
+    bank_oh = jax.nn.one_hot(trace.bank, N_BANKS, dtype=jnp.float32)
+    feats = {
+        "ones": ones, "togg": togg,
+        "op": st.op, "mode": st.il_mode,
+        "dt": trace.dt.astype(jnp.float32),
+        "is_rw": st.is_rw.astype(jnp.float32),
+        "is_act": (trace.cmd == ACT).astype(jnp.float32),
+        "is_ref": (trace.cmd == REF).astype(jnp.float32),
+        "pd": st.powered_down.astype(jnp.float32),
+        "row_ones": st.row_ones.astype(jnp.float32),
+        "w": weight.astype(jnp.float32),
+        "bank_t": bank_oh.transpose(0, 2, 1),                    # (T, 8, N)
+        "open_t": st.open_before.astype(jnp.float32).transpose(0, 2, 1),
+    }
+    coeffs, scal, bvec = pack_param_blocks(stacked)
+    charge = batched_energy_pallas(feats, coeffs, scal, bvec,
+                                   block_n=block_n, interpret=interpret)
+    cycles = jnp.sum(trace.dt * weight.astype(jnp.int32), axis=1,
+                     dtype=jnp.int32)
+    return charge, cycles
+
+
+def batched_charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
+                          *, ones_frac=None, toggle_frac=None,
+                          block_n: int = BLOCK_N,
+                          interpret: bool | None = None):
+    """Masked charge of every (trace, paramset) pair through the fused
+    kernels -> ``((T, V) charge in mA*cycles, (T,) masked cycles)``.
+
+    ``trace``/``weight`` are a padded TraceBatch's (T, N) fields;
+    ``stacked`` carries a leading paramset axis.  ``interpret`` resolves
+    per call (compiled on TPU, interpreted elsewhere) BEFORE entering the
+    jitted body, so it participates in the jit cache key."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _charge_matrix(trace, weight, stacked, ones_frac, toggle_frac,
+                          block_n, interpret)
+
+
 def trace_energy_kernel(trace: CommandTrace, pp: PowerParams) -> EnergyReport:
-    feats = extract_features(trace, pp)
-    n = trace.cmd.shape[0]
-    idx = jnp.arange(n, dtype=jnp.int32)
-    prev_rw = _exclusive_cummax(jnp.where(feats.is_rw, idx, -1))
-    prev_data = jnp.where((prev_rw >= 0)[:, None],
-                          trace.data[jnp.maximum(prev_rw, 0)],
-                          jnp.zeros_like(trace.data))
-
-    bankfac = jnp.where(feats.op == 0,
-                        pp.bank_read_factor[trace.bank],
-                        pp.bank_write_factor[trace.bank])
-    io = jnp.stack([pp.io_read_ma_per_one, pp.io_write_ma_per_zero])
-    i_rw = rw_current_pallas(trace.data, prev_data, feats.op, feats.il_mode,
-                             bankfac, pp.datadep, io)
-
-    dt = trace.dt.astype(jnp.float32)
-    i_bg = jnp.where(feats.powered_down, pp.i_pd, pp.i2n + feats.bg_delta_sum)
-    charge = i_bg * dt
-    burst = jnp.minimum(dt, float(TIMING.tBURST))
-    charge = charge + jnp.where(feats.is_rw, (i_rw - i_bg) * burst, 0.0)
-    act_q = pp.q_actpre * (1.0 + pp.row_ones_slope
-                           * feats.row_ones.astype(jnp.float32))
-    charge = charge + jnp.where(trace.cmd == ACT, act_q, 0.0)
-    charge = charge + jnp.where(trace.cmd == REF, pp.q_ref, 0.0)
-    return _report(jnp.sum(charge), trace.total_cycles())
+    """Legacy single-(trace, paramset) entry point, shimmed onto the
+    batched kernel family as a (1 trace, 1 vendor) grid."""
+    batch = jax.tree_util.tree_map(lambda x: x[None], trace)
+    weight = jnp.ones((1, trace.n), jnp.float32)
+    stacked = jax.tree_util.tree_map(lambda x: x[None], pp)
+    charge, cycles = batched_charge_matrix(batch, weight, stacked)
+    return _report(charge[0, 0], cycles[0])

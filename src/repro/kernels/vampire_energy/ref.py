@@ -1,19 +1,26 @@
-"""Pure-jnp oracle for the fused VAMPIRE energy kernel: the production
-vectorized path from repro.core.energy_model."""
+"""Pure-jnp oracle for the batched VAMPIRE energy kernel family: the
+production vectorized integrator from ``repro.core.energy_model``, applied
+pair by pair over the padded batch."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.energy_model import PowerParams, rw_current
+from repro.core.energy_model import (PowerParams, charge_from_features,
+                                     extract_features)
 
 
-def rw_current_ref(data, prev, op, mode, bankfac_index, pp: PowerParams):
-    """Same contract as the kernel, taking bank *indices* + PowerParams."""
-    from repro.core.dram import line_ones
-    ones = line_ones(data)
-    togg = line_ones(jnp.bitwise_xor(data.astype(jnp.uint32),
-                                     prev.astype(jnp.uint32)))
-    # rw_current applies pp.ones_quad too; the kernel is the fitted-model
-    # (linear) path, so callers pass params with ones_quad == 0.
-    return rw_current(pp, op, mode, ones, togg, bankfac_index)
+def batched_charge_ref(trace, weight, stacked: PowerParams):
+    """Same contract as ``ops.batched_charge_matrix`` (measured-data mode),
+    via the unfused vectorized path."""
+    def one_pair(tr, w, pp):
+        charges = charge_from_features(tr, extract_features(tr, pp), pp)
+        return jnp.sum(charges * w)
+
+    def one_trace(tr, w):
+        return jax.vmap(lambda pp: one_pair(tr, w, pp))(stacked)
+
+    charge = jax.vmap(one_trace)(trace, weight.astype(jnp.float32))
+    cycles = jnp.sum(trace.dt * weight.astype(jnp.int32), axis=1,
+                     dtype=jnp.int32)
+    return charge, cycles

@@ -1,88 +1,197 @@
-"""Pallas TPU kernel: fused per-command VAMPIRE read/write current.
+"""Pallas TPU kernels: fused (traces x vendors) VAMPIRE energy.
 
-Fuses, for every RD/WR command: line popcount, bus-XOR toggle popcount, the
-(interleave-mode, op) coefficient select, the structural bank factor, and the
-I/O-driver term — paper Eq. 2 evaluated in one VMEM pass. The coefficient
-select is a masked sum over the 8 (mode, op) combinations (no per-lane
-gathers on the TPU VPU).
+The batched kernel family behind ``impl='pallas'`` (the unified estimator
+protocol's fast path).  Two kernels split the work exactly where the model
+does:
 
-Inputs  data    (N, 16) uint32   line on the bus
-        prev    (N, 16) uint32   previous RD/WR line on the bus
-        op      (N,)   int32     0 = read, 1 = write
-        mode    (N,)   int32     interleave mode 0..3
-        bankfac (N,)   f32       structural factor of the target bank
-        coeffs  (4, 2, 3) f32    Table-5 parameters
-        io      (2,)   f32       (io_read_ma_per_one, io_write_ma_per_zero)
-Output  (N,) f32 current in mA
+1. :func:`batched_features_pallas` — the **param-independent feature
+   kernel**.  Consumes a padded TraceBatch's data stream once: per-line
+   popcount and bus-XOR toggle popcount (the O(N x 512 bit) work, fusing
+   the ``kernels/popcount`` and ``kernels/toggle`` bodies into one VMEM
+   pass) with validity masking over NOP/dt=0 pad rows.  Runs ONCE per
+   batch; its outputs are shared by every vendor.
 
-The surrounding integrator (bank-state background, ACT/REF charges) stays in
-vectorized jnp — those terms touch O(N) scalars, not the O(N x 512 bit)
-data stream this kernel owns.
+2. :func:`batched_energy_pallas` — the **per-vendor fused current/energy
+   kernel**, gridded over ``(vendors, traces, command blocks)``.  For each
+   vendor it fuses the (interleave-mode, op) coefficient select of paper
+   Eq. 2 (masked sum — no per-lane gathers on the VPU), the structural
+   bank factor and open-bank background (8-wide masked reductions over
+   transposed (8, N) layouts, keeping the command axis on the VREG lanes),
+   the I/O-driver term, the bank-state background integrator with burst
+   crediting, ACT/REF charges, the optional ``ones_quad`` curvature (so
+   the *true* simulator params ride the same kernel during
+   characterization), and the pad-row weight mask — one partial charge sum
+   per grid cell, reduced to the (traces, vendors) matrix outside.
+
+The index bookkeeping that decides bank state / interleave mode / previous
+line (``energy_model.structural_state``) stays in vectorized jnp: it is
+O(N) scalars and gathers, not the O(N x 512 bit) stream these kernels own.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import INTERPRET, cdiv, pad_to
+from repro.core.dram import TIMING
+from repro.kernels.common import cdiv, interpret_default, pad_to
 from repro.kernels.popcount.popcount import _popcount_u32
 
-BLOCK_N = 1024
+BLOCK_N = 512
 LINE_BITS = 512.0
+_T_BURST = float(TIMING.tBURST)
+
+# layout of the packed per-vendor scalar row (see pack_param_blocks)
+_SCAL_FIELDS = ("i2n", "q_actpre", "row_ones_slope", "q_ref", "i_pd",
+                "io_read_ma_per_one", "io_write_ma_per_zero", "ones_quad")
 
 
-def _kernel(data_ref, prev_ref, op_ref, mode_ref, bankfac_ref,
-            coeff_ref, io_ref, o_ref):
-    data = data_ref[...]
+def pack_param_blocks(stacked):
+    """Pack a stacked (leading vendor axis) ``PowerParams`` into the three
+    fixed-shape blocks the energy kernel tiles over the vendor grid axis:
+    ``coeffs (V,4,2,3)``, ``scal (V,8)`` (order ``_SCAL_FIELDS``), and
+    ``bvec (V,3,8)`` (open-bank delta, read factor, write factor)."""
+    coeffs = stacked.datadep.astype(jnp.float32)
+    scal = jnp.stack([getattr(stacked, f).astype(jnp.float32)
+                      for f in _SCAL_FIELDS], axis=-1)
+    bvec = jnp.stack([stacked.bank_open_delta.astype(jnp.float32),
+                      stacked.bank_read_factor.astype(jnp.float32),
+                      stacked.bank_write_factor.astype(jnp.float32)], axis=1)
+    return coeffs, scal, bvec
+
+
+# ---------------------------------------------------------------------------
+# 1. param-independent feature kernel
+# ---------------------------------------------------------------------------
+def _features_kernel(data_ref, prev_ref, tmask_ref, ones_ref, togg_ref):
+    data = data_ref[...]                              # (B, 16) uint32
     prev = prev_ref[...]
-    op = op_ref[...]
-    mode = mode_ref[...]
-    bankfac = bankfac_ref[...]
-    coeffs = coeff_ref[...]          # (4, 2, 3)
-    io = io_ref[...]                 # (2,)
-
     ones = jnp.sum(_popcount_u32(data), axis=1).astype(jnp.float32)
     togg = jnp.sum(_popcount_u32(jnp.bitwise_xor(data, prev)),
                    axis=1).astype(jnp.float32)
+    ones_ref[...] = ones
+    togg_ref[...] = togg * tmask_ref[...]             # mask pad/first-access
 
+
+def batched_features_pallas(data, prev, tmask, block_n: int = BLOCK_N,
+                            interpret: bool | None = None):
+    """(M, 16) u32 data/prev + (M,) f32 toggle-validity mask ->
+    ((M,) ones, (M,) toggles) as f32, in one fused pass."""
+    if interpret is None:
+        interpret = interpret_default()
+    data, m = pad_to(data.astype(jnp.uint32), block_n, axis=0)
+    prev, _ = pad_to(prev.astype(jnp.uint32), block_n, axis=0)
+    tmask, _ = pad_to(tmask.astype(jnp.float32), block_n, axis=0)
+    grid = (cdiv(data.shape[0], block_n),)
+    ones, togg = pl.pallas_call(
+        _features_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, 16), lambda i: (i, 0)),
+                  pl.BlockSpec((block_n, 16), lambda i: (i, 0)),
+                  pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((data.shape[0],), jnp.float32),
+                   jax.ShapeDtypeStruct((data.shape[0],), jnp.float32)],
+        interpret=interpret,
+    )(data, prev, tmask)
+    return ones[:m], togg[:m]
+
+
+# ---------------------------------------------------------------------------
+# 2. per-vendor fused current/energy kernel
+# ---------------------------------------------------------------------------
+# feature-plane order shared by the kernel signature and the ops wrapper
+FEATURE_PLANES = ("ones", "togg", "op", "mode", "dt", "is_rw", "is_act",
+                  "is_ref", "pd", "row_ones", "w")
+
+
+def _energy_kernel(ones_ref, togg_ref, op_ref, mode_ref, dt_ref, isrw_ref,
+                   isact_ref, isref_ref, pd_ref, rowones_ref, w_ref,
+                   bank_t_ref, open_t_ref, coeff_ref, scal_ref, bvec_ref,
+                   o_ref):
+    ones = ones_ref[0]                # (B,) f32
+    togg = togg_ref[0]
+    op = op_ref[0]                    # (B,) int32: 0 read / 1 write
+    mode = mode_ref[0]                # (B,) int32 in [0,4)
+    dt = dt_ref[0]                    # (B,) f32 cycles owned by the command
+    is_rw = isrw_ref[0]               # (B,) f32 command-class flags
+    is_act = isact_ref[0]
+    is_ref = isref_ref[0]
+    pd = pd_ref[0]                    # (B,) f32 powered-down before command
+    row_ones = rowones_ref[0]         # (B,) f32
+    w = w_ref[0]                      # (B,) f32 validity mask (0 on pads)
+    bank_t = bank_t_ref[0]            # (8, B) f32 one-hot target bank
+    open_t = open_t_ref[0]            # (8, B) f32 banks open before command
+    coeffs = coeff_ref[0]             # (4, 2, 3) Table-5 params, this vendor
+    scal = scal_ref[0]                # (8,) packed scalars (_SCAL_FIELDS)
+    bvec = bvec_ref[0]                # (3, 8) bank vectors
+
+    i2n, q_actpre, slope, q_ref_chg = scal[0], scal[1], scal[2], scal[3]
+    i_pd, io_r, io_w, ones_quad = scal[4], scal[5], scal[6], scal[7]
+
+    # background current from the bank/power-down state
+    bg_delta = jnp.sum(open_t * bvec[0][:, None], axis=0)        # (B,)
+    i_bg = jnp.where(pd > 0, i_pd, i2n + bg_delta)
+
+    # paper Eq. 2: masked (mode, op) coefficient select + quad curvature
     cur = jnp.zeros_like(ones)
     for m in range(4):
         for o in range(2):
             sel = ((mode == m) & (op == o)).astype(jnp.float32)
             c = coeffs[m, o]
-            cur = cur + sel * (c[0] + c[1] * ones + c[2] * togg)
-    io_cur = jnp.where(op == 0, io[0] * ones, io[1] * (LINE_BITS - ones))
-    o_ref[...] = cur * bankfac + io_cur
+            base = c[0] + c[1] * ones + c[2] * togg
+            base = base + ones_quad * c[1] * ones * (ones / LINE_BITS - 0.5)
+            cur = cur + sel * base
+    rd_fac = jnp.sum(bank_t * bvec[1][:, None], axis=0)
+    wr_fac = jnp.sum(bank_t * bvec[2][:, None], axis=0)
+    io_cur = jnp.where(op == 0, io_r * ones, io_w * (LINE_BITS - ones))
+    i_rw = cur * jnp.where(op == 0, rd_fac, wr_fac) + io_cur
+
+    # the integrator: background over the slot, burst crediting, ACT/REF
+    burst = jnp.minimum(dt, _T_BURST)
+    charge = i_bg * dt
+    charge = charge + is_rw * (i_rw - i_bg) * burst
+    charge = charge + is_act * q_actpre * (1.0 + slope * row_ones)
+    charge = charge + is_ref * q_ref_chg
+    o_ref[0, 0, 0] = jnp.sum(charge * w)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def rw_current_pallas(data, prev, op, mode, bankfac, coeffs, io,
-                      block_n: int = BLOCK_N,
-                      interpret: bool | None = None) -> jax.Array:
+def batched_energy_pallas(feats: dict, coeffs, scal, bvec,
+                          block_n: int = BLOCK_N,
+                          interpret: bool | None = None) -> jax.Array:
+    """The (vendors, traces, blocks)-gridded charge reduction.
+
+    ``feats`` maps :data:`FEATURE_PLANES` names to (T, N) arrays, plus
+    ``bank_t``/``open_t`` as (T, 8, N) transposed layouts so the 8-wide
+    reductions keep the command axis on the VREG lanes.  Returns the
+    (T, V) masked charge matrix in mA*cycles."""
     if interpret is None:
-        interpret = INTERPRET
-    data, n = pad_to(data.astype(jnp.uint32), block_n, axis=0)
-    prev, _ = pad_to(prev.astype(jnp.uint32), block_n, axis=0)
-    op, _ = pad_to(op.astype(jnp.int32), block_n, axis=0)
-    mode, _ = pad_to(mode.astype(jnp.int32), block_n, axis=0)
-    bankfac, _ = pad_to(bankfac.astype(jnp.float32), block_n, axis=0)
-    grid = (cdiv(data.shape[0], block_n),)
-    out = pl.pallas_call(
-        _kernel,
+        interpret = interpret_default()
+    padded = {}
+    for name in FEATURE_PLANES:
+        padded[name], _ = pad_to(feats[name], block_n, axis=1)
+    for name in ("bank_t", "open_t"):
+        padded[name], _ = pad_to(feats[name], block_n, axis=2)
+    n_traces, n_pad = padded["ones"].shape
+    n_vendors = coeffs.shape[0]
+    grid_n = cdiv(n_pad, block_n)
+    grid = (n_vendors, n_traces, grid_n)
+
+    spec_2d = pl.BlockSpec((1, block_n), lambda v, t, i: (t, i))
+    spec_8 = pl.BlockSpec((1, 8, block_n), lambda v, t, i: (t, 0, i))
+    partial = pl.pallas_call(
+        _energy_kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((block_n, 16), lambda i: (i, 0)),
-                  pl.BlockSpec((block_n, 16), lambda i: (i, 0)),
-                  pl.BlockSpec((block_n,), lambda i: (i,)),
-                  pl.BlockSpec((block_n,), lambda i: (i,)),
-                  pl.BlockSpec((block_n,), lambda i: (i,)),
-                  pl.BlockSpec((4, 2, 3), lambda i: (0, 0, 0)),
-                  pl.BlockSpec((2,), lambda i: (0,))],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((data.shape[0],), jnp.float32),
+        in_specs=[spec_2d] * len(FEATURE_PLANES) + [
+            spec_8, spec_8,
+            pl.BlockSpec((1, 4, 2, 3), lambda v, t, i: (v, 0, 0, 0)),
+            pl.BlockSpec((1, 8), lambda v, t, i: (v, 0)),
+            pl.BlockSpec((1, 3, 8), lambda v, t, i: (v, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, 1), lambda v, t, i: (v, t, i)),
+        out_shape=jax.ShapeDtypeStruct((n_vendors, n_traces, grid_n),
+                                       jnp.float32),
         interpret=interpret,
-    )(data, prev, op, mode, bankfac,
-      coeffs.astype(jnp.float32), io.astype(jnp.float32))
-    return out[:n]
+    )(*[padded[n] for n in FEATURE_PLANES], padded["bank_t"],
+      padded["open_t"], coeffs, scal, bvec)
+    return jnp.sum(partial, axis=2).T        # (T, V)

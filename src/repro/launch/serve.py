@@ -16,9 +16,11 @@ decode batch's actual output bytes, and scored against every requested
 vendor in ONE batched ``estimate`` dispatch per batch — plus the
 HBM2e-anchored extrapolation (``repro.core.hbm``).  The scorer is any
 unified-protocol estimator (``repro.core.model_api``): ``--power-model
-vampire|micron|drampower`` picks the physics, ``--vampire PATH`` loads a
-saved model (v2 ``.npz`` or legacy v1 pickle) instead of the quick
-reference fit.
+vampire|micron|drampower`` picks the physics, ``--power-impl
+vectorized|pallas|reference`` picks the impl-registry evaluation path
+(``pallas`` = the fused (traces x vendors) kernel family), and
+``--vampire PATH`` loads a saved model (v2 ``.npz`` or legacy v1 pickle)
+instead of the quick reference fit.
 
     python -m repro.launch.serve --arch qwen2.5-3b --smoke --batch 4 \
         --prompt-len 64 --decode-tokens 32 --data 1 --model 1 \
@@ -60,6 +62,7 @@ class ServeJob:
     power_report: bool = False
     power_vendors: tuple[int, ...] = (0, 1, 2)
     power_model: str = "vampire"      # estimator kind: vampire|micron|drampower
+    power_impl: str = "vectorized"    # impl registry: vectorized|pallas|reference
     vampire_path: str | None = None   # saved model blob (model_api v2 / v1)
 
 
@@ -214,7 +217,8 @@ def power_report(job: ServeJob, compiled_decode, logits, tokens, *,
         seq_traces.append(traces.app_trace(spec, n_requests=n_req,
                                            lines=lines))
 
-    rep = model.estimate(seq_traces, vendors)            # (B, V) reports
+    rep = model.estimate(seq_traces, vendors,
+                         impl=job.power_impl)            # (B, V) reports
     modeled_bytes = np.asarray(
         [traces.trace_request_lines(tr).shape[0] * LINE_BYTES
          for tr in seq_traces], np.float64)
@@ -260,6 +264,12 @@ def main():
     p.add_argument("--power-model", default="vampire",
                    choices=("vampire", "micron", "drampower"),
                    help="estimator kind scoring the decode HBM traffic")
+    from repro.core import model_api
+    p.add_argument("--power-impl", default="vectorized",
+                   choices=model_api.registered_impls(),
+                   help="impl-registry evaluation path for the power "
+                        "report (pallas = fused kernels; compiled on TPU, "
+                        "interpret elsewhere)")
     p.add_argument("--vampire", default=None,
                    help="saved model blob (model.save: v2 .npz, or legacy "
                         "v1 pickle); quick reference fit when omitted")
@@ -271,6 +281,7 @@ def main():
                        temperature=args.temperature,
                        power_report=args.power_report,
                        power_model=args.power_model,
+                       power_impl=args.power_impl,
                        vampire_path=args.vampire))
     print(f"prefill={res['prefill_s']:.2f}s decode p50={res['decode_p50_ms']:.1f}ms "
           f"p99={res['decode_p99_ms']:.1f}ms throughput={res['tokens_per_s']:.1f} tok/s")

@@ -268,8 +268,8 @@ def test_baseline_argument_validation_matches_vampire(baseline_models,
         micron.estimate(ragged_traces, mode="distribution")
     with pytest.raises(ValueError, match="unknown mode"):
         micron.estimate(ragged_traces, mode="typo")
-    with pytest.raises(ValueError, match="vectorized"):
-        micron.estimate(ragged_traces, impl="scan")
+    with pytest.raises(ValueError, match="unknown impl"):
+        micron.estimate(ragged_traces, impl="typo")
     with pytest.raises(KeyError, match="not fitted"):
         micron.estimate(ragged_traces, (9,))
 

@@ -165,14 +165,16 @@ def test_train_loss_decreases():
 # ------------------------------------------------------------------ serve
 def test_serve_smoke_with_power_report(quick_vampire, tmp_path):
     """Serving end-to-end: mesh-sharded params/caches, temperature sampling,
-    and the power-report mode feeding decode HBM traffic through
-    estimate_many (the module's long-promised 'HBM energy estimates')."""
+    and the power-report mode feeding decode HBM traffic through the
+    unified estimate() dispatch (the module's long-promised 'HBM energy
+    estimates') — riding the fused impl='pallas' path via --power-impl."""
     from repro.launch.serve import ServeJob, run
     fit = str(tmp_path / "fit.pkl")
     quick_vampire.save(fit)
     res = run(ServeJob(arch="qwen2.5-3b", smoke=True, batch=2, prompt_len=8,
                        decode_tokens=4, data=1, model=1, temperature=0.7,
-                       power_report=True, vampire_path=fit))
+                       power_report=True, power_impl="pallas",
+                       vampire_path=fit))
     assert res["tokens"].shape == (2, 4)
     pw = res["power"]
     assert pw["traffic_bytes_per_step"] > 0
