@@ -1,0 +1,162 @@
+"""Benchmark-regression gate: compare freshly emitted ``BENCH_*.json``
+artifacts against committed baseline snapshots on RATIO metrics.
+
+Wall-clock numbers vary with runner hardware and stay informational; the
+ratios (batched-vs-serial speedup, unified-vs-old-path speedup,
+pallas-vs-vectorized speedup, surface-vs-python-sweep speedup) are
+hardware-normalized and must not collapse.  A fresh ratio passes when it
+clears EITHER the absolute floor (a healthy run on any hardware) OR the
+baseline-relative bar ``baseline * (1 - rel_slack)`` (no large regression
+against the committed snapshot) — so noisy runners don't flake, while an
+order-of-magnitude regression (e.g. the batched path silently falling back
+to serial dispatches) fails loudly.
+
+Usage (what CI runs after the bench steps, replacing the old blanket
+``continue-on-error``):
+
+    python -m benchmarks.check_bench --fresh artifacts \
+        --baseline "$RUNNER_TEMP/bench-baseline"
+
+Exit status 0 = all gates pass; 1 = regression (reasons on stdout).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+
+@dataclasses.dataclass(frozen=True)
+class RatioCheck:
+    """One gated ratio metric inside a benchmark artifact."""
+    path: tuple[str, ...]          # key path into the JSON blob
+    floor: float                   # absolute pass bar (healthy-run value)
+    rel_slack: float = 0.5         # allowed fraction below the baseline
+    # key path of a boolean in the FRESH blob gating applicability (e.g.
+    # pallas speed bars only apply when the kernels actually compiled)
+    applies_if: tuple[str, ...] | None = None
+
+
+# artifact file -> its gated ratios.  Floors sit far below healthy values
+# (estimate speedup is ~30x warm on the committed snapshot, model_api ~13x,
+# baseline batching ~3700x) but far above what any real regression yields.
+CHECKS: dict[str, tuple[RatioCheck, ...]] = {
+    "BENCH_estimate.json": (
+        RatioCheck(("speedup_warm",), floor=4.0),
+        RatioCheck(("speedup_cold",), floor=2.0),
+    ),
+    "BENCH_model_api.json": (
+        RatioCheck(("unified_speedup",), floor=3.0),
+        RatioCheck(("baseline_speedup",), floor=50.0),
+    ),
+    "BENCH_kernels.json": (
+        # the compiled-path speed bar: fused beats vectorized on the
+        # largest grid.  Off-TPU the kernels run in interpret mode and the
+        # bar does not apply (parity is covered by the test suite).
+        RatioCheck(("grids", "-1", "pallas_speedup_vs_vectorized_warm"),
+                   floor=1.0, rel_slack=0.9,
+                   applies_if=("speed_bar_applies",)),
+    ),
+    "BENCH_structural.json": (
+        RatioCheck(("surface_speedup_vs_python_sweep",), floor=3.0),
+    ),
+}
+
+
+def lookup(blob: dict, path: tuple[str, ...]):
+    """Walk a key path; integer-looking components index into lists."""
+    node = blob
+    for key in path:
+        if isinstance(node, list):
+            node = node[int(key)]
+        else:
+            node = node[key]
+    return node
+
+
+def check_artifact(name: str, fresh: dict, baseline: dict | None,
+                   checks: tuple[RatioCheck, ...]) -> list[str]:
+    """Failure messages for one artifact (empty = gate passes)."""
+    failures = []
+    for chk in checks:
+        label = f"{name}:{'.'.join(chk.path)}"
+        if chk.applies_if is not None:
+            try:
+                applies = bool(lookup(fresh, chk.applies_if))
+            except (KeyError, IndexError, TypeError):
+                failures.append(
+                    f"{label}: applicability flag "
+                    f"{'.'.join(chk.applies_if)} missing from fresh "
+                    f"artifact")
+                continue
+            if not applies:
+                continue
+        try:
+            value = float(lookup(fresh, chk.path))
+        except (KeyError, IndexError, TypeError):
+            failures.append(f"{label}: metric missing from fresh artifact")
+            continue
+        bars = [f"floor {chk.floor:g}"]
+        if value >= chk.floor:
+            continue
+        if baseline is not None:
+            try:
+                base = float(lookup(baseline, chk.path))
+            except (KeyError, IndexError, TypeError):
+                base = None
+            if base is not None:
+                bar = base * (1.0 - chk.rel_slack)
+                bars.append(f"baseline {base:g} * {1 - chk.rel_slack:g} "
+                            f"= {bar:g}")
+                if value >= bar:
+                    continue
+        failures.append(f"{label}: {value:g} regressed below "
+                        f"{' and '.join(bars)}")
+    return failures
+
+
+def run_gate(fresh_dir: str, baseline_dir: str,
+             checks: dict[str, tuple[RatioCheck, ...]] = CHECKS
+             ) -> list[str]:
+    """All failure messages across the artifact set."""
+    failures = []
+    for name, artifact_checks in sorted(checks.items()):
+        fresh_path = os.path.join(fresh_dir, name)
+        base_path = os.path.join(baseline_dir, name)
+        if not os.path.exists(fresh_path):
+            failures.append(f"{name}: fresh artifact missing (bench step "
+                            f"did not emit it)")
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        baseline = None
+        if os.path.exists(base_path):
+            with open(base_path) as f:
+                baseline = json.load(f)
+        failures.extend(check_artifact(name, fresh, baseline,
+                                       artifact_checks))
+    return failures
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--fresh", default="artifacts",
+                   help="directory holding freshly emitted BENCH_*.json")
+    p.add_argument("--baseline", required=True,
+                   help="directory holding the committed baseline snapshots")
+    args = p.parse_args()
+    failures = run_gate(args.fresh, args.baseline)
+    if failures:
+        print("benchmark-regression gate FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        sys.exit(1)
+    print(f"benchmark-regression gate passed "
+          f"({sum(len(c) for c in CHECKS.values())} ratio checks over "
+          f"{len(CHECKS)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

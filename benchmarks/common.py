@@ -15,8 +15,9 @@ import time
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 CACHE = os.path.join(ARTIFACTS, "vampire_fit.npz")
 FIT_KW = dict(probe_modules=5, probe_reps=128, n_rows=16)
-# v4: unified estimator protocol / schema-v2 blob (PR 3)
-_CACHE_META = {"cache": "bench-fit", "rev": "v4", "engine": "batched",
+# v5: structural-variation surface campaign (surface probes + band-0 row
+# sweep) changed the fitted state — pre-surface caches must refit
+_CACHE_META = {"cache": "bench-fit", "rev": "v5", "engine": "batched",
                "fit_kw": {k: int(v) for k, v in sorted(FIT_KW.items())}}
 
 _model = None

@@ -54,7 +54,23 @@ def main():
     print(f"  DRAMPower, same call: "
           f"{np.asarray(dp.estimate(sweeps).avg_current_ma).round(1)[1]}")
 
-    print("== 3b. the impl registry: HOW the matrix is evaluated ==")
+    print("== 3b. structural-variation surfaces (paper Figs 19-22) ==")
+    # mode='surface' decomposes the same energy per (bank, row-band) cell:
+    # leaves are (traces, vendors, banks, row_bands); summing the cell
+    # axes recovers mode='mean' exactly.
+    from repro.core import validate
+    surf = model.estimate([validate.surface_sweep_trace()], mode="surface")
+    per_bank = np.asarray(surf.energy_pj)[0].sum(axis=2)   # (vendors, banks)
+    print("  per-bank energy (uJ), vendors x banks:")
+    for v in range(per_bank.shape[0]):
+        cells = " ".join(f"{e/1e6:6.2f}" for e in per_bank[v])
+        print(f"    vendor {'ABC'[v]}: {cells}")
+    hot = np.unravel_index(np.asarray(surf.energy_pj)[0, 2].argmax(),
+                           surf.energy_pj.shape[2:])
+    print(f"  vendor C's hottest structural cell: bank {hot[0]}, "
+          f"row band {hot[1]}")
+
+    print("== 3c. the impl registry: HOW the matrix is evaluated ==")
     # impl= picks a registered evaluation path (model_api.resolve_impl):
     # 'vectorized' (jnp/XLA, default), 'pallas' (fused kernels — compiled
     # on TPU, interpret-mode elsewhere), 'reference' (per-command oracle).

@@ -47,7 +47,8 @@ import numpy as np
 from repro.core import model_api
 from repro.core.dram import (ACT, RD, WR, REF, CommandTrace, TIMING)
 from repro.core.energy_model import (EnergyReport, StructuralFeatures,
-                                     _report, extract_structural_features)
+                                     _report, extract_structural_features,
+                                     surface_charge, surface_cycles)
 
 _T = TIMING
 
@@ -180,6 +181,36 @@ def _batched_baseline(charge_fn):
 _BATCHED = {kind: _batched_baseline(fn) for kind, fn in _CHARGE_FNS.items()}
 
 
+def _batched_baseline_surface(charge_fn):
+    @jax.jit
+    def dispatch(trace: CommandTrace, weight: jax.Array,
+                 table: jax.Array) -> EnergyReport:
+        """``mode='surface'`` twin of the mean dispatch: the identical
+        per-command charges grouped onto the (bank, row-band) cells ->
+        (traces, vendors, banks, row_bands)-shaped report leaves.  The
+        baselines model no structural variation — that is the paper's
+        point — so their surfaces are flat in everything but workload
+        placement; the decomposition is what exposes that flatness next
+        to VAMPIRE's."""
+        def one_trace(tr: CommandTrace, w: jax.Array):
+            ob, pd = _bg_state(extract_structural_features(tr))
+
+            def one_vendor(row):
+                ds = {k: row[i] for i, k in enumerate(BASELINE_IDD_KEYS)}
+                return surface_charge(tr, w, charge_fn(tr, ob, pd, ds))
+
+            return jax.vmap(one_vendor)(table), surface_cycles(tr, w)
+
+        charge, cycles = jax.vmap(one_trace)(trace, weight)
+        return _report(charge,
+                       jnp.broadcast_to(cycles[:, None], charge.shape))
+    return dispatch
+
+
+_BATCHED_SURFACE = {kind: _batched_baseline_surface(fn)
+                    for kind, fn in _CHARGE_FNS.items()}
+
+
 # ---------------------------------------------------------------------------
 # Protocol estimators
 # ---------------------------------------------------------------------------
@@ -228,7 +259,11 @@ class DatasheetModel(model_api.StackedEstimatorMixin):
         """Unified protocol entry point.  ``mode='distribution'`` equals
         ``'mean'`` (no data dependency to feed the fractions into) and
         ``mode='range'`` collapses to (mean, mean, mean) — these baselines
-        model neither, which is Section 9.1's finding.  ``impl`` resolves
+        model neither, which is Section 9.1's finding.  ``mode='surface'``
+        returns the (traces, vendors, banks, row_bands) decomposition of
+        the same charges: structurally flat (the physics has no
+        per-bank/row terms), varying only with workload placement — the
+        contrast against VAMPIRE's surfaces.  ``impl`` resolves
         through the shared registry: ``'vectorized'`` (one vmapped
         dispatch), ``'pallas'`` (the fused baseline-energy kernel gridded
         over vendors), ``'reference'`` (the pair-at-a-time per-trace
@@ -238,8 +273,22 @@ class DatasheetModel(model_api.StackedEstimatorMixin):
         # ignores their values) and rejected without it
         model_api.validate_estimate_args(mode, ones_frac, toggle_frac)
         impl = model_api.resolve_impl(impl, mode=mode).name
+        model_api.require_impl_path(self.kind, impl,
+                                    ("vectorized", "pallas", "reference"))
         _, idx = model_api.resolve_vendor_indices(self.vendors, vendors)
         tb = self._batch_cache.get(traces)
+        if mode == "surface":
+            if impl == "vectorized":
+                return _BATCHED_SURFACE[self.kind](tb.trace, tb.weight,
+                                                   self._table_for(idx))
+            if impl == "pallas":
+                from repro.kernels.baseline_energy import ops as bops
+                charge, cycles = bops.baseline_charge_matrix(
+                    tb.trace, tb.weight, self._table_for(idx), self.kind,
+                    surface=True)
+                return _report(charge, jnp.broadcast_to(cycles[:, None],
+                                                        charge.shape))
+            return self._reference_surface(traces, tb, idx)
         if impl == "vectorized":
             rep = _BATCHED[self.kind](tb.trace, tb.weight,
                                       self._table_for(idx))
@@ -254,6 +303,30 @@ class DatasheetModel(model_api.StackedEstimatorMixin):
         if mode == "range":
             return rep, rep, rep
         return rep
+
+    def _reference_surface(self, traces, tb, idx) -> EnergyReport:
+        """``impl='reference'`` for ``mode='surface'``: the paper-figure
+        per-trace charge formulas, grouped onto the (bank, row-band) cells
+        one (trace, vendor) pair at a time."""
+        from repro.core.estimate_batch import original_traces
+        originals = original_traces(traces, tb)
+        order = self.vendors
+        charge_fn = _CHARGE_FNS[self.kind]
+        per_trace = []
+        for tr in originals:
+            ob, pd = _bg_state(extract_structural_features(tr))
+            w = jnp.ones(tr.n, jnp.float32)
+            pairs = []
+            for j in idx:
+                ds = {k: jnp.float32(self.datasheets[order[j]][k])
+                      for k in BASELINE_IDD_KEYS}
+                pairs.append(_report(
+                    surface_charge(tr, w, charge_fn(tr, ob, pd, ds)),
+                    surface_cycles(tr, w)))
+            per_trace.append(jax.tree_util.tree_map(
+                lambda *leaves: jnp.stack(leaves), *pairs))
+        return jax.tree_util.tree_map(lambda *rows: jnp.stack(rows),
+                                      *per_trace)
 
     def _reference_matrix(self, traces, tb, idx) -> EnergyReport:
         """``impl='reference'``: the paper-figure per-trace functions

@@ -12,7 +12,10 @@ Pipeline (mirrors the paper's methodology):
    toggle pair sweeps for each interleaving mode and op; fit Eq. 2 per
    (mode, op) with the I/O-driver estimate subtracted -> Table 5 recovery.
 4. Structural probes (Section 6): per-bank idle/read/write, per-row
-   activation, per-column read.
+   activation, per-column read, and the per-(bank, row-band) SURFACE
+   campaign — one constant-row-popcount ACT/PRE loop per surface cell, so
+   current differences across cells isolate the planted structural surface
+   from the row-address-ones slope (Figs 19-22 recovery).
 5. Assemble fitted per-vendor :class:`PowerParams` -> the VAMPIRE model.
 
 Every measurement of the campaign is declared up front as a
@@ -146,10 +149,15 @@ class VendorCharacterization:
     row_sweep: dict
     q_ref: float
     i_pd: float
+    # per-(bank, row-band) structural surface recovered by the surface
+    # campaign; None (-> neutral all-ones) for pre-surface model blobs
+    act_surface: np.ndarray = None  # type: ignore[assignment]
     fitted: PowerParams = None  # type: ignore[assignment]
 
     def build_params(self) -> PowerParams:
         import jax.numpy as jnp
+        if self.act_surface is None:
+            self.act_surface = np.ones((dram.N_BANKS, dram.N_ROW_BANDS))
         self.fitted = PowerParams(
             datadep=jnp.asarray(self.datadep, jnp.float32),
             i2n=jnp.asarray(self.i2n, jnp.float32),
@@ -165,6 +173,7 @@ class VendorCharacterization:
             io_write_ma_per_zero=jnp.asarray(P.IO_DRIVER_MA_PER_ZERO_WRITE,
                                              jnp.float32),
             ones_quad=jnp.asarray(0.0, jnp.float32),  # model is linear
+            act_surface=jnp.asarray(self.act_surface, jnp.float32),
         )
         return self.fitted
 
@@ -199,14 +208,31 @@ class CampaignPlan:
 
 
 def _sample_rows(n_rows: int, rng_seed: int) -> list[int]:
-    """Row addresses covering address popcounts 0..ROW_BITS."""
+    """Row addresses covering address popcounts 0..ROW_BAND_SHIFT, all
+    inside row band 0 (bits below ``ROW_BAND_SHIFT``) so the row-ones
+    slope fit is not confounded by the per-(bank, row-band) structural
+    surface — band 0 is the surface's reference band (factor 1.0); the
+    dedicated surface campaign covers the other bands at constant
+    popcount."""
     rng = np.random.default_rng(rng_seed + 1)
     rows = []
-    for ro in range(dram.ROW_BITS + 1):
-        for _ in range(max(1, n_rows // (dram.ROW_BITS + 1))):
-            bits = rng.choice(dram.ROW_BITS, size=ro, replace=False)
+    for ro in range(dram.ROW_BAND_SHIFT + 1):
+        for _ in range(max(1, n_rows // (dram.ROW_BAND_SHIFT + 1))):
+            bits = rng.choice(dram.ROW_BAND_SHIFT, size=ro, replace=False)
             rows.append(int(sum(1 << int(b) for b in bits)))
     return rows
+
+
+# Every surface probe's row has this address popcount, so cell-to-cell
+# current differences isolate the surface factor from the row-ones slope.
+SURFACE_ROW_POPCOUNT = 3
+
+
+def surface_probe_row(band: int) -> int:
+    """The probe row of a surface band: band bits at the top, low bits
+    padding the address popcount to :data:`SURFACE_ROW_POPCOUNT`."""
+    pad = SURFACE_ROW_POPCOUNT - bin(band).count("1")
+    return (band << dram.ROW_BAND_SHIFT) | ((1 << pad) - 1)
 
 
 @functools.lru_cache(maxsize=4)
@@ -246,6 +272,13 @@ def campaign_plan(probe_reps: int = 256, n_rows: int = 24,
     for i, r in enumerate(rows):
         tr, skip = idd_loops.row_act_probe(r, reps=probe_reps)
         pts.append((("row", i), tr, skip))
+    # surface campaign (appended LAST so earlier probes keep their noise
+    # keys): one ACT/PRE loop per (bank, row-band) cell
+    for b in range(dram.N_BANKS):
+        for band in range(dram.N_ROW_BANDS):
+            tr, skip = idd_loops.surface_act_probe(
+                b, surface_probe_row(band), reps=probe_reps)
+            pts.append((("surface", b, band), tr, skip))
 
     probe_points = [ProbePoint(label, tr, skip, _PROBE_KEY_BASE + i)
                     for i, (label, tr, skip) in enumerate(pts)]
@@ -323,12 +356,29 @@ def characterize_vendor(modules, vendor: int, *, probe_modules: int = 5,
     row_ones = np.array([bin(r).count("1") for r in rows], dtype=np.float64)
     d = np.stack([np.ones_like(row_ones), row_ones], axis=1)
     rf = fitting.lstsq_fit(d, row_cur)
-    # I(ro) = bg + q(1+s*ro)/tRC  =>  s = c1 / (c0 - bg)
+    # I(ro) = bg + q(1+s*ro)/tRC  =>  s = c1 / (c0 - bg).  Loop background
+    # matches the integrator: bank closed during the ACT slot (tRAS), open
+    # during the PRE slot (tRP) — same weighting as the surface fit below.
     t = dram.TIMING
-    bg_loop = ((i2n_probe + bank_open_delta[0]) * t.tRAS
-               + i2n_probe * t.tRP) / t.tRC
+    bg_loop = (i2n_probe * t.tRAS
+               + (i2n_probe + bank_open_delta[0]) * t.tRP) / t.tRC
     q_actpre = max(float(rf.coef[0]) - bg_loop, 1.0) * t.tRC
     row_ones_slope = float(rf.coef[1]) * t.tRC / q_actpre
+
+    # ---- 3b. surface campaign (Figs 19-22) --------------------------------
+    # Every probe shares one row popcount, so within a bank the ACT part of
+    # the loop current varies ONLY through the structural surface; band 0
+    # is the reference (factor 1.0), exactly as the simulator plants it.
+    # Loop background: the bank is closed during the ACT slot (tRAS) and
+    # open during the PRE slot (tRP) — background follows the state BEFORE
+    # each command, so the open-bank increment weights tRP, not tRAS.
+    surf_cur = np.array(
+        [[cur[("surface", b, band)] for band in range(dram.N_ROW_BANDS)]
+         for b in range(dram.N_BANKS)])
+    bg_bank = (i2n_probe * t.tRAS
+               + (i2n_probe + bank_open_delta) * t.tRP) / t.tRC  # (8,)
+    act_part = np.maximum(surf_cur - bg_bank[:, None], 1e-3)
+    act_surface = np.clip(act_part / act_part[:, :1], 0.2, 5.0)
 
     # ---- 4. refresh & power-down ------------------------------------------
     idd5b = float(np.mean(idd_measured["IDD5B"]))
@@ -336,6 +386,7 @@ def characterize_vendor(modules, vendor: int, *, probe_modules: int = 5,
     i_pd = float(np.mean(idd_measured["IDD2P1"]))
 
     vc = VendorCharacterization(
+        act_surface=act_surface,
         vendor=vendor, idd_measured=idd_measured,
         idd_datasheet=ds_vals[vendor], idd_extrapolation_r2=ds_r2[vendor],
         datadep=datadep, datadep_r2=datadep_r2, ones_sweep=ones_sweep_raw,

@@ -3,8 +3,10 @@ DDR3L SO-DIMMs plus the FPGA/SoftMC + current-probe measurement rig.
 
 Ground truth per module = the shared energy integrator with *true* parameters
 drawn around the paper's published per-vendor values (Table 5, Section 4/6/7),
-perturbed by seeded per-module process variation, plus effects a fitted
-linear model cannot capture exactly:
+perturbed by seeded per-module process variation, carrying the vendor's
+structural per-(bank, row-band) activation surface (:func:`structural_surface`
+— identical across modules of a vendor, which is what distinguishes it from
+process variation), plus effects a fitted linear model cannot capture exactly:
 
 * multiplicative measurement noise per test (the rig averages >=100 samples),
 * a small quadratic term in the ones-dependence (``ones_quad``),
@@ -18,13 +20,14 @@ validate on others).
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import params as P
-from repro.core.dram import CommandTrace
+from repro.core.dram import CommandTrace, N_BANKS, N_ROW_BANDS
 from repro.core.energy_model import (EnergyReport, PowerParams,
                                      trace_energy_vectorized)
 
@@ -39,6 +42,22 @@ def _gen_scale(key: str, year: int) -> float:
     return table[idx]
 
 
+@functools.lru_cache(maxsize=None)
+def structural_surface(vendor: int) -> np.ndarray:
+    """The planted per-(bank, row-band) structural ACT-charge surface of a
+    vendor (paper Section 6 / Figs 19-22): one seed-stable (8, N_ROW_BANDS)
+    multiplicative factor map shared by EVERY module of the vendor — that
+    sharing is what makes it structural rather than process variation.
+    Band 0 (the band every standard loop and probe addresses) is the
+    per-bank reference: exactly 1.0."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([29, vendor]))
+    sig = P.STRUCTURAL_SURFACE_SIGMA[vendor]
+    surf = np.exp(rng.normal(0.0, sig, (N_BANKS, N_ROW_BANDS)))
+    surf /= surf[:, :1]          # band 0 == 1.0 per bank (reference band)
+    return surf
+
+
 def true_vendor_params(vendor: int, year: int = 2015) -> PowerParams:
     """Vendor-mean ground-truth parameters (no process variation)."""
     datadep = jnp.asarray(P.TABLE5[vendor], dtype=jnp.float32)
@@ -50,11 +69,14 @@ def true_vendor_params(vendor: int, year: int = 2015) -> PowerParams:
     i2n = P.MEASURED_IDD["IDD2N"][vendor] * _gen_scale("IDD2N", year)
     delta = np.asarray(P.BANK_OPEN_DELTA[vendor]) * _gen_scale("IDD2N", year)
 
-    # q_actpre from the measured IDD0 anchor: the IDD0 loop is one ACT+PRE
-    # per tRC with one bank open for tRAS and none for tRP.
+    # q_actpre from the measured IDD0 anchor.  Loop background follows the
+    # integrator's semantics (state BEFORE each command): the bank is
+    # closed during the ACT slot (tRAS) and open during the PRE slot
+    # (tRP), so the open-bank increment weights tRP — making the simulated
+    # IDD0 loop land exactly on the anchor.
     idd0 = P.MEASURED_IDD["IDD0"][vendor] * _gen_scale("IDD0", year)
     trc_cyc = float(_T.tRAS + _T.tRP)
-    bg_loop = ((i2n + float(delta[0])) * _T.tRAS + i2n * _T.tRP) / trc_cyc
+    bg_loop = (i2n * _T.tRAS + (i2n + float(delta[0])) * _T.tRP) / trc_cyc
     q_actpre = max((idd0 - bg_loop), 5.0) * trc_cyc
 
     idd5b = P.MEASURED_IDD["IDD5B"][vendor]
@@ -76,6 +98,7 @@ def true_vendor_params(vendor: int, year: int = 2015) -> PowerParams:
         io_write_ma_per_zero=jnp.asarray(P.IO_DRIVER_MA_PER_ZERO_WRITE,
                                          jnp.float32),
         ones_quad=jnp.asarray(P.ONES_QUAD_FRACTION, jnp.float32),
+        act_surface=jnp.asarray(structural_surface(vendor), jnp.float32),
     )
 
 
@@ -98,6 +121,8 @@ def true_module_params(spec: P.ModuleSpec) -> PowerParams:
     io_sig = P.IO_DRIVER_SIGMA
     io_f = float(np.exp(rng.normal(0.0, io_sig)))
     io_f2 = float(np.exp(rng.normal(0.0, io_sig)))
+    # act_surface is deliberately NOT perturbed here: the surface is
+    # structural — bit-identical across every module of the vendor.
     return base._replace(
         datadep=jnp.asarray(dd, jnp.float32),
         i2n=base.i2n * f(1.2),

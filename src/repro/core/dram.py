@@ -24,6 +24,12 @@ LINE_BITS = LINE_BYTES * 8  # 512
 LINE_WORDS = LINE_BYTES // 4  # 16 uint32 words
 ROW_BITS = 15               # 32k rows per bank (2 GB single-rank module)
 COLS_PER_ROW = 128          # 128 cache lines per 8 kB row
+# Structural-variation surface geometry (paper Section 6 / Figs 19-22): rows
+# are grouped into equal contiguous bands for the per-(bank, row-band)
+# energy decomposition; band 0 (rows < 4096) is the reference band every
+# standard loop and probe lives in.
+N_ROW_BANDS = 8
+ROW_BAND_SHIFT = ROW_BITS - 3   # row >> 12 -> band in [0, 8)
 MT_PER_S = 800e6            # transfer rate used for all tests (FPGA limit)
 CLOCK_HZ = MT_PER_S / 2     # 400 MHz DRAM clock
 TCK_NS = 1e9 / CLOCK_HZ     # 2.5 ns
@@ -201,6 +207,11 @@ def line_with_n_ones(n_ones: int, rng: np.random.Generator | None = None) -> np.
         chunk = bits[w * 32:(w + 1) * 32]
         words[w] = np.uint32(sum(int(b) << i for i, b in enumerate(chunk)))
     return words
+
+
+def row_band(row):
+    """Row-band index of a row address (int, numpy, or jax array)."""
+    return row >> ROW_BAND_SHIFT
 
 
 def popcount_u32(x: jax.Array) -> jax.Array:

@@ -38,13 +38,17 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dram
 from repro.core.dram import (ACT, PRE, PREA, RD, WR, REF, PDE, PDX,
                              IL_NONE, IL_COL, IL_BANK, IL_BANKCOL,
-                             LINE_BITS, N_BANKS, TIMING, TCK_NS, VDD,
-                             CommandTrace, line_ones, line_toggles,
-                             popcount_u32)
+                             LINE_BITS, N_BANKS, N_ROW_BANDS, TIMING,
+                             TCK_NS, VDD, CommandTrace, line_ones,
+                             line_toggles, popcount_u32, row_band)
+
+# flattened (bank, row-band) cell count of the structural-variation surface
+N_SURFACE_CELLS = N_BANKS * N_ROW_BANDS
 
 
 class DataOps(NamedTuple):
@@ -88,6 +92,11 @@ class PowerParams(NamedTuple):
     io_read_ma_per_one: jax.Array   # () rig-visible I/O driver current
     io_write_ma_per_zero: jax.Array # ()
     ones_quad: jax.Array          # () unmodeled curvature (sim-only; 0 in fit)
+    # (8, N_ROW_BANDS) structural ACT factor per (bank, row band); band 0
+    # == 1.0.  Defaulted (neutral, np so importing this module never
+    # initializes a jax backend) so parameter sets pickled before the
+    # surface existed keep unpickling.
+    act_surface: jax.Array = np.ones((N_BANKS, N_ROW_BANDS), np.float32)
 
     @property
     def i3n(self):
@@ -97,7 +106,8 @@ class PowerParams(NamedTuple):
 def zeros_like_params() -> PowerParams:
     z = jnp.zeros(())
     return PowerParams(jnp.zeros((4, 2, 3)), z, jnp.zeros(8), jnp.ones(8),
-                       jnp.ones(8), z, z, z, z, z, z, z)
+                       jnp.ones(8), z, z, z, z, z, z, z,
+                       jnp.ones((N_BANKS, N_ROW_BANDS)))
 
 
 class TraceFeatures(NamedTuple):
@@ -296,9 +306,11 @@ def integrate_charges(trace: CommandTrace, feats: TraceFeatures,
     burst = jnp.minimum(dt, float(TIMING.tBURST))
     charge = charge + jnp.where(feats.is_rw, (i_rw - i_bg) * burst, 0.0)
 
-    # ACT (+PRE pair) charge with row-address structural factor
+    # ACT (+PRE pair) charge with the row-address structural factor and the
+    # per-(bank, row-band) structural surface (paper Section 6)
     act_q = pp.q_actpre * (1.0 + pp.row_ones_slope
                            * feats.row_ones.astype(jnp.float32))
+    act_q = act_q * pp.act_surface[trace.bank, row_band(trace.row)]
     charge = charge + jnp.where(trace.cmd == ACT, act_q, 0.0)
 
     # REF charge above background
@@ -321,6 +333,37 @@ def masked_totals(trace: CommandTrace, weight: jax.Array,
     batched evaluation (padding and setup slots carry weight 0)."""
     cycles = jnp.sum(trace.dt * weight.astype(jnp.int32), dtype=jnp.int32)
     return jnp.sum(charges * weight), cycles
+
+
+# ---------------------------------------------------------------------------
+# The structural-variation surface reduction (mode='surface'): the grouped
+# twin of ``masked_totals``.  Every impl shares the same cell bookkeeping —
+# a command belongs to the (bank, row-band) cell of its bank/row address —
+# so the surfaces are parity-held across impls by construction, and summing
+# a surface over its cells recovers the mode='mean' totals exactly.
+# ---------------------------------------------------------------------------
+def surface_cells(trace: CommandTrace) -> jax.Array:
+    """(N,) flattened (bank, row-band) cell index of every command."""
+    return trace.bank * N_ROW_BANDS + row_band(trace.row)
+
+
+def surface_charge(trace: CommandTrace, weight: jax.Array,
+                   charges: jax.Array) -> jax.Array:
+    """Masked per-command charges grouped onto the structural surface ->
+    (8, N_ROW_BANDS) mA*cycles.  A weight-0 (pad/setup) slot contributes
+    exactly zero to its cell."""
+    grouped = jax.ops.segment_sum(charges * weight, surface_cells(trace),
+                                  num_segments=N_SURFACE_CELLS)
+    return grouped.reshape(N_BANKS, N_ROW_BANDS)
+
+
+def surface_cycles(trace: CommandTrace, weight: jax.Array) -> jax.Array:
+    """Masked cycles grouped onto the surface -> (8, N_ROW_BANDS) int32
+    (parameter-independent: shared across every vendor of a dispatch)."""
+    grouped = jax.ops.segment_sum(trace.dt * weight.astype(jnp.int32),
+                                  surface_cells(trace),
+                                  num_segments=N_SURFACE_CELLS)
+    return grouped.reshape(N_BANKS, N_ROW_BANDS).astype(jnp.int32)
 
 
 class EnergyReport(NamedTuple):
@@ -374,7 +417,9 @@ class _ScanState(NamedTuple):
 
 
 @jax.jit
-def trace_energy_scan(trace: CommandTrace, pp: PowerParams) -> EnergyReport:
+def trace_charges_scan(trace: CommandTrace, pp: PowerParams) -> jax.Array:
+    """(N,) per-command charges (mA*cycles) from the sequential oracle —
+    the ``impl='reference'`` source for the surface decomposition."""
     def step(s: _ScanState, x):
         cmd, bank, row, col, data, dt = x
         dtf = dt.astype(jnp.float32)
@@ -401,6 +446,7 @@ def trace_energy_scan(trace: CommandTrace, pp: PowerParams) -> EnergyReport:
 
         row_ones = jnp.sum(popcount_u32(row.astype(jnp.uint32)[None]))
         act_q = pp.q_actpre * (1.0 + pp.row_ones_slope * row_ones)
+        act_q = act_q * pp.act_surface[bank, row_band(row)]
         charge = charge + jnp.where(cmd == ACT, act_q, 0.0)
         charge = charge + jnp.where(cmd == REF, pp.q_ref, 0.0)
 
@@ -431,5 +477,11 @@ def trace_energy_scan(trace: CommandTrace, pp: PowerParams) -> EnergyReport:
         last_col_in_bank=jnp.full(N_BANKS, -1, dtype=jnp.int32),
         charge=jnp.asarray(0.0, dtype=jnp.float32))
     xs = (trace.cmd, trace.bank, trace.row, trace.col, trace.data, trace.dt)
-    final, _ = jax.lax.scan(step, init, xs)
-    return _report(final.charge, trace.total_cycles())
+    _, charges = jax.lax.scan(step, init, xs)
+    return charges
+
+
+@jax.jit
+def trace_energy_scan(trace: CommandTrace, pp: PowerParams) -> EnergyReport:
+    charges = trace_charges_scan(trace, pp)
+    return _report(jnp.sum(charges), trace.total_cycles())

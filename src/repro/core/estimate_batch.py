@@ -19,6 +19,10 @@ here the whole (traces x vendors) energy-report matrix is a single jitted
   variation band -> (lo, mean, hi) report matrices;
 * :func:`batched_distribution_reports` is the paper's no-data-trace mode
   (caller-supplied ones/toggle fractions) over the same batch;
+* :func:`batched_surface_reports` is the structural-variation surface mode
+  (paper Figs 19-22): the same integrator grouped per (bank, row-band)
+  cell -> ``(traces, vendors, banks, row_bands)``-shaped report leaves,
+  the whole fleet in one dispatch;
 * the ``pallas_*`` twins evaluate the identical contracts through the
   fused Pallas kernel family (``impl='pallas'`` in the registry): the
   param-independent feature kernel once per batch, the per-vendor energy
@@ -43,9 +47,11 @@ import jax.numpy as jnp
 
 from repro.core.dram import CommandTrace, batch_traces
 from repro.core.energy_model import (EnergyReport, PowerParams, _report,
+                                     charge_from_features,
                                      distribution_features,
                                      extract_structural_features,
-                                     scale_report)
+                                     finalize_features, scale_report,
+                                     surface_charge, surface_cycles)
 from repro.core.fleet import batched_pair_totals
 
 
@@ -149,6 +155,30 @@ def batched_distribution_reports(trace: CommandTrace, weight: jax.Array,
     return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))
 
 
+@jax.jit
+def batched_surface_reports(trace: CommandTrace, weight: jax.Array,
+                            stacked: PowerParams) -> EnergyReport:
+    """The fleet-wide structural-variation surfaces (``mode='surface'``):
+    every (trace, vendor) pair's per-(bank, row-band) energy decomposition
+    in ONE dispatch — no per-module Python sweeps.  Returns an
+    :class:`EnergyReport` whose every leaf has shape
+    ``(traces, vendors, banks, row_bands)``; summing the cell axes
+    recovers :func:`batched_reports` exactly (same integrator, grouped by
+    the structural cell index instead of totalled)."""
+    def one_trace(tr: CommandTrace, w: jax.Array):
+        sf = extract_structural_features(tr)
+
+        def one_paramset(pp: PowerParams):
+            charges = charge_from_features(tr, finalize_features(sf, pp), pp)
+            return surface_charge(tr, w, charges)          # (8, R)
+
+        charge = jax.vmap(one_paramset)(stacked)           # (V, 8, R)
+        return charge, surface_cycles(tr, w)               # cycles: (8, R)
+
+    charge, cycles = jax.vmap(one_trace)(trace, weight)    # (T,V,8,R), (T,8,R)
+    return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))
+
+
 # ---------------------------------------------------------------------------
 # The fused Pallas dispatches (impl='pallas'): same contracts as the
 # vectorized trio above, evaluated by the batched kernel family in
@@ -189,3 +219,16 @@ def pallas_batched_distribution_reports(trace: CommandTrace,
     charge, cycles = vops.batched_charge_matrix(
         trace, weight, stacked, ones_frac=ones_frac, toggle_frac=toggle_frac)
     return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))
+
+
+def pallas_batched_surface_reports(trace: CommandTrace, weight: jax.Array,
+                                   stacked: PowerParams) -> EnergyReport:
+    """impl='pallas' twin of :func:`batched_surface_reports`: the energy
+    kernel swaps its scalar charge sum for an in-kernel cell reduction over
+    the (bank, row-band) one-hot plane, same (vendors, traces, blocks)
+    grid."""
+    from repro.kernels.vampire_energy import ops as vops
+    charge, cycles = vops.batched_charge_matrix(trace, weight, stacked,
+                                                surface=True)
+    return _report(charge,
+                   jnp.broadcast_to(cycles[:, None], charge.shape))

@@ -107,6 +107,26 @@ def fleet_measure_current_pallas(trace: CommandTrace, weight: jax.Array,
     return (charge / jnp.maximum(cycles.astype(jnp.float32), 1.0)[:, None]).T
 
 
+def fleet_surface_energy(modules, trace: CommandTrace, weight: jax.Array,
+                         impl: str = "vectorized"):
+    """Ground-truth structural-variation surfaces of the WHOLE module
+    fleet in one batched dispatch (paper Figs 19-22 as fleet-wide maps):
+    an :class:`~repro.core.energy_model.EnergyReport` whose leaves are
+    ``(traces, modules, banks, row_bands)``-shaped — the estimation
+    engine's surface dispatch with the stacked per-module *true* params on
+    the vendor axis.  ``impl`` is ``'vectorized'`` or ``'pallas'``."""
+    from repro.core import estimate_batch, model_api
+    impl = model_api.resolve_impl(impl, mode="surface").name
+    if impl == "reference":
+        raise ValueError("impl='reference' for the fleet surface is the "
+                         "per-command oracle; score modules one at a time")
+    stacked = stack_params([m.params for m in modules])
+    dispatch = (estimate_batch.pallas_batched_surface_reports
+                if impl == "pallas"
+                else estimate_batch.batched_surface_reports)
+    return dispatch(trace, weight, stacked)
+
+
 def run_probes(modules, points: Sequence[ProbePoint], *,
                engine: str = "batched", noisy: bool = True,
                batch: ProbeBatch | None = None,

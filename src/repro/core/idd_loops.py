@@ -200,6 +200,14 @@ def row_act_probe(row: int, reps=DEFAULT_REPS):
     return idd0(reps=reps, row=row), 0
 
 
+def surface_act_probe(bank: int, row: int, reps=DEFAULT_REPS):
+    """ACT/PRE loop on one (bank, row) — the structural-variation surface
+    campaign's probe (Section 6 / Figs 19-22): the caller picks rows of
+    equal address popcount across row bands, so cell-to-cell current
+    differences isolate the per-(bank, row-band) surface factor."""
+    return idd0(reps=reps, bank=bank, row=row), 0
+
+
 def column_read_probe(col: int, reps=DEFAULT_REPS) -> CommandTrace:
     d = line_from_byte(0x00)
     setup = make_trace([ACT], [0], [0], [col], np.stack([_Z]), [_T.tRCD])

@@ -15,6 +15,10 @@ entry point:
   ``(lo, mean, hi)`` triple of such reports;
 * ``mode='distribution'`` is the paper's no-data-trace mode and takes
   ``ones_frac``/``toggle_frac`` (scalar or per trace);
+* ``mode='surface'`` is the structural-variation decomposition (paper
+  Section 6 / Figs 19-22): leaves are ``(traces, vendors, banks,
+  row_bands)``-shaped, each command's charge grouped onto its
+  (bank, row-band) cell; summing over the cell axes recovers ``'mean'``;
 * ``impl`` picks HOW the matrix is evaluated, through the impl registry
   (:func:`register_impl` / :func:`resolve_impl`): ``'vectorized'`` (the
   jnp/XLA batched engine), ``'pallas'`` (the fused Pallas kernel family —
@@ -55,7 +59,7 @@ import numpy as np
 SCHEMA_VERSION = 2
 MANIFEST_KEY = "__manifest__"
 
-EstimateMode = Literal["mean", "range", "distribution"]
+EstimateMode = Literal["mean", "range", "distribution", "surface"]
 
 
 # ---------------------------------------------------------------------------
@@ -133,7 +137,7 @@ class EstimateImpl:
     """One way of evaluating the (traces, vendors) report matrix."""
     name: str
     description: str
-    modes: tuple[str, ...] = ("mean", "range", "distribution")
+    modes: tuple[str, ...] = ("mean", "range", "distribution", "surface")
     aliases: tuple[str, ...] = ()
 
 
@@ -179,6 +183,19 @@ def impl_execution_mode(name: str) -> str:
     return "interpret" if interpret_default() else "compiled"
 
 
+def require_impl_path(kind: str, impl: str,
+                      supported: tuple[str, ...]) -> None:
+    """Loud guard at the tail of an estimator's name-keyed dispatch: the
+    registry stores no evaluation callable, so an impl that is registered
+    but that this estimator has no branch for must error, never silently
+    fall through to another path."""
+    if impl not in supported:
+        raise ValueError(
+            f"estimator kind {kind!r} has no evaluation path for impl "
+            f"{impl!r} (it implements {list(supported)}); registering an "
+            f"impl does not give existing estimators a dispatch for it")
+
+
 VECTORIZED_IMPL = register_impl(EstimateImpl(
     "vectorized",
     "fused-elementwise jnp over the (traces, vendors) grid, one jitted "
@@ -198,7 +215,7 @@ def validate_estimate_args(mode: str, ones_frac, toggle_frac) -> None:
     """The one argument contract every estimator's ``estimate`` enforces
     (shared so the implementations cannot drift): fractions are required
     with ``mode='distribution'`` and rejected with any other mode."""
-    if mode not in ("mean", "range", "distribution"):
+    if mode not in ("mean", "range", "distribution", "surface"):
         raise ValueError(f"unknown mode {mode!r}")
     if mode == "distribution":
         if ones_frac is None or toggle_frac is None:
@@ -353,8 +370,19 @@ def load_estimator(path: str):
 # ---- VAMPIRE payload ------------------------------------------------------
 _FITTED_FIELDS = ("datadep", "datadep_r2", "i2n", "bank_open_delta",
                   "bank_read_factor", "bank_write_factor", "q_actpre",
-                  "row_ones_slope", "q_ref", "i_pd")
+                  "row_ones_slope", "q_ref", "i_pd", "act_surface")
 _SWEEP_FIELDS = ("ones", "toggles", "current", "corrected")
+
+
+def _vendor_field(vc, field: str):
+    """One fitted quantity of a vendor record.  ``act_surface`` may be
+    absent on records unpickled from pre-surface blobs — serialize the
+    documented neutral (all-ones) surface for those."""
+    value = getattr(vc, field, None)
+    if value is None and field == "act_surface":
+        from repro.core.dram import N_BANKS, N_ROW_BANDS
+        return np.ones((N_BANKS, N_ROW_BANDS))
+    return value
 
 
 def _vampire_payload(model) -> tuple[dict, dict]:
@@ -365,7 +393,7 @@ def _vampire_payload(model) -> tuple[dict, dict]:
     }
     for field in _FITTED_FIELDS:
         arrays[field] = np.stack(
-            [np.asarray(getattr(model.by_vendor[v], field), np.float64)
+            [np.asarray(_vendor_field(model.by_vendor[v], field), np.float64)
              for v in vs])
     idd_keys = sorted(model.by_vendor[vs[0]].idd_datasheet)
     arrays["idd_datasheet"] = np.asarray(
@@ -401,10 +429,14 @@ def _rebuild_vendor(vendor: int, fitted: dict, *, idd_measured=None,
                     row_sweep=None):
     """Reconstruct one fitted ``VendorCharacterization`` from plain values
     (the single shared reconstruction used by both the v2 and the legacy
-    v1 loaders; raw campaign records are optional)."""
+    v1 loaders; raw campaign records are optional).  ``act_surface`` is
+    optional in ``fitted`` — blobs written before the structural-variation
+    surface existed load with the neutral all-ones surface."""
     from repro.core import characterize
+    surface = fitted.get("act_surface")
     vc = characterize.VendorCharacterization(
         vendor=vendor,
+        act_surface=(np.asarray(surface) if surface is not None else None),
         idd_measured=idd_measured or {},
         idd_datasheet=dict(fitted["idd_datasheet"]),
         idd_extrapolation_r2=idd_r2 or {},
@@ -449,7 +481,7 @@ def _vampire_from_payload(npz, manifest):
             if raw_row:
                 raw_row["r2"] = manifest.get("row_r2", {}).get(str(v), 0.0)
         fitted = {field: npz[field][i] for field in _FITTED_FIELDS
-                  if field != "datadep_r2"}
+                  if field != "datadep_r2" and field in npz.files}
         fitted["idd_datasheet"] = {k: float(npz["idd_datasheet"][i, j])
                                    for j, k in enumerate(idd_keys)}
         by_vendor[v] = _rebuild_vendor(

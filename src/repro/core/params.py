@@ -149,6 +149,17 @@ BANK_WRITE_FACTORS = np.ones((3, 8), dtype=np.float64)  # Fig 21: no variation
 # address. Fractional increase at 15 ones: A ~12%, B 14.6%, C ~3%.
 ROW_ONES_SLOPE = np.array([0.12, 0.146, 0.03]) / 15.0  # per address-one
 
+# Section 6 / Figs 19-22: structural variation SURFACE — the same banks and
+# row regions across modules of one model consistently draw more activation
+# charge than others. Modeled as a per-vendor multiplicative factor on the
+# ACT(+PRE) charge per (bank, row band), sampled seed-stably per VENDOR
+# (structural: identical for every module of a model, unlike the per-module
+# process sigmas above) and normalized so band 0 — where every JEDEC loop
+# and characterization probe lives — is exactly 1.0 per bank. Vendors A/B
+# show mild surfaces; Vendor C's is strongly uneven, matching its outsized
+# bank-to-bank structural variation in the paper.
+STRUCTURAL_SURFACE_SIGMA = (0.03, 0.04, 0.10)
+
 # ---------------------------------------------------------------------------
 # Section 7: generational trends (Vendor C parts from 2011/2012 vs 2015).
 # Datasheet IDDs promise large savings; measured savings are much smaller.

@@ -20,7 +20,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import device_sim, estimate_batch, idd_loops
+from repro.core import device_sim, dram, estimate_batch, idd_loops
 from repro.core import fleet as fleet_lib
 from repro.core.baselines_power import DRAMPowerModel, MicronModel
 from repro.core.model_api import Estimator
@@ -52,6 +52,60 @@ class ValidationResult:
                 f"{per_v.get(2, float('nan')):7.1f}% "
                 f"{self.mape_mean[m]:6.1f}%")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Structural-variation surfaces (paper Section 6, Figs 19-22 as fleet maps)
+# ---------------------------------------------------------------------------
+def surface_sweep_trace(reps: int = 4):
+    """A workload touching every (bank, row-band) structural cell — one
+    ACT/RD/PRE visit per cell at the surface campaign's constant-popcount
+    probe rows — so a ``mode='surface'`` report over it populates the whole
+    Fig 19-22 heatmap."""
+    from repro.core.characterize import surface_probe_row
+    from repro.core.dram import ACT, PRE, RD, TIMING, line_from_byte
+    cmds, banks, rows, cols, datas, dts = [], [], [], [], [], []
+    d = line_from_byte(0xAA)
+    z = np.zeros(dram.LINE_WORDS, dtype=np.uint32)
+    for b in range(dram.N_BANKS):
+        for band in range(dram.N_ROW_BANDS):
+            r = surface_probe_row(band)
+            cmds += [ACT, RD, PRE]
+            banks += [b] * 3
+            rows += [r] * 3
+            cols += [0] * 3
+            datas += [z, d, z]
+            dts += [TIMING.tRCD, TIMING.tRAS - TIMING.tRCD, TIMING.tRP]
+    tr = dram.make_trace(cmds, banks, rows, cols, np.stack(datas), dts)
+    return dram.tile_trace(tr, reps)
+
+
+def structural_surface_maps(model: Estimator, traces=None, vendors=None,
+                            impl: str = "vectorized") -> np.ndarray:
+    """Fleet-wide Fig 19-22 heatmaps from the ``mode='surface'`` output:
+    per-vendor (banks, row_bands) energy shares, normalized so each
+    vendor's surface sums to 1.  ``traces`` defaults to
+    :func:`surface_sweep_trace`; any estimator kind works — the baselines
+    render structurally flat maps, which is the paper's contrast."""
+    if traces is None:
+        traces = [surface_sweep_trace()]
+    rep = model.estimate(traces, vendors, mode="surface", impl=impl)
+    energy = np.asarray(rep.energy_pj, np.float64).sum(axis=0)  # (V, 8, R)
+    return energy / energy.sum(axis=(1, 2), keepdims=True)
+
+
+def render_surface_heatmap(surface: np.ndarray, title: str = "") -> str:
+    """ASCII rendering of one (banks, row_bands) surface, normalized to
+    its own mean (1.00 == structurally flat cell)."""
+    surface = np.asarray(surface, np.float64)
+    rel = surface / surface.mean()
+    lines = [title] if title else []
+    lines.append("bank\\band " + " ".join(f"{b:>5d}"
+                                          for b in range(surface.shape[1])))
+    for b in range(surface.shape[0]):
+        lines.append(f"  bank {b}  " + " ".join(f"{v:5.2f}"
+                                                for v in rel[b]))
+    return "\n".join(lines)
 
 
 def select_validation_modules(fleet_modules=None, seed: int = 42):

@@ -18,6 +18,11 @@ Public API (the unified estimator protocol, ``repro.core.model_api``)
     * ``mode='distribution'``  the paper's no-data-trace mode: the caller
       supplies ``ones_frac``/``toggle_frac`` (scalar or per trace) instead
       of actual 64-byte values.
+    * ``mode='surface'``       the structural-variation decomposition
+      (paper Section 6 / Figs 19-22): report leaves are ``(traces,
+      vendors, banks, row_bands)``-shaped, each command's charge grouped
+      onto its (bank, row-band) cell; summing the cell axes recovers
+      ``mode='mean'`` exactly.
     * ``impl`` resolves through the registry (``model_api.resolve_impl``):
       ``'vectorized'`` is the jnp/XLA batched engine, ``'pallas'`` the
       fused (traces x vendors) Pallas kernel family (compiled on TPU,
@@ -61,7 +66,8 @@ from repro.core.energy_model import (EnergyReport, PowerParams, _report,
                                      distribution_features,
                                      extract_structural_features,
                                      finalize_features, scale_report,
-                                     trace_energy_scan)
+                                     surface_charge, surface_cycles,
+                                     trace_charges_scan, trace_energy_scan)
 from repro.core.fleet import stack_params
 
 
@@ -204,9 +210,20 @@ class Vampire(model_api.StackedEstimatorMixin):
         from repro.core import estimate_batch
         model_api.validate_estimate_args(mode, ones_frac, toggle_frac)
         impl = model_api.resolve_impl(impl, mode=mode).name
+        model_api.require_impl_path(self.kind, impl,
+                                    ("vectorized", "pallas", "reference"))
         _, idx = model_api.resolve_vendor_indices(self.vendors, vendors)
         stacked, band = self._stacked_for(idx)
         tb = self._batch_cache.get(traces)
+
+        if mode == "surface":
+            if impl == "vectorized":
+                return estimate_batch.batched_surface_reports(
+                    tb.trace, tb.weight, stacked)
+            if impl == "pallas":
+                return estimate_batch.pallas_batched_surface_reports(
+                    tb.trace, tb.weight, stacked)
+            return self._reference_surface(traces, tb, stacked)
 
         if mode == "distribution":
             if impl == "vectorized":
@@ -266,6 +283,25 @@ class Vampire(model_api.StackedEstimatorMixin):
         else:
             per_trace = [jax.vmap(lambda pp, tr=tr: trace_energy_scan(tr, pp)
                                   )(stacked) for tr in originals]
+        return jax.tree_util.tree_map(lambda *rows: jnp.stack(rows),
+                                      *per_trace)
+
+    def _reference_surface(self, traces, tb, stacked: PowerParams
+                           ) -> EnergyReport:
+        """``impl='reference'`` for ``mode='surface'``: the per-command
+        lax.scan oracle's charge stream, grouped onto the (bank, row-band)
+        cells one (trace, vendor) pair at a time."""
+        from repro.core.estimate_batch import original_traces
+        originals = original_traces(traces, tb)
+
+        def one_pair(tr, pp):
+            charges = trace_charges_scan(tr, pp)
+            w = jnp.ones_like(charges)
+            return _report(surface_charge(tr, w, charges),
+                           surface_cycles(tr, w))
+
+        per_trace = [jax.vmap(lambda pp, tr=tr: one_pair(tr, pp))(stacked)
+                     for tr in originals]
         return jax.tree_util.tree_map(lambda *rows: jnp.stack(rows),
                                       *per_trace)
 

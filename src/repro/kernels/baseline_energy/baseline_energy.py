@@ -20,6 +20,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.baselines_power import act_pair_charge
 from repro.core.dram import TIMING
+from repro.core.energy_model import N_SURFACE_CELLS
 from repro.kernels.common import cdiv, interpret_default, pad_to
 
 BLOCK_N = 512
@@ -29,49 +30,68 @@ _T = TIMING
 PLANES = ("dt", "is_rd", "is_wr", "is_act", "is_ref", "open_banks", "pd", "w")
 
 
+def _masked_charge(kind: str, dt, is_rd, is_wr, is_act, is_ref, open_banks,
+                   pd, w, any_act, idd):
+    """The fused per-command baseline charge body shared by the scalar-sum
+    and the surface-cell kernels.  Returns the masked (B,) charge vector
+    in mA*cycles."""
+    idd0, idd2n, idd2p1, idd3n = idd[0], idd[1], idd[2], idd[3]
+    idd4r, idd4w, idd5b = idd[4], idd[5], idd[6]
+
+    burst = jnp.minimum(dt, float(_T.tBURST))
+    q_act = act_pair_charge(idd0, idd2n, idd3n)
+    if kind == "micron":
+        # worst-case background, spec-rate ACT/PRE, RD/WR stacked on top
+        i_bg = jnp.where(pd > 0, idd2p1, idd3n)
+        charge = i_bg * dt
+        charge = charge + (1.0 - pd) * any_act * q_act * dt / _T.tRC
+        charge = charge + is_rd * idd4r * burst + is_wr * idd4w * burst
+    else:                             # drampower: actual timing
+        i_bg = jnp.where(
+            pd > 0, idd2p1, idd2n + (idd3n - idd2n) * open_banks / 8.0)
+        charge = i_bg * dt
+        charge = charge + is_act * q_act
+        charge = charge + is_rd * (idd4r - i_bg) * burst
+        charge = charge + is_wr * (idd4w - i_bg) * burst
+    charge = charge + is_ref * (idd5b - idd2n) * _T.tRFC
+    return charge * w
+
+
 def _make_kernel(kind: str):
     def kernel(dt_ref, isrd_ref, iswr_ref, isact_ref, isref_ref, open_ref,
                pd_ref, w_ref, anyact_ref, idd_ref, o_ref):
-        dt = dt_ref[0]                    # (B,) f32
-        is_rd, is_wr = isrd_ref[0], iswr_ref[0]
-        is_act, is_ref = isact_ref[0], isref_ref[0]
-        open_banks = open_ref[0]          # (B,) f32 count in [0, 8]
-        pd = pd_ref[0]                    # (B,) f32
-        w = w_ref[0]
-        any_act = anyact_ref[0]           # () f32: trace contains an ACT
-        idd = idd_ref[0]                  # (K,) datasheet row
-        idd0, idd2n, idd2p1, idd3n = idd[0], idd[1], idd[2], idd[3]
-        idd4r, idd4w, idd5b = idd[4], idd[5], idd[6]
+        cw = _masked_charge(kind, dt_ref[0], isrd_ref[0], iswr_ref[0],
+                            isact_ref[0], isref_ref[0], open_ref[0],
+                            pd_ref[0], w_ref[0], anyact_ref[0], idd_ref[0])
+        o_ref[0, 0, 0] = jnp.sum(cw)
+    return kernel
 
-        burst = jnp.minimum(dt, float(_T.tBURST))
-        q_act = act_pair_charge(idd0, idd2n, idd3n)
-        if kind == "micron":
-            # worst-case background, spec-rate ACT/PRE, RD/WR stacked on top
-            i_bg = jnp.where(pd > 0, idd2p1, idd3n)
-            charge = i_bg * dt
-            charge = charge + (1.0 - pd) * any_act * q_act * dt / _T.tRC
-            charge = charge + is_rd * idd4r * burst + is_wr * idd4w * burst
-        else:                             # drampower: actual timing
-            i_bg = jnp.where(
-                pd > 0, idd2p1, idd2n + (idd3n - idd2n) * open_banks / 8.0)
-            charge = i_bg * dt
-            charge = charge + is_act * q_act
-            charge = charge + is_rd * (idd4r - i_bg) * burst
-            charge = charge + is_wr * (idd4w - i_bg) * burst
-        charge = charge + is_ref * (idd5b - idd2n) * _T.tRFC
-        o_ref[0, 0, 0] = jnp.sum(charge * w)
+
+def _make_surface_kernel(kind: str):
+    def kernel(dt_ref, isrd_ref, iswr_ref, isact_ref, isref_ref, open_ref,
+               pd_ref, w_ref, cell_ref, anyact_ref, idd_ref, o_ref):
+        cw = _masked_charge(kind, dt_ref[0], isrd_ref[0], iswr_ref[0],
+                            isact_ref[0], isref_ref[0], open_ref[0],
+                            pd_ref[0], w_ref[0], anyact_ref[0], idd_ref[0])
+        # (bank, row-band) cell reduction over the one-hot cell plane
+        o_ref[0, 0, 0, :] = jnp.sum(cell_ref[0] * cw[None, :], axis=1)
     return kernel
 
 
 _KERNELS = {kind: _make_kernel(kind) for kind in ("micron", "drampower")}
+_SURFACE_KERNELS = {kind: _make_surface_kernel(kind)
+                    for kind in ("micron", "drampower")}
 
 
 def baseline_energy_pallas(kind: str, planes: dict, any_act, table,
                            block_n: int = BLOCK_N,
-                           interpret: bool | None = None) -> jax.Array:
+                           interpret: bool | None = None,
+                           cell_t=None) -> jax.Array:
     """(T, V) masked charge matrix of one baseline physics.  ``planes``
     maps :data:`PLANES` to (T, N) f32 arrays; ``any_act`` is (T,) f32;
-    ``table`` is the stacked (V, K) datasheet matrix."""
+    ``table`` is the stacked (V, K) datasheet matrix.  Passing ``cell_t``
+    (the (T, CELLS, N) one-hot structural cell plane) switches to the
+    surface kernel and returns the (T, V, CELLS) charge decomposition."""
     if interpret is None:
         interpret = interpret_default()
     padded = {}
@@ -84,16 +104,32 @@ def baseline_energy_pallas(kind: str, planes: dict, any_act, table,
     grid = (n_vendors, n_traces, grid_n)
 
     spec_2d = pl.BlockSpec((1, block_n), lambda v, t, i: (t, i))
+    tail_specs = [pl.BlockSpec((1,), lambda v, t, i: (t,)),
+                  pl.BlockSpec((1, n_keys), lambda v, t, i: (v, 0))]
+    args = [padded[n] for n in PLANES]
+    if cell_t is None:
+        kernel, cell_specs = _KERNELS[kind], []
+        out_spec = pl.BlockSpec((1, 1, 1), lambda v, t, i: (v, t, i))
+        out_shape = jax.ShapeDtypeStruct((n_vendors, n_traces, grid_n),
+                                         jnp.float32)
+    else:
+        kernel = _SURFACE_KERNELS[kind]
+        padded_cell, _ = pad_to(cell_t.astype(jnp.float32), block_n, axis=2)
+        args.append(padded_cell)
+        cell_specs = [pl.BlockSpec((1, N_SURFACE_CELLS, block_n),
+                                   lambda v, t, i: (t, 0, i))]
+        out_spec = pl.BlockSpec((1, 1, 1, N_SURFACE_CELLS),
+                                lambda v, t, i: (v, t, i, 0))
+        out_shape = jax.ShapeDtypeStruct(
+            (n_vendors, n_traces, grid_n, N_SURFACE_CELLS), jnp.float32)
     partial = pl.pallas_call(
-        _KERNELS[kind],
+        kernel,
         grid=grid,
-        in_specs=[spec_2d] * len(PLANES) + [
-            pl.BlockSpec((1,), lambda v, t, i: (t,)),
-            pl.BlockSpec((1, n_keys), lambda v, t, i: (v, 0))],
-        out_specs=pl.BlockSpec((1, 1, 1), lambda v, t, i: (v, t, i)),
-        out_shape=jax.ShapeDtypeStruct((n_vendors, n_traces, grid_n),
-                                       jnp.float32),
+        in_specs=[spec_2d] * len(PLANES) + cell_specs + tail_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
         interpret=interpret,
-    )(*[padded[n] for n in PLANES], any_act.astype(jnp.float32),
-      table.astype(jnp.float32))
-    return jnp.sum(partial, axis=2).T        # (T, V)
+    )(*args, any_act.astype(jnp.float32), table.astype(jnp.float32))
+    if cell_t is None:
+        return jnp.sum(partial, axis=2).T                # (T, V)
+    return jnp.sum(partial, axis=2).transpose(1, 0, 2)   # (T, V, CELLS)

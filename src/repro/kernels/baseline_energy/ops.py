@@ -8,17 +8,20 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.dram import ACT, RD, REF, WR, CommandTrace
-from repro.core.energy_model import structural_state
+from repro.core.dram import ACT, N_BANKS, N_ROW_BANDS, RD, REF, WR, \
+    CommandTrace
+from repro.core.energy_model import (N_SURFACE_CELLS, structural_state,
+                                     surface_cells, surface_cycles)
 from repro.kernels.baseline_energy.baseline_energy import (
     BLOCK_N, baseline_energy_pallas)
 from repro.kernels.common import interpret_default
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("kind", "block_n", "interpret"))
+                   static_argnames=("kind", "surface", "block_n",
+                                    "interpret"))
 def _charge_matrix(trace: CommandTrace, weight, table, kind: str,
-                   block_n: int, interpret: bool):
+                   surface: bool, block_n: int, interpret: bool):
     st = jax.vmap(structural_state)(trace)
     planes = {
         "dt": trace.dt.astype(jnp.float32),
@@ -31,6 +34,16 @@ def _charge_matrix(trace: CommandTrace, weight, table, kind: str,
         "w": weight.astype(jnp.float32),
     }
     any_act = jnp.any(trace.cmd == ACT, axis=1).astype(jnp.float32)
+    if surface:
+        t = trace.cmd.shape[0]
+        cells = jax.vmap(surface_cells)(trace)                   # (T, N)
+        cell_t = jax.nn.one_hot(cells, N_SURFACE_CELLS,
+                                dtype=jnp.float32).transpose(0, 2, 1)
+        charge = baseline_energy_pallas(kind, planes, any_act, table,
+                                        block_n=block_n,
+                                        interpret=interpret, cell_t=cell_t)
+        return (charge.reshape(t, -1, N_BANKS, N_ROW_BANDS),
+                jax.vmap(surface_cycles)(trace, weight))
     charge = baseline_energy_pallas(kind, planes, any_act, table,
                                     block_n=block_n, interpret=interpret)
     cycles = jnp.sum(trace.dt * weight.astype(jnp.int32), axis=1,
@@ -39,10 +52,13 @@ def _charge_matrix(trace: CommandTrace, weight, table, kind: str,
 
 
 def baseline_charge_matrix(trace: CommandTrace, weight, table, kind: str, *,
-                           block_n: int = BLOCK_N,
+                           surface: bool = False, block_n: int = BLOCK_N,
                            interpret: bool | None = None):
     """Masked charge of every (trace, vendor) pair for one baseline kind
-    -> ``((T, V) charge in mA*cycles, (T,) masked cycles)``."""
+    -> ``((T, V) charge in mA*cycles, (T,) masked cycles)``, or with
+    ``surface=True`` the per-(bank, row-band) structural decomposition
+    ``((T, V, 8, N_ROW_BANDS) charge, (T, 8, N_ROW_BANDS) cycles)``."""
     if interpret is None:
         interpret = interpret_default()
-    return _charge_matrix(trace, weight, table, kind, block_n, interpret)
+    return _charge_matrix(trace, weight, table, kind, surface, block_n,
+                          interpret)

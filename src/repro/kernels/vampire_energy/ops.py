@@ -11,7 +11,9 @@ per-vendor fused energy kernel over the (vendors, traces, blocks) grid.
 ``mode='distribution'`` support: passing ``ones_frac``/``toggle_frac``
 skips the feature kernel and substitutes the expected per-command data
 features (first-access toggles stay 0, matching
-``energy_model.distribution_features``).
+``energy_model.distribution_features``).  ``surface=True`` swaps the
+scalar-sum energy kernel for the cell-reducing surface kernel
+(``mode='surface'``: per-(bank, row-band) charge decomposition).
 
 The old single-(trace, paramset) entry point ``trace_energy_kernel`` is a
 shim onto the batched kernels (a (1, 1) grid)."""
@@ -22,18 +24,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.dram import ACT, LINE_BITS, N_BANKS, REF, CommandTrace
-from repro.core.energy_model import (EnergyReport, PowerParams, _report,
-                                     structural_state)
+from repro.core.dram import (ACT, LINE_BITS, N_BANKS, N_ROW_BANDS, REF,
+                             CommandTrace)
+from repro.core.energy_model import (EnergyReport, N_SURFACE_CELLS,
+                                     PowerParams, _report, structural_state,
+                                     surface_cells, surface_cycles)
 from repro.kernels.common import interpret_default
 from repro.kernels.vampire_energy.vampire_energy import (
     BLOCK_N, batched_energy_pallas, batched_features_pallas,
     pack_param_blocks)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("surface", "block_n", "interpret"))
 def _charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
-                   ones_frac, toggle_frac, block_n: int, interpret: bool):
+                   ones_frac, toggle_frac, surface: bool, block_n: int,
+                   interpret: bool):
     st = jax.vmap(structural_state)(trace)
     t, n = trace.cmd.shape
     if ones_frac is None:
@@ -52,6 +58,11 @@ def _charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
         togg = jnp.where(st.is_rw & st.has_prev, tf[:, None] * LINE_BITS, 0.0)
 
     bank_oh = jax.nn.one_hot(trace.bank, N_BANKS, dtype=jnp.float32)
+    # the per-command structural ACT factor of every vendor: the (bank,
+    # row-band) gather happens HERE (vectorized jnp bookkeeping), so the
+    # kernel sees a plain (V, T, N) multiply plane
+    cells = jax.vmap(surface_cells)(trace)                       # (T, N)
+    surf = stacked.act_surface.reshape(-1, N_SURFACE_CELLS)[:, cells]
     feats = {
         "ones": ones, "togg": togg,
         "op": st.op, "mode": st.il_mode,
@@ -62,10 +73,19 @@ def _charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
         "pd": st.powered_down.astype(jnp.float32),
         "row_ones": st.row_ones.astype(jnp.float32),
         "w": weight.astype(jnp.float32),
+        "surf": surf.astype(jnp.float32),                        # (V, T, N)
         "bank_t": bank_oh.transpose(0, 2, 1),                    # (T, 8, N)
         "open_t": st.open_before.astype(jnp.float32).transpose(0, 2, 1),
     }
     coeffs, scal, bvec = pack_param_blocks(stacked)
+    if surface:
+        cell_t = jax.nn.one_hot(cells, N_SURFACE_CELLS,
+                                dtype=jnp.float32).transpose(0, 2, 1)
+        charge = batched_energy_pallas(feats, coeffs, scal, bvec,
+                                       block_n=block_n, interpret=interpret,
+                                       cell_t=cell_t)   # (T, V, CELLS)
+        return (charge.reshape(t, -1, N_BANKS, N_ROW_BANDS),
+                jax.vmap(surface_cycles)(trace, weight))
     charge = batched_energy_pallas(feats, coeffs, scal, bvec,
                                    block_n=block_n, interpret=interpret)
     cycles = jnp.sum(trace.dt * weight.astype(jnp.int32), axis=1,
@@ -75,10 +95,12 @@ def _charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
 
 def batched_charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
                           *, ones_frac=None, toggle_frac=None,
-                          block_n: int = BLOCK_N,
+                          surface: bool = False, block_n: int = BLOCK_N,
                           interpret: bool | None = None):
     """Masked charge of every (trace, paramset) pair through the fused
-    kernels -> ``((T, V) charge in mA*cycles, (T,) masked cycles)``.
+    kernels -> ``((T, V) charge in mA*cycles, (T,) masked cycles)``, or
+    with ``surface=True`` the structural decomposition
+    ``((T, V, 8, N_ROW_BANDS) charge, (T, 8, N_ROW_BANDS) cycles)``.
 
     ``trace``/``weight`` are a padded TraceBatch's (T, N) fields;
     ``stacked`` carries a leading paramset axis.  ``interpret`` resolves
@@ -87,7 +109,7 @@ def batched_charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
     if interpret is None:
         interpret = interpret_default()
     return _charge_matrix(trace, weight, stacked, ones_frac, toggle_frac,
-                          block_n, interpret)
+                          surface, block_n, interpret)
 
 
 def trace_energy_kernel(trace: CommandTrace, pp: PowerParams) -> EnergyReport:

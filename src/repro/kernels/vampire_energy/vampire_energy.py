@@ -18,10 +18,20 @@ does:
    bank factor and open-bank background (8-wide masked reductions over
    transposed (8, N) layouts, keeping the command axis on the VREG lanes),
    the I/O-driver term, the bank-state background integrator with burst
-   crediting, ACT/REF charges, the optional ``ones_quad`` curvature (so
-   the *true* simulator params ride the same kernel during
+   crediting, ACT/REF charges with the per-(bank, row-band) structural
+   surface factor (gathered into a per-command plane by the assembler — a
+   VMEM multiply here, not a kernel gather), the optional ``ones_quad``
+   curvature (so the *true* simulator params ride the same kernel during
    characterization), and the pad-row weight mask — one partial charge sum
    per grid cell, reduced to the (traces, vendors) matrix outside.
+
+   Passing ``cell_t`` (the one-hot structural cell plane) switches the
+   same launch to the ``mode='surface'`` kernel variant: the identical
+   fused charge body, but instead of one scalar sum per grid cell it
+   reduces against the (surface-cells, N) plane (the same
+   transposed-layout trick as the bank reductions, 64 lanes wide) and
+   writes one partial charge row per structural cell -> the
+   (traces, vendors, banks, row_bands) surface.
 
 The index bookkeeping that decides bank state / interleave mode / previous
 line (``energy_model.structural_state``) stays in vectorized jnp: it is
@@ -34,6 +44,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.dram import TIMING
+from repro.core.energy_model import N_SURFACE_CELLS
 from repro.kernels.common import cdiv, interpret_default, pad_to
 from repro.kernels.popcount.popcount import _popcount_u32
 
@@ -106,27 +117,13 @@ FEATURE_PLANES = ("ones", "togg", "op", "mode", "dt", "is_rw", "is_act",
                   "is_ref", "pd", "row_ones", "w")
 
 
-def _energy_kernel(ones_ref, togg_ref, op_ref, mode_ref, dt_ref, isrw_ref,
-                   isact_ref, isref_ref, pd_ref, rowones_ref, w_ref,
-                   bank_t_ref, open_t_ref, coeff_ref, scal_ref, bvec_ref,
-                   o_ref):
-    ones = ones_ref[0]                # (B,) f32
-    togg = togg_ref[0]
-    op = op_ref[0]                    # (B,) int32: 0 read / 1 write
-    mode = mode_ref[0]                # (B,) int32 in [0,4)
-    dt = dt_ref[0]                    # (B,) f32 cycles owned by the command
-    is_rw = isrw_ref[0]               # (B,) f32 command-class flags
-    is_act = isact_ref[0]
-    is_ref = isref_ref[0]
-    pd = pd_ref[0]                    # (B,) f32 powered-down before command
-    row_ones = rowones_ref[0]         # (B,) f32
-    w = w_ref[0]                      # (B,) f32 validity mask (0 on pads)
-    bank_t = bank_t_ref[0]            # (8, B) f32 one-hot target bank
-    open_t = open_t_ref[0]            # (8, B) f32 banks open before command
-    coeffs = coeff_ref[0]             # (4, 2, 3) Table-5 params, this vendor
-    scal = scal_ref[0]                # (8,) packed scalars (_SCAL_FIELDS)
-    bvec = bvec_ref[0]                # (3, 8) bank vectors
-
+def _masked_charge(ones, togg, op, mode, dt, is_rw, is_act, is_ref, pd,
+                   row_ones, w, surf, bank_t, open_t, coeffs, scal, bvec):
+    """The fused per-command charge body shared by the scalar-sum and the
+    surface-cell kernels.  All per-command args are (B,) f32 except
+    ``bank_t``/``open_t`` (8, B); ``surf`` is this vendor's per-command
+    structural ACT factor (gathered by the assembler).  Returns the masked
+    (B,) charge vector in mA*cycles."""
     i2n, q_actpre, slope, q_ref_chg = scal[0], scal[1], scal[2], scal[3]
     i_pd, io_r, io_w, ones_quad = scal[4], scal[5], scal[6], scal[7]
 
@@ -152,25 +149,57 @@ def _energy_kernel(ones_ref, togg_ref, op_ref, mode_ref, dt_ref, isrw_ref,
     burst = jnp.minimum(dt, _T_BURST)
     charge = i_bg * dt
     charge = charge + is_rw * (i_rw - i_bg) * burst
-    charge = charge + is_act * q_actpre * (1.0 + slope * row_ones)
+    charge = charge + is_act * q_actpre * (1.0 + slope * row_ones) * surf
     charge = charge + is_ref * q_ref_chg
-    o_ref[0, 0, 0] = jnp.sum(charge * w)
+    return charge * w
+
+
+def _energy_kernel(ones_ref, togg_ref, op_ref, mode_ref, dt_ref, isrw_ref,
+                   isact_ref, isref_ref, pd_ref, rowones_ref, w_ref,
+                   surf_ref, bank_t_ref, open_t_ref, coeff_ref, scal_ref,
+                   bvec_ref, o_ref):
+    cw = _masked_charge(
+        ones_ref[0], togg_ref[0], op_ref[0], mode_ref[0], dt_ref[0],
+        isrw_ref[0], isact_ref[0], isref_ref[0], pd_ref[0], rowones_ref[0],
+        w_ref[0], surf_ref[0, 0], bank_t_ref[0], open_t_ref[0],
+        coeff_ref[0], scal_ref[0], bvec_ref[0])
+    o_ref[0, 0, 0] = jnp.sum(cw)
+
+
+def _surface_kernel(ones_ref, togg_ref, op_ref, mode_ref, dt_ref, isrw_ref,
+                    isact_ref, isref_ref, pd_ref, rowones_ref, w_ref,
+                    surf_ref, cell_ref, bank_t_ref, open_t_ref, coeff_ref,
+                    scal_ref, bvec_ref, o_ref):
+    cw = _masked_charge(
+        ones_ref[0], togg_ref[0], op_ref[0], mode_ref[0], dt_ref[0],
+        isrw_ref[0], isact_ref[0], isref_ref[0], pd_ref[0], rowones_ref[0],
+        w_ref[0], surf_ref[0, 0], bank_t_ref[0], open_t_ref[0],
+        coeff_ref[0], scal_ref[0], bvec_ref[0])
+    # cell one-hot reduction (the 8-wide bank trick, CELLS lanes wide):
+    # one partial charge per (bank, row-band) cell of this block
+    o_ref[0, 0, 0, :] = jnp.sum(cell_ref[0] * cw[None, :], axis=1)
 
 
 def batched_energy_pallas(feats: dict, coeffs, scal, bvec,
                           block_n: int = BLOCK_N,
-                          interpret: bool | None = None) -> jax.Array:
+                          interpret: bool | None = None,
+                          cell_t=None) -> jax.Array:
     """The (vendors, traces, blocks)-gridded charge reduction.
 
     ``feats`` maps :data:`FEATURE_PLANES` names to (T, N) arrays, plus
+    ``surf`` as the (V, T, N) per-command structural ACT factor and
     ``bank_t``/``open_t`` as (T, 8, N) transposed layouts so the 8-wide
     reductions keep the command axis on the VREG lanes.  Returns the
-    (T, V) masked charge matrix in mA*cycles."""
+    (T, V) masked charge matrix in mA*cycles — or, when ``cell_t`` (the
+    (T, CELLS, N) one-hot structural cell plane) is passed, switches the
+    grid to the surface kernel and returns the (T, V, CELLS) charge
+    decomposition of ``mode='surface'``."""
     if interpret is None:
         interpret = interpret_default()
     padded = {}
     for name in FEATURE_PLANES:
         padded[name], _ = pad_to(feats[name], block_n, axis=1)
+    padded["surf"], _ = pad_to(feats["surf"], block_n, axis=2)
     for name in ("bank_t", "open_t"):
         padded[name], _ = pad_to(feats[name], block_n, axis=2)
     n_traces, n_pad = padded["ones"].shape
@@ -179,19 +208,37 @@ def batched_energy_pallas(feats: dict, coeffs, scal, bvec,
     grid = (n_vendors, n_traces, grid_n)
 
     spec_2d = pl.BlockSpec((1, block_n), lambda v, t, i: (t, i))
+    spec_surf = pl.BlockSpec((1, 1, block_n), lambda v, t, i: (v, t, i))
     spec_8 = pl.BlockSpec((1, 8, block_n), lambda v, t, i: (t, 0, i))
+    param_specs = [pl.BlockSpec((1, 4, 2, 3), lambda v, t, i: (v, 0, 0, 0)),
+                   pl.BlockSpec((1, 8), lambda v, t, i: (v, 0)),
+                   pl.BlockSpec((1, 3, 8), lambda v, t, i: (v, 0, 0))]
+    args = [padded[n] for n in FEATURE_PLANES] + [padded["surf"]]
+    if cell_t is None:
+        kernel, cell_specs = _energy_kernel, []
+        out_spec = pl.BlockSpec((1, 1, 1), lambda v, t, i: (v, t, i))
+        out_shape = jax.ShapeDtypeStruct((n_vendors, n_traces, grid_n),
+                                         jnp.float32)
+    else:
+        kernel = _surface_kernel
+        padded_cell, _ = pad_to(cell_t, block_n, axis=2)
+        args.append(padded_cell)
+        cell_specs = [pl.BlockSpec((1, N_SURFACE_CELLS, block_n),
+                                   lambda v, t, i: (t, 0, i))]
+        out_spec = pl.BlockSpec((1, 1, 1, N_SURFACE_CELLS),
+                                lambda v, t, i: (v, t, i, 0))
+        out_shape = jax.ShapeDtypeStruct(
+            (n_vendors, n_traces, grid_n, N_SURFACE_CELLS), jnp.float32)
+    args += [padded["bank_t"], padded["open_t"], coeffs, scal, bvec]
     partial = pl.pallas_call(
-        _energy_kernel,
+        kernel,
         grid=grid,
-        in_specs=[spec_2d] * len(FEATURE_PLANES) + [
-            spec_8, spec_8,
-            pl.BlockSpec((1, 4, 2, 3), lambda v, t, i: (v, 0, 0, 0)),
-            pl.BlockSpec((1, 8), lambda v, t, i: (v, 0)),
-            pl.BlockSpec((1, 3, 8), lambda v, t, i: (v, 0, 0))],
-        out_specs=pl.BlockSpec((1, 1, 1), lambda v, t, i: (v, t, i)),
-        out_shape=jax.ShapeDtypeStruct((n_vendors, n_traces, grid_n),
-                                       jnp.float32),
+        in_specs=([spec_2d] * len(FEATURE_PLANES) + [spec_surf]
+                  + cell_specs + [spec_8, spec_8] + param_specs),
+        out_specs=out_spec,
+        out_shape=out_shape,
         interpret=interpret,
-    )(*[padded[n] for n in FEATURE_PLANES], padded["bank_t"],
-      padded["open_t"], coeffs, scal, bvec)
-    return jnp.sum(partial, axis=2).T        # (T, V)
+    )(*args)
+    if cell_t is None:
+        return jnp.sum(partial, axis=2).T                # (T, V)
+    return jnp.sum(partial, axis=2).transpose(1, 0, 2)   # (T, V, CELLS)

@@ -16,7 +16,7 @@ from repro.kernels import common as kcommon
 
 _T = TIMING
 
-MODE_KW = {"mean": {}, "range": {},
+MODE_KW = {"mean": {}, "range": {}, "surface": {},
            "distribution": dict(ones_frac=0.35, toggle_frac=0.15)}
 
 
@@ -54,12 +54,14 @@ def _reports(rep, mode):
 # ---------------------------------------------------------------------------
 # Golden parity: all estimators x all modes x all impls
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("mode", ("mean", "range", "distribution"))
+@pytest.mark.parametrize("mode", ("mean", "range", "distribution", "surface"))
 def test_golden_parity_every_estimator_and_impl(estimators, ragged, mode):
     kw = MODE_KW[mode]
+    shape = ((len(ragged), 3, dram.N_BANKS, dram.N_ROW_BANDS)
+             if mode == "surface" else (len(ragged), 3))
     for est in estimators:
         base = est.estimate(ragged, mode=mode, **kw)
-        assert _reports(base, mode)[0].energy_pj.shape == (len(ragged), 3)
+        assert _reports(base, mode)[0].energy_pj.shape == shape
         for impl in ("pallas", "reference"):
             other = est.estimate(ragged, mode=mode, impl=impl, **kw)
             for b, o in zip(_reports(base, mode), _reports(other, mode)):
@@ -85,17 +87,21 @@ def test_vendor_subset_parity(estimators, ragged):
 
 def test_pad_rows_contribute_exactly_zero(quick_vampire):
     """Explicitly NOP/dt=0-padding a batch member to 3x its length must
-    not change a single report leaf, on either batched impl."""
+    not change a single report leaf, on either batched impl — including
+    per surface cell (pad NOPs land on cell (0, 0) and must add exactly
+    zero charge AND zero cycles there)."""
     tr = idd_loops.validation_sweep(16)
     longer = idd_loops.validation_sweep(64)
     padded = dram.pad_trace(tr, 3 * tr.n)
     for impl in ("vectorized", "pallas"):
-        a = quick_vampire.estimate([tr, longer], impl=impl)
-        b = quick_vampire.estimate([padded, longer], impl=impl)
-        for name, la, lb in zip(a._fields, a, b):
-            np.testing.assert_allclose(np.asarray(lb), np.asarray(la),
-                                       rtol=1e-6,
-                                       err_msg=f"{impl} leaf {name}")
+        for mode in ("mean", "surface"):
+            a = quick_vampire.estimate([tr, longer], impl=impl, mode=mode)
+            b = quick_vampire.estimate([padded, longer], impl=impl,
+                                       mode=mode)
+            for name, la, lb in zip(a._fields, a, b):
+                np.testing.assert_allclose(
+                    np.asarray(lb), np.asarray(la), rtol=1e-6,
+                    err_msg=f"{impl} mode={mode} leaf {name}")
 
 
 def test_batch_member_matches_solo_estimate(quick_vampire, ragged):
@@ -170,6 +176,22 @@ def test_registry_accepts_new_impls_like_estimator_kinds():
 def test_estimate_rejects_unknown_impl(quick_vampire, ragged):
     with pytest.raises(ValueError, match="unknown impl"):
         quick_vampire.estimate(ragged, impl="typo")
+
+
+def test_estimate_is_loud_for_registered_impl_without_a_path(quick_vampire,
+                                                            estimators,
+                                                            ragged):
+    """Registering an impl does not give existing estimators a dispatch
+    for it: estimate() must raise, never silently fall through to the
+    reference oracle."""
+    extra = model_api.EstimateImpl("no-path", "registry probe")
+    model_api.register_impl(extra)
+    try:
+        for est in estimators:
+            with pytest.raises(ValueError, match="no evaluation path"):
+                est.estimate(ragged, impl="no-path")
+    finally:
+        model_api._IMPLS.pop("no-path")
 
 
 # ---------------------------------------------------------------------------

@@ -349,14 +349,20 @@ def test_v1_pickle_migrates_with_warning(quick_vampire, ragged_traces,
     for v in quick_vampire.vendors:
         for name, a, b in zip(migrated.params(v)._fields,
                               migrated.params(v), quick_vampire.params(v)):
+            if name == "act_surface":
+                # the v1 format predates the structural surface: migrated
+                # models carry the documented neutral (all-ones) surface
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.ones_like(np.asarray(a)))
+                continue
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                           err_msg=f"vendor {v} leaf {name}")
         assert migrated.variation_band[v] == quick_vampire.variation_band[v]
     v2 = str(tmp_path / "model_v2.npz")
     migrated.save(v2)
     reloaded = model_api.load_estimator(v2)
-    _leafwise_close(reloaded.estimate(ragged_traces),
-                    quick_vampire.estimate(ragged_traces), rtol=1e-6)
+    mig_rep = migrated.estimate(ragged_traces)
+    _leafwise_close(reloaded.estimate(ragged_traces), mig_rep, rtol=1e-6)
 
 
 def test_v1_fixture_artifact_loads(ragged_traces):

@@ -1,0 +1,159 @@
+"""The structural-variation surfaces (paper Section 6, Figs 19-22):
+``mode='surface'`` semantics, the planted per-(bank, row-band) ground
+truth, and the surface-fit campaign's recovery of it."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import device_sim, dram, idd_loops, validate
+from repro.core import params as P
+from repro.core.baselines_power import DRAMPowerModel, MicronModel
+from repro.core.estimate_batch import TraceBatch
+
+
+@pytest.fixture(scope="module")
+def surface_traces():
+    return [validate.surface_sweep_trace(reps=2),
+            idd_loops.validation_sweep(24)]
+
+
+# ---------------------------------------------------------------------------
+# mode='surface' semantics
+# ---------------------------------------------------------------------------
+def test_surface_sums_to_mean_for_every_estimator(quick_vampire,
+                                                  surface_traces):
+    """The surface is a decomposition, not a different physics: summing
+    the (bank, row-band) cells recovers mode='mean' leaf for leaf."""
+    ests = (quick_vampire, MicronModel.from_vampire(quick_vampire),
+            DRAMPowerModel.from_vampire(quick_vampire))
+    for est in ests:
+        mean = est.estimate(surface_traces)
+        surf = est.estimate(surface_traces, mode="surface")
+        np.testing.assert_allclose(
+            np.asarray(surf.charge_ma_cycles).sum(axis=(2, 3)),
+            np.asarray(mean.charge_ma_cycles), rtol=1e-5, err_msg=est.kind)
+        np.testing.assert_array_equal(
+            np.asarray(surf.cycles).sum(axis=(2, 3)),
+            np.asarray(mean.cycles), err_msg=est.kind)
+
+
+def test_surface_vendor_subset_parity(quick_vampire, surface_traces):
+    full = quick_vampire.estimate(surface_traces, mode="surface")
+    sub = quick_vampire.estimate(surface_traces, (0, 2), mode="surface")
+    np.testing.assert_allclose(np.asarray(sub.energy_pj),
+                               np.asarray(full.energy_pj)[:, [0, 2]],
+                               rtol=1e-6)
+
+
+def test_surface_rejects_distribution_fractions(quick_vampire,
+                                                surface_traces):
+    with pytest.raises(ValueError, match="only meaningful"):
+        quick_vampire.estimate(surface_traces, mode="surface",
+                               ones_frac=0.5, toggle_frac=0.5)
+
+
+def test_surface_act_energy_lands_on_the_right_cell(quick_vampire):
+    """An ACT to (bank, row) charges exactly the (bank, row_band(row))
+    cell above background."""
+    bank, row = 5, (6 << dram.ROW_BAND_SHIFT) | 3
+    tr = dram.make_trace([dram.ACT, dram.PRE], [bank] * 2, [row] * 2,
+                         [0, 0], None, [dram.TIMING.tRAS, dram.TIMING.tRP])
+    rep = quick_vampire.estimate([tr], (0,), mode="surface")
+    surf = np.asarray(rep.charge_ma_cycles)[0, 0]
+    # only the target bank's row-band cell and the (0,0) background cells
+    # carry charge: commands live on bank 5 (ACT: band 6, PRE: band 6)
+    nonzero = {tuple(c) for c in np.argwhere(surf > 0)}
+    assert nonzero == {(bank, dram.row_band(row))}
+    cyc = np.asarray(rep.cycles)[0, 0]
+    assert cyc[bank, dram.row_band(row)] == dram.TIMING.tRAS + dram.TIMING.tRP
+
+
+def test_surface_mode_is_jit_and_device_put_safe(quick_vampire,
+                                                 surface_traces):
+    """The pytree property extends to the surface dispatch: the model can
+    be traced and device_put with mode='surface' riding estimate()."""
+    tb = TraceBatch.from_traces(surface_traces)
+    ref = np.asarray(quick_vampire.estimate(tb, mode="surface").energy_pj)
+    jitted = jax.jit(lambda m: m.estimate(tb, mode="surface").energy_pj)
+    np.testing.assert_allclose(np.asarray(jitted(quick_vampire)), ref,
+                               rtol=2e-6)
+    moved = jax.device_put(quick_vampire)
+    np.testing.assert_allclose(
+        np.asarray(moved.estimate(tb, mode="surface").energy_pj), ref,
+        rtol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# The planted ground truth is structural (vendor-level), and recovered
+# ---------------------------------------------------------------------------
+def test_planted_surface_is_structural_and_band0_normalized():
+    for v in range(3):
+        surf = device_sim.structural_surface(v)
+        assert surf.shape == (dram.N_BANKS, dram.N_ROW_BANDS)
+        np.testing.assert_array_equal(surf[:, 0], 1.0)
+        # identical across modules of the vendor — structural, not process
+        a = device_sim.true_module_params(P.ModuleSpec(v, 0, 2015))
+        b = device_sim.true_module_params(P.ModuleSpec(v, 7, 2015))
+        np.testing.assert_array_equal(np.asarray(a.act_surface),
+                                      np.asarray(b.act_surface))
+        np.testing.assert_allclose(np.asarray(a.act_surface), surf,
+                                   rtol=1e-6)
+    # vendor C's surface is the uneven one (paper: C's outsized structural
+    # variation); A's is mild
+    assert np.ptp(device_sim.structural_surface(2)) > \
+        np.ptp(device_sim.structural_surface(0))
+
+
+def test_surface_fit_campaign_recovers_planted_surface(quick_vampire):
+    """The surface campaign (constant-popcount ACT/PRE probes per cell)
+    must find the planted per-bank/row factors — including vendor C's
+    hottest cell — from a reduced 2-probe-module campaign."""
+    for v, vc in quick_vampire.by_vendor.items():
+        fitted = np.asarray(vc.act_surface)
+        planted = device_sim.structural_surface(v)
+        np.testing.assert_array_equal(fitted[:, 0], 1.0)
+        np.testing.assert_allclose(fitted, planted, atol=0.08,
+                                   err_msg=f"vendor {v}")
+    fitted_c = np.asarray(quick_vampire.by_vendor[2].act_surface)
+    planted_c = device_sim.structural_surface(2)
+    assert np.unravel_index(fitted_c.argmax(), fitted_c.shape) == \
+        np.unravel_index(planted_c.argmax(), planted_c.shape)
+
+
+def test_fitted_surface_round_trips_through_v2_blob(quick_vampire,
+                                                    tmp_path):
+    from repro.core.vampire import Vampire
+    path = str(tmp_path / "m.npz")
+    quick_vampire.save(path)
+    loaded = Vampire.load(path)
+    for v, vc in quick_vampire.by_vendor.items():
+        np.testing.assert_allclose(np.asarray(loaded.by_vendor[v].act_surface),
+                                   np.asarray(vc.act_surface), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Fleet maps + rendering (validate / fleet)
+# ---------------------------------------------------------------------------
+def test_structural_surface_maps_normalized_and_vendorwise(quick_vampire):
+    maps = validate.structural_surface_maps(quick_vampire)
+    assert maps.shape == (3, dram.N_BANKS, dram.N_ROW_BANDS)
+    np.testing.assert_allclose(maps.sum(axis=(1, 2)), 1.0, rtol=1e-9)
+    text = validate.render_surface_heatmap(maps[2], "vendor C")
+    assert text.startswith("vendor C") and "bank 7" in text
+
+
+def test_fleet_surface_energy_whole_fleet_one_dispatch(tiny_fleet):
+    from repro.core import fleet as fleet_mod
+    tb = TraceBatch.from_traces([validate.surface_sweep_trace(reps=1)])
+    rep = fleet_mod.fleet_surface_energy(tiny_fleet, tb.trace, tb.weight)
+    assert rep.energy_pj.shape == (1, len(tiny_fleet), dram.N_BANKS,
+                                   dram.N_ROW_BANDS)
+    # the module axis rides the same engine as vendors: each module's
+    # surface equals its own solo report
+    solo = fleet_mod.fleet_surface_energy(tiny_fleet[3:4], tb.trace,
+                                          tb.weight)
+    np.testing.assert_allclose(np.asarray(rep.energy_pj)[:, 3],
+                               np.asarray(solo.energy_pj)[:, 0], rtol=1e-6)
+    with pytest.raises(ValueError, match="reference"):
+        fleet_mod.fleet_surface_energy(tiny_fleet, tb.trace, tb.weight,
+                                       impl="reference")
