@@ -2,21 +2,37 @@
 
 For every IDD loop and vendor: the per-module measured distribution
 (mean/min/max), the measured/datasheet ratio, and the paper's reported
-ratio for comparison."""
+ratio for comparison — the low-power loops (IDD2P0/IDD3P/IDD6, PR 6)
+included.  Emits ``artifacts/BENCH_idd.json`` with hardware-independent
+ratio metrics (gated by ``check_bench``): worst frequency-extrapolation
+R^2, worst low-power measured-below-datasheet reduction, and the
+idle-standby-over-slow-power-down current ratio that makes power-down
+scheduling worth anything at all."""
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
-from benchmarks.common import fitted_vampire, row, timer
+from benchmarks.common import ARTIFACTS, fitted_vampire, row, timer
 from repro.core import params as P
 from repro.core.characterize import IDD_KEYS
+
+ARTIFACT = os.path.join(ARTIFACTS, "BENCH_idd.json")
+
+# the background-state LUT keys (paper Fig 14's headline reductions)
+LOWPOWER_KEYS = ("IDD2P1", "IDD2P0", "IDD3P", "IDD6")
 
 
 def run() -> list[str]:
     out = []
     with timer() as t:
         model = fitted_vampire()
+    n_rows = len(IDD_KEYS) * 3
+    per_key: dict[str, dict[str, dict]] = {}
     for key in IDD_KEYS:
+        per_key[key] = {}
         for v in range(3):
             vc = model.by_vendor[v]
             meas = vc.idd_measured[key]
@@ -24,14 +40,50 @@ def run() -> list[str]:
             ratio = float(np.mean(meas)) / ds
             paper = P.MEASURED_OVER_DATASHEET[key][v]
             rng = (np.max(meas) - np.min(meas)) / ds
+            per_key[key]["ABC"[v]] = {
+                "measured_mean_ma": float(np.mean(meas)),
+                "datasheet_ma": float(ds),
+                "ratio": ratio,
+                "paper_ratio": float(paper),
+            }
             out.append(row(
-                f"idd.{key}.{'ABC'[v]}", t.us / 27,
+                f"idd.{key}.{'ABC'[v]}", t.us / n_rows,
                 f"mean_mA={np.mean(meas):.1f};datasheet_mA={ds:.1f};"
                 f"ratio={ratio:.3f};paper_ratio={paper:.3f};"
                 f"norm_range={rng:.3f}"))
     # Section 4 frequency-extrapolation goodness of fit
-    worst = min(min(vc.idd_extrapolation_r2.values())
-                for vc in model.by_vendor.values())
-    out.append(row("idd.extrapolation_r2", t.us / 27,
-                   f"worst_r2={worst:.4f};paper_worst=0.9783"))
+    worst_r2 = min(min(vc.idd_extrapolation_r2.values())
+                   for vc in model.by_vendor.values())
+    out.append(row("idd.extrapolation_r2", t.us / n_rows,
+                   f"worst_r2={worst_r2:.4f};paper_worst=0.9783"))
+
+    # hardware-independent ratios for the regression gate: the measured
+    # low-power currents must stay well below datasheet (Fig 14), and
+    # idle standby must stay well above slow power-down, or the whole
+    # power-down machinery stops mattering
+    lowpower_reduction_worst = min(
+        1.0 - per_key[k][ab]["ratio"]
+        for k in LOWPOWER_KEYS for ab in "ABC")
+    idle_over_slow = [
+        per_key["IDD2N"][ab]["measured_mean_ma"]
+        / per_key["IDD2P0"][ab]["measured_mean_ma"] for ab in "ABC"]
+    idle_over_sr = [
+        per_key["IDD2N"][ab]["measured_mean_ma"]
+        / per_key["IDD6"][ab]["measured_mean_ma"] for ab in "ABC"]
+    blob = {
+        "keys": list(IDD_KEYS),
+        "lowpower_keys": list(LOWPOWER_KEYS),
+        "per_key": per_key,
+        "ratios": {
+            "extrapolation_r2_worst": float(worst_r2),
+            "lowpower_reduction_worst": float(lowpower_reduction_worst),
+            "idle_over_slow_pdn_worst": float(min(idle_over_slow)),
+            "idle_over_self_refresh_worst": float(min(idle_over_sr)),
+        },
+    }
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(blob, f, indent=2)
+    for name, val in blob["ratios"].items():
+        out.append(row(f"idd.{name}", t.us / n_rows, f"value={val:.4f}"))
     return out

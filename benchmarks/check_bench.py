@@ -62,6 +62,19 @@ CHECKS: dict[str, tuple[RatioCheck, ...]] = {
     "BENCH_structural.json": (
         RatioCheck(("surface_speedup_vs_python_sweep",), floor=3.0),
     ),
+    "BENCH_idd.json": (
+        # Section 4 / Fig 14 physics, hardware-independent by construction:
+        # frequency extrapolation must stay a good fit (paper worst R^2 =
+        # 0.9783), the low-power states must keep measuring well below
+        # datasheet (worst healthy reduction ~0.18, IDD3P vendor B), and
+        # idle standby must stay well above slow-PDN / self-refresh draw
+        # (~3.3x / ~2.4x healthy) or power-down scheduling is pointless.
+        RatioCheck(("ratios", "extrapolation_r2_worst"), floor=0.97,
+                   rel_slack=0.02),
+        RatioCheck(("ratios", "lowpower_reduction_worst"), floor=0.10),
+        RatioCheck(("ratios", "idle_over_slow_pdn_worst"), floor=1.5),
+        RatioCheck(("ratios", "idle_over_self_refresh_worst"), floor=1.5),
+    ),
 }
 
 

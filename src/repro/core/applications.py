@@ -11,7 +11,10 @@ The paper names three uses VAMPIRE enables; Section 10 develops the third
 
 2. **Power-down scheduling**: from the fitted idle / power-down currents
    and entry/exit overheads, derive the break-even idle time per vendor
-   and evaluate a timeout-based PDE policy on application traces.
+   and evaluate a timeout-based low-power policy on application traces —
+   picking among fast power-down, slow power-down (DLL off), and
+   self-refresh per idle-gap length (the deepest state whose exit
+   latency the gap can absorb).
 """
 from __future__ import annotations
 
@@ -119,15 +122,37 @@ def breakeven_idle_cycles(pp: PowerParams) -> float:
     """
     i2n = float(pp.i2n)
     i_pd = float(pp.i_pd)
-    overhead_cycles = _T.tRP + 2 * _T.tCKE
+    overhead_cycles = _T.tRP + _T.tCKE + _T.tXP
     overhead_charge = overhead_cycles * i2n + float(pp.q_actpre)
     per_cycle_gain = max(i2n - i_pd, 1e-6)
     return overhead_charge / per_cycle_gain
 
 
+# the resume penalty must stay small next to the idle it prices: a gap
+# qualifies for a state only when it is this many exit latencies long
+IDLE_EXIT_HEADROOM = 8
+
+
+def select_idle_state(gap_cycles: int):
+    """The deepest low-power state whose exit latency the gap can absorb
+    (performance-neutral rule).  Returns (entry_cmd, exit_cmd,
+    exit_cycles): self-refresh for long gaps, slow power-down (DLL off)
+    for medium ones, fast power-down otherwise."""
+    if gap_cycles >= IDLE_EXIT_HEADROOM * _T.tXS:
+        return dram.SRE, dram.SRX, _T.tXS
+    if gap_cycles >= IDLE_EXIT_HEADROOM * _T.tXPDLL:
+        return dram.PDE_SLOW, PDX, _T.tXPDLL
+    return PDE, PDX, _T.tXP
+
+
+_ENTRY_CMDS = (PDE, dram.PDE_SLOW, dram.SRE)
+
+
 def apply_powerdown_policy(trace, timeout_cycles: int):
-    """Insert {PREA, PDE, ..., PDX} into idle gaps >= timeout (a classic
-    timeout policy); gaps already powered down are left untouched."""
+    """Insert {PREA, entry, NOP-dwell, exit} into idle gaps >= timeout (a
+    classic timeout policy), picking the low-power state per gap length
+    via :func:`select_idle_state`; gaps already powered down are left
+    untouched."""
     import jax.numpy as jnp
     cmd = list(np.asarray(trace.cmd))
     bank = list(np.asarray(trace.bank))
@@ -144,17 +169,27 @@ def apply_powerdown_policy(trace, timeout_cycles: int):
         out["col"].append(co); out["data"].append(d); out["dt"].append(t)
 
     i = 0
+    in_lp = False  # inside a low-power window the trace already has
     while i < len(cmd):
         c = cmd[i]
+        if c in _ENTRY_CMDS:
+            in_lp = True
+        elif c in (PDX, dram.SRX):
+            in_lp = False
         gap = int(dt[i]) - (_T.tBURST if c in (RD, WR) else 0)
-        if c in (RD, WR, NOP) and gap >= timeout_cycles \
-                and c != PDE and (i + 1 >= len(cmd) or cmd[i + 1] != PDE):
-            # truncate this slot to its busy part, spend the gap in PD
+        if not in_lp and c in (RD, WR, NOP) and gap >= timeout_cycles \
+                and (i + 1 >= len(cmd) or cmd[i + 1] not in _ENTRY_CMDS):
+            # truncate this slot to its busy part, spend the gap in the
+            # selected state: entry bills powered-up, the dwell rides a
+            # NOP slot, the exit slot is the last billed at low power
+            entry, exit_cmd, exit_dt = select_idle_state(gap)
             busy = int(dt[i]) - gap
+            dwell = max(gap - _T.tRP - _T.tCKE - exit_dt, 1)
             emit(c, bank[i], row[i], col[i], data[i], max(busy, 1))
             emit(PREA, 0, 0, 0, z, _T.tRP)
-            emit(PDE, 0, 0, 0, z, max(gap - _T.tRP - _T.tCKE, 1))
-            emit(PDX, 0, 0, 0, z, _T.tCKE)
+            emit(entry, 0, 0, 0, z, _T.tCKE)
+            emit(NOP, 0, 0, 0, z, dwell)
+            emit(exit_cmd, 0, 0, 0, z, exit_dt)
         else:
             emit(c, bank[i], row[i], col[i], data[i], int(dt[i]))
         i += 1
@@ -190,7 +225,12 @@ def powerdown_study(model, app: traces.AppSpec, vendor: int,
     base = float(energy[0])
     results = {"app": app.name, "vendor": "ABC"[vendor],
                "breakeven_cycles": be, "baseline_pj": base}
-    for (name, _), e in zip(policies, energy[1:]):
+    for (name, _), var, e in zip(policies, variants[1:], energy[1:]):
         results[f"{name}_pj"] = float(e)
         results[f"{name}_saving"] = 1 - float(e) / base
+        c = np.asarray(var.cmd)
+        results[f"{name}_modes"] = {
+            "fast": int((c == PDE).sum()),
+            "slow": int((c == dram.PDE_SLOW).sum()),
+            "sr": int((c == dram.SRE).sum())}
     return results

@@ -46,22 +46,49 @@ import numpy as np
 
 from repro.core import model_api
 from repro.core.dram import (ACT, RD, WR, REF, CommandTrace, TIMING)
-from repro.core.energy_model import (EnergyReport, StructuralFeatures,
-                                     _report, extract_structural_features,
+from repro.core.energy_model import (BG_ACTIVE, BG_PDN_ACT, BG_PDN_FAST,
+                                     BG_PDN_SLOW, EnergyReport,
+                                     StructuralFeatures, _report,
+                                     extract_structural_features,
                                      surface_charge, surface_cycles)
 
 _T = TIMING
 
-# datasheet keys the baseline formulas consume, in stacked-table order
+# datasheet keys the baseline formulas consume, in stacked-table order;
+# the low-power keys are appended at the END so stacked tables saved
+# before the background-state lattice keep their column meaning
 BASELINE_IDD_KEYS = ("IDD0", "IDD2N", "IDD2P1", "IDD3N", "IDD4R", "IDD4W",
-                     "IDD5B")
+                     "IDD5B", "IDD2P0", "IDD3P", "IDD6")
+_LOWPOWER_KEYS = ("IDD2P0", "IDD3P", "IDD6")
+
+
+def with_lowpower_defaults(ds) -> dict:
+    """Datasheet dicts predating the background-state lattice lack the
+    low-power keys; default them to the fast power-down current (the old
+    models' single power-down rate), keeping old blobs loadable."""
+    if all(k in ds for k in _LOWPOWER_KEYS):
+        return dict(ds)
+    out = dict(ds)
+    for k in _LOWPOWER_KEYS:
+        out.setdefault(k, out["IDD2P1"])
+    return out
 
 
 def _bg_state(sf: StructuralFeatures):
     """The two structural facts both baselines consume, from the shared
-    param-independent feature pass: per-command open-bank count and
-    power-down state."""
-    return jnp.sum(sf.open_before.astype(jnp.float32), axis=1), sf.powered_down
+    param-independent feature pass: per-command open-bank count and the
+    background-state code (BG_*)."""
+    return jnp.sum(sf.open_before.astype(jnp.float32), axis=1), sf.bg_state
+
+
+def _bg_lut(bg_state, i_active, ds):
+    """Background current from the state code — the baselines' datasheet
+    LUT twin of :func:`energy_model.background_current`."""
+    i_low = jnp.where(bg_state == BG_PDN_FAST, ds["IDD2P1"],
+                      jnp.where(bg_state == BG_PDN_SLOW, ds["IDD2P0"],
+                                jnp.where(bg_state == BG_PDN_ACT,
+                                          ds["IDD3P"], ds["IDD6"])))
+    return jnp.where(bg_state == BG_ACTIVE, i_active, i_low)
 
 
 def act_pair_charge(idd0, idd2n, idd3n) -> jax.Array:
@@ -77,15 +104,15 @@ def _act_pair_charge(ds) -> jax.Array:
     return act_pair_charge(ds["IDD0"], ds["IDD2N"], ds["IDD3N"])
 
 
-def micron_charges(trace: CommandTrace, open_banks, powered_down,
+def micron_charges(trace: CommandTrace, open_banks, bg_state,
                    ds) -> jax.Array:
     """Per-command charge (mA*cycles) of the TN-41-01-style estimate.
     ``ds`` maps IDD key -> current; values broadcast against the trace."""
     del open_banks  # the calculator's documented flaw: bank count ignored
     dt = trace.dt.astype(jnp.float32)
-    # Worst-case background: all-banks-active current whenever not powered
-    # down (the flaw reported by [65] and Section 9.1).
-    i_bg = jnp.where(powered_down, ds["IDD2P1"], ds["IDD3N"])
+    # Worst-case background: all-banks-active current whenever not in a
+    # low-power state (the flaw reported by [65] and Section 9.1).
+    i_bg = _bg_lut(bg_state, ds["IDD3N"], ds)
     charge = i_bg * dt
     # ACT/PRE power at the *specification* row-cycling rate: the calculator
     # charges one ACT/PRE pair per spec tRC of active time, regardless of the
@@ -93,7 +120,7 @@ def micron_charges(trace: CommandTrace, open_banks, powered_down,
     # additional time that may elapse between two DRAM commands").
     q_act = _act_pair_charge(ds)
     any_act = jnp.any(trace.cmd == ACT)
-    charge = charge + jnp.where(~powered_down & any_act,
+    charge = charge + jnp.where((bg_state == BG_ACTIVE) & any_act,
                                 q_act * dt / _T.tRC, 0.0)
     # Read/write power stacked on the (already worst-case) background — the
     # calculator's documented mishandling of bank-state/command interaction
@@ -106,7 +133,7 @@ def micron_charges(trace: CommandTrace, open_banks, powered_down,
     return charge
 
 
-def drampower_charges(trace: CommandTrace, open_banks, powered_down,
+def drampower_charges(trace: CommandTrace, open_banks, bg_state,
                       ds) -> jax.Array:
     """Per-command charge (mA*cycles) of the DRAMPower-style estimate:
     datasheet IDDs, actual timing."""
@@ -114,9 +141,9 @@ def drampower_charges(trace: CommandTrace, open_banks, powered_down,
     # Bank-sensitive background (DRAMPower includes the [65, 107] extension:
     # linear interpolation between IDD2N and IDD3N by open-bank count), but
     # with datasheet values and no per-bank structure.
-    i_bg = jnp.where(
-        powered_down, ds["IDD2P1"],
-        ds["IDD2N"] + (ds["IDD3N"] - ds["IDD2N"]) * open_banks / 8.0)
+    i_bg = _bg_lut(
+        bg_state,
+        ds["IDD2N"] + (ds["IDD3N"] - ds["IDD2N"]) * open_banks / 8.0, ds)
     charge = i_bg * dt
     charge = charge + jnp.where(trace.cmd == ACT, _act_pair_charge(ds), 0.0)
     burst = jnp.minimum(dt, float(_T.tBURST))
@@ -134,6 +161,7 @@ _CHARGE_FNS = {"micron": micron_charges, "drampower": drampower_charges}
 
 def micron_power(trace: CommandTrace, ds: dict[str, float]) -> EnergyReport:
     """TN-41-01-style estimate from datasheet IDDs (single trace)."""
+    ds = with_lowpower_defaults(ds)
     ob, pd = _bg_state(extract_structural_features(trace))
     charge = micron_charges(trace, ob, pd,
                             {k: jnp.float32(ds[k]) for k in BASELINE_IDD_KEYS})
@@ -143,6 +171,7 @@ def micron_power(trace: CommandTrace, ds: dict[str, float]) -> EnergyReport:
 def drampower(trace: CommandTrace, ds: dict[str, float]) -> EnergyReport:
     """DRAMPower-style estimate: datasheet IDDs, actual timing (single
     trace)."""
+    ds = with_lowpower_defaults(ds)
     ob, pd = _bg_state(extract_structural_features(trace))
     charge = drampower_charges(
         trace, ob, pd, {k: jnp.float32(ds[k]) for k in BASELINE_IDD_KEYS})
@@ -224,10 +253,20 @@ class DatasheetModel(model_api.StackedEstimatorMixin):
     kind = None  # class attribute (NOT a field), overridden per subclass
 
     def __post_init__(self):
+        self.datasheets = {v: with_lowpower_defaults(d)
+                           for v, d in self.datasheets.items()}
         if self.idd_table is None:
             self.idd_table = jnp.asarray(
                 [[self.datasheets[v][k] for k in BASELINE_IDD_KEYS]
                  for v in sorted(self.datasheets)], jnp.float32)
+        elif self.idd_table.shape[-1] < len(BASELINE_IDD_KEYS):
+            # stacked table saved before the background-state lattice:
+            # pad the missing low-power columns with the IDD2P1 column
+            pd_col = self.idd_table[:, BASELINE_IDD_KEYS.index("IDD2P1")]
+            pad = jnp.tile(pd_col[:, None],
+                           (1, len(BASELINE_IDD_KEYS)
+                            - self.idd_table.shape[-1]))
+            self.idd_table = jnp.concatenate([self.idd_table, pad], axis=-1)
 
     # ------------------------------------------------------- construction
     @classmethod

@@ -40,8 +40,10 @@ from repro.core.dram import RD, WR, LINE_BITS
 from repro.core.energy_model import PowerParams, trace_energy_vectorized
 from repro.core.fleet import ProbeBatch, ProbePoint
 
+# low-power keys appended at the END so pre-existing loops keep their
+# stable noise-key indices (a key IS the measurement's noise draw).
 IDD_KEYS = ("IDD2N", "IDD3N", "IDD0", "IDD1", "IDD4R", "IDD4W", "IDD7",
-            "IDD5B", "IDD2P1")
+            "IDD5B", "IDD2P1", "IDD2P0", "IDD3P", "IDD6")
 IL_MODES = ("none", "col", "bank", "bankcol")
 OPS = (RD, WR)
 
@@ -149,6 +151,11 @@ class VendorCharacterization:
     row_sweep: dict
     q_ref: float
     i_pd: float
+    # rest of the background-state LUT (Section 4.2 / Fig 14); None for
+    # pre-lattice model blobs -> fall back to the fast power-down current
+    i_pd_slow: float = None  # type: ignore[assignment]
+    i_actpd: float = None  # type: ignore[assignment]
+    i_sr: float = None  # type: ignore[assignment]
     # per-(bank, row-band) structural surface recovered by the surface
     # campaign; None (-> neutral all-ones) for pre-surface model blobs
     act_surface: np.ndarray = None  # type: ignore[assignment]
@@ -174,6 +181,14 @@ class VendorCharacterization:
                                              jnp.float32),
             ones_quad=jnp.asarray(0.0, jnp.float32),  # model is linear
             act_surface=jnp.asarray(self.act_surface, jnp.float32),
+            i_pd_slow=jnp.asarray(
+                self.i_pd if self.i_pd_slow is None else self.i_pd_slow,
+                jnp.float32),
+            i_actpd=jnp.asarray(
+                self.i_pd if self.i_actpd is None else self.i_actpd,
+                jnp.float32),
+            i_sr=jnp.asarray(
+                self.i_pd if self.i_sr is None else self.i_sr, jnp.float32),
         )
         return self.fitted
 
@@ -385,6 +400,30 @@ def characterize_vendor(modules, vendor: int, *, probe_modules: int = 5,
     q_ref = (idd5b - i2n) * float(t.tRFC)
     i_pd = float(np.mean(idd_measured["IDD2P1"]))
 
+    # ---- 4b. low-power background states (Section 4.2 / Fig 14) -----------
+    # IDD2P0's loop never powers back up (like IDD2P1), so after the first
+    # entry the whole loop dwells in slow power-down — the direct mean IS
+    # the fitted current.  IDD3P and IDD6 loops must power up every
+    # repetition (ACT is illegal during power-down; self-refresh admits
+    # only NOP/SRX), so the powered-up slots — billed at the state BEFORE
+    # each command, like everywhere else in the integrator — are subtracted
+    # analytically before dividing by the low-power dwell (which includes
+    # the exit slot: PDX/SRX are the last slots billed at low-power rate).
+    i_pd_slow = float(np.mean(idd_measured["IDD2P0"]))
+
+    idle8 = idd_loops.IDLE_SLOT * 8
+    idd3p_mean = float(np.mean(idd_measured["IDD3P"]))
+    tot3p = t.tRCD + t.tCKE + idle8 + t.tXP + t.tRP
+    up3p = (i2n * t.tRCD
+            + (i2n + float(bank_open_delta[0])) * (t.tCKE + t.tRP)
+            + q_actpre)
+    i_actpd = max((idd3p_mean * tot3p - up3p) / (idle8 + t.tXP), 0.1)
+
+    idd6_mean = float(np.mean(idd_measured["IDD6"]))
+    tot6 = t.tRP + t.tCKE + idle8 + t.tXS
+    i_sr = max((idd6_mean * tot6 - i2n * (t.tRP + t.tCKE))
+               / (idle8 + t.tXS), 0.1)
+
     vc = VendorCharacterization(
         act_surface=act_surface,
         vendor=vendor, idd_measured=idd_measured,
@@ -395,7 +434,8 @@ def characterize_vendor(modules, vendor: int, *, probe_modules: int = 5,
         bank_write_factor=bank_write_factor, q_actpre=q_actpre,
         row_ones_slope=row_ones_slope,
         row_sweep={"row_ones": row_ones, "current": row_cur, "r2": rf.r2},
-        q_ref=q_ref, i_pd=i_pd)
+        q_ref=q_ref, i_pd=i_pd,
+        i_pd_slow=i_pd_slow, i_actpd=i_actpd, i_sr=i_sr)
     vc.build_params()
     return vc
 

@@ -99,6 +99,12 @@ def true_vendor_params(vendor: int, year: int = 2015) -> PowerParams:
                                          jnp.float32),
         ones_quad=jnp.asarray(P.ONES_QUAD_FRACTION, jnp.float32),
         act_surface=jnp.asarray(structural_surface(vendor), jnp.float32),
+        # the rest of the background-state LUT (paper Sec 4.2 / Fig 14).
+        # i_sr subsumes the per-REF charge: refresh is internal during
+        # self-refresh, so the anchor is the whole self-refresh current.
+        i_pd_slow=jnp.asarray(P.MEASURED_IDD["IDD2P0"][vendor], jnp.float32),
+        i_actpd=jnp.asarray(P.MEASURED_IDD["IDD3P"][vendor], jnp.float32),
+        i_sr=jnp.asarray(P.MEASURED_IDD["IDD6"][vendor], jnp.float32),
     )
 
 
@@ -123,6 +129,9 @@ def true_module_params(spec: P.ModuleSpec) -> PowerParams:
     io_f2 = float(np.exp(rng.normal(0.0, io_sig)))
     # act_surface is deliberately NOT perturbed here: the surface is
     # structural — bit-identical across every module of the vendor.
+    # NOTE: the low-power draws are appended AFTER every pre-existing draw
+    # (f() calls consume the module rng in order) so adding leaves never
+    # moves the seeded stream of the leaves that came before them.
     return base._replace(
         datadep=jnp.asarray(dd, jnp.float32),
         i2n=base.i2n * f(1.2),
@@ -132,6 +141,9 @@ def true_module_params(spec: P.ModuleSpec) -> PowerParams:
         i_pd=base.i_pd * f(1.5 if spec.vendor == 1 else 0.6),
         io_read_ma_per_one=base.io_read_ma_per_one * io_f,
         io_write_ma_per_zero=base.io_write_ma_per_zero * io_f2,
+        i_pd_slow=base.i_pd_slow * f(0.6),
+        i_actpd=base.i_actpd * f(0.6),
+        i_sr=base.i_sr * f(0.5),
     )
 
 

@@ -48,6 +48,9 @@ class Timing(NamedTuple):
     tWR: int = 6     # 15 ns write recovery
     tRTP: int = 4    # read-to-precharge
     tCKE: int = 3    # power-down entry/exit
+    tXP: int = 5     # exit from a (fast/active) power-down to a command
+    tXPDLL: int = 24  # exit from slow power-down (DLL relock), 10 ns+
+    tXS: int = 74    # exit from self-refresh to a command (tRFC + margin)
 
 TIMING = Timing()
 
@@ -60,12 +63,16 @@ PRE = 2   # precharge one bank
 RD = 3
 WR = 4
 REF = 5
-PDE = 6   # fast power-down entry (DLL on)
-PDX = 7   # power-down exit
+PDE = 6   # fast power-down entry (DLL on); active power-down if banks open
+PDX = 7   # power-down exit (fast, slow, and active power-down)
 PREA = 8  # precharge all banks
+PDE_SLOW = 9   # slow (precharge) power-down entry, DLL off
+SRE = 10       # self-refresh entry (refresh becomes internal)
+SRX = 11       # self-refresh exit
 
 CMD_NAMES = {NOP: "NOP", ACT: "ACT", PRE: "PRE", RD: "RD", WR: "WR",
-             REF: "REF", PDE: "PDE", PDX: "PDX", PREA: "PREA"}
+             REF: "REF", PDE: "PDE", PDX: "PDX", PREA: "PREA",
+             PDE_SLOW: "PDE_SLOW", SRE: "SRE", SRX: "SRX"}
 
 # Interleaving modes for the data-dependency model (paper Table 5).
 IL_NONE = 0      # same bank & same column as previous RD/WR
@@ -106,9 +113,57 @@ class CommandTrace(NamedTuple):
         return self.total_cycles() * TCK_NS
 
 
+# commands that are illegal while in a power-down state (the clock-enable
+# pin is low: no bank, data, or refresh activity may be issued; NOP, the
+# exits, re-entry, and precharge at the tile seam stay legal)
+_PDN_ILLEGAL = (ACT, RD, WR, REF, SRE)
+# while in self-refresh ONLY NOP and the self-refresh exit are legal
+_SR_LEGAL = (NOP, SRX)
+
+
+def validate_low_power_transitions(cmds) -> None:
+    """Raise ``ValueError`` on commands issued inside a low-power state
+    that the device cannot accept (e.g. ``ACT`` during self-refresh).
+
+    Walks the same background-state machine the integrator derives
+    (``energy_model.structural_state``); called on every concrete
+    ``make_trace`` so illegal traces fail at construction, before any
+    energy is billed for them."""
+    cmd = np.asarray(cmds)
+    if not np.isin(cmd, (PDE, PDE_SLOW, SRE)).any():
+        return  # no low-power entry -> nothing to check
+    in_pdn = in_sr = False
+    for i, c in enumerate(cmd.reshape(-1).tolist()):
+        if in_sr and c not in _SR_LEGAL:
+            raise ValueError(
+                f"illegal command {CMD_NAMES.get(c, c)} at index {i}: "
+                f"only NOP/SRX are legal during self-refresh")
+        if in_pdn and c in _PDN_ILLEGAL:
+            raise ValueError(
+                f"illegal command {CMD_NAMES.get(c, c)} at index {i}: "
+                f"not legal during power-down (exit with PDX first)")
+        if c in (PDE, PDE_SLOW):
+            in_pdn = True
+        elif c == PDX:
+            in_pdn = False
+        elif c == SRE:
+            in_sr = True
+        elif c == SRX:
+            in_sr = False
+
+
 def make_trace(cmds, banks=None, rows=None, cols=None, data=None, dts=None,
                default_dt: int = 1) -> CommandTrace:
-    """Build a CommandTrace from (possibly python-list) fields."""
+    """Build a CommandTrace from (possibly python-list) fields.
+
+    Concrete (non-traced) command streams are checked against the
+    low-power transition rules (:func:`validate_low_power_transitions`)."""
+    try:
+        validate_low_power_transitions(cmds)
+    except ValueError:
+        raise
+    except Exception:
+        pass  # traced/abstract inputs cannot be walked -- skip validation
     cmd = jnp.asarray(cmds, dtype=jnp.int32)
     n = cmd.shape[0]
     z = jnp.zeros(n, dtype=jnp.int32)

@@ -19,7 +19,30 @@ add charge on top:
   per-bank structural factor, plus the I/O-driver current the measurement rig
   captures; the slot's background is credited back for those cycles.
 * ``REF``   — a fixed charge above background per refresh burst.
-* ``PDE/PDX`` — switch the background to/from the power-down level.
+
+The background current itself is resolved through a **state machine over
+the idle/low-power lattice**, not a boolean: every command slot carries an
+integer background state (``BG_*`` codes below) derived once per trace by
+the same cumulative-event-index trick that tracks bank state, and the
+state indexes a per-state current LUT (:func:`background_current`):
+
+* ``BG_ACTIVE`` (0)   — powered up: ``i2n`` plus the open-bank deltas
+  (precharge standby when all banks are closed, active standby otherwise).
+* ``BG_PDN_FAST`` (1) — fast power-down (``PDE`` with all banks closed,
+  DLL on): ``i_pd`` (datasheet ``IDD2P1``).
+* ``BG_PDN_SLOW`` (2) — slow power-down (``PDE_SLOW``, DLL off):
+  ``i_pd_slow`` (``IDD2P0``).
+* ``BG_PDN_ACT`` (3)  — active power-down (``PDE`` while any bank is
+  open; the open state is frozen until ``PDX``): ``i_actpd`` (``IDD3P``).
+* ``BG_SR`` (4)       — self-refresh (``SRE``/``SRX``): ``i_sr``
+  (``IDD6``).  Refresh is internal while in this state, so a trace in
+  self-refresh owes no ``REF`` commands (and may not issue any —
+  ``dram.validate_low_power_transitions``).
+
+Entry commands (``PDE``/``PDE_SLOW``/``SRE``) and exits (``PDX``/``SRX``)
+bill their own slot at the state in force BEFORE them: the entry slot is
+still at the powered-up rate, the dwell rides on the slots after it, and
+the exit slot is the last one billed at the low-power rate.
 
 Charge is accumulated in mA x cycles; energy = charge * tCK * VDD.
 
@@ -42,6 +65,7 @@ import numpy as np
 
 from repro.core import dram
 from repro.core.dram import (ACT, PRE, PREA, RD, WR, REF, PDE, PDX,
+                             PDE_SLOW, SRE, SRX,
                              IL_NONE, IL_COL, IL_BANK, IL_BANKCOL,
                              LINE_BITS, N_BANKS, N_ROW_BANDS, TIMING,
                              TCK_NS, VDD, CommandTrace, line_ones,
@@ -49,6 +73,34 @@ from repro.core.dram import (ACT, PRE, PREA, RD, WR, REF, PDE, PDX,
 
 # flattened (bank, row-band) cell count of the structural-variation surface
 N_SURFACE_CELLS = N_BANKS * N_ROW_BANDS
+
+# ---------------------------------------------------------------------------
+# The background-state lattice (see the module docstring).  Code 0 is the
+# powered-up state, so a trace with no low-power commands carries an
+# all-zero state vector and bills exactly as before the lattice existed.
+# ---------------------------------------------------------------------------
+BG_ACTIVE = 0     # powered up: i2n + open-bank deltas
+BG_PDN_FAST = 1   # fast power-down (IDD2P1): i_pd
+BG_PDN_SLOW = 2   # slow power-down, DLL off (IDD2P0): i_pd_slow
+BG_PDN_ACT = 3    # active power-down, banks open (IDD3P): i_actpd
+BG_SR = 4         # self-refresh (IDD6): i_sr
+BG_STATE_NAMES = {BG_ACTIVE: "active", BG_PDN_FAST: "pdn_fast",
+                  BG_PDN_SLOW: "pdn_slow", BG_PDN_ACT: "pdn_active",
+                  BG_SR: "self_refresh"}
+
+
+def background_current(pp: "PowerParams", bg_state, i_up):
+    """The per-state background-current LUT: ``bg_state`` (int codes above)
+    gathered against the low-power leaves of ``pp``; ``i_up`` is the
+    powered-up current (``i2n`` + open-bank deltas), supplied by the caller
+    because it is the only state whose current is trace-dependent.  All
+    three impls (vectorized, reference scan, both Pallas kernel families)
+    resolve the background through this one shape."""
+    i_low = jnp.where(bg_state == BG_PDN_FAST, pp.i_pd,
+                      jnp.where(bg_state == BG_PDN_SLOW, pp.i_pd_slow,
+                                jnp.where(bg_state == BG_PDN_ACT,
+                                          pp.i_actpd, pp.i_sr)))
+    return jnp.where(bg_state == BG_ACTIVE, i_up, i_low)
 
 
 class DataOps(NamedTuple):
@@ -97,6 +149,13 @@ class PowerParams(NamedTuple):
     # initializes a jax backend) so parameter sets pickled before the
     # surface existed keep unpickling.
     act_surface: jax.Array = np.ones((N_BANKS, N_ROW_BANDS), np.float32)
+    # the rest of the background-state LUT (fast power-down i_pd sits
+    # above for leaf-order compatibility).  Defaulted (np scalars) so
+    # parameter sets serialized before the state lattice keep loading;
+    # traces without the new low-power commands never read them.
+    i_pd_slow: jax.Array = np.float32(0.0)  # () mA slow PDN, DLL off (IDD2P0)
+    i_actpd: jax.Array = np.float32(0.0)    # () mA active power-down (IDD3P)
+    i_sr: jax.Array = np.float32(0.0)       # () mA self-refresh (IDD6)
 
     @property
     def i3n(self):
@@ -107,7 +166,7 @@ def zeros_like_params() -> PowerParams:
     z = jnp.zeros(())
     return PowerParams(jnp.zeros((4, 2, 3)), z, jnp.zeros(8), jnp.ones(8),
                        jnp.ones(8), z, z, z, z, z, z, z,
-                       jnp.ones((N_BANKS, N_ROW_BANDS)))
+                       jnp.ones((N_BANKS, N_ROW_BANDS)), z, z, z)
 
 
 class TraceFeatures(NamedTuple):
@@ -119,7 +178,7 @@ class TraceFeatures(NamedTuple):
     toggles: jax.Array     # (N,) int32 (global bus, vs previous RD/WR)
     open_banks: jax.Array  # (N,) float32: number of open banks (weighted)
     bg_delta_sum: jax.Array  # (N,) float32: sum of bank_open_delta over open
-    powered_down: jax.Array  # (N,) bool
+    bg_state: jax.Array    # (N,) int32 background-state code (BG_*)
     row_ones: jax.Array    # (N,) int32 popcount of row addr (ACT rows)
 
 
@@ -135,7 +194,7 @@ class StructuralFeatures(NamedTuple):
     ones: jax.Array          # (N,) int32
     toggles: jax.Array       # (N,) int32
     open_before: jax.Array   # (N, 8) bool: bank open state before each cmd
-    powered_down: jax.Array  # (N,) bool
+    bg_state: jax.Array      # (N,) int32 background-state code (BG_*)
     row_ones: jax.Array      # (N,) int32
 
 
@@ -158,7 +217,7 @@ class StructuralState(NamedTuple):
     op: jax.Array           # (N,) int32
     il_mode: jax.Array      # (N,) int32 in [0,4)
     open_before: jax.Array  # (N, 8) bool
-    powered_down: jax.Array  # (N,) bool
+    bg_state: jax.Array     # (N,) int32 background-state code (BG_*)
     row_ones: jax.Array     # (N,) int32
     prev_data: jax.Array    # (N, 16) uint32: previous RD/WR line (0 if none)
     has_prev: jax.Array     # (N,) bool
@@ -180,10 +239,27 @@ def structural_state(trace: CommandTrace) -> StructuralState:
     last_pre = _exclusive_cummax(jnp.where(pre_ev, idx[:, None], -1))
     open_before = last_act > last_pre                                  # (N,8)
 
-    # ---- power-down state --------------------------------------------------
-    last_pde = _exclusive_cummax(jnp.where(cmd == PDE, idx, -1))
+    # ---- background-state lattice (power-down / self-refresh) -------------
+    # Same cumulative-event-index trick as the bank state: the most recent
+    # entry vs exit event before each slot decides the state; which ENTRY
+    # is most recent decides the power-down flavor.  A fast entry with any
+    # bank open is ACTIVE power-down — PDE freezes (not closes) the banks,
+    # and since ACT/PRE are illegal inside power-down the per-slot
+    # ``open_before`` equals the open state at entry.
+    last_pdf = _exclusive_cummax(jnp.where(cmd == PDE, idx, -1))
+    last_pds = _exclusive_cummax(jnp.where(cmd == PDE_SLOW, idx, -1))
     last_pdx = _exclusive_cummax(jnp.where(cmd == PDX, idx, -1))
-    powered_down = last_pde > last_pdx
+    last_sre = _exclusive_cummax(jnp.where(cmd == SRE, idx, -1))
+    last_srx = _exclusive_cummax(jnp.where(cmd == SRX, idx, -1))
+    in_pdn = jnp.maximum(last_pdf, last_pds) > last_pdx
+    in_sr = last_sre > last_srx
+    any_open = jnp.any(open_before, axis=1)
+    pd_kind = jnp.where(last_pdf >= last_pds,
+                        jnp.where(any_open, BG_PDN_ACT, BG_PDN_FAST),
+                        BG_PDN_SLOW)
+    bg_state = jnp.where(in_sr, BG_SR,
+                         jnp.where(in_pdn, pd_kind, BG_ACTIVE)
+                         ).astype(jnp.int32)
 
     # ---- previous RD/WR on the bus (for toggles & interleave mode) --------
     prev_rw = _exclusive_cummax(jnp.where(is_rw, idx, -1))            # (N,)
@@ -213,7 +289,7 @@ def structural_state(trace: CommandTrace) -> StructuralState:
     il_mode = il_mode.astype(jnp.int32)
 
     row_ones = popcount_u32(trace.row.astype(jnp.uint32))
-    return StructuralState(is_rw, op, il_mode, open_before, powered_down,
+    return StructuralState(is_rw, op, il_mode, open_before, bg_state,
                            row_ones, prev_data, has_prev)
 
 
@@ -229,7 +305,7 @@ def extract_structural_features(trace: CommandTrace,
     toggles = jnp.where(st.has_prev & st.is_rw,
                         data_ops.line_toggles(trace.data, st.prev_data), 0)
     return StructuralFeatures(st.is_rw, st.op, st.il_mode, ones, toggles,
-                              st.open_before, st.powered_down, st.row_ones)
+                              st.open_before, st.bg_state, st.row_ones)
 
 
 def finalize_features(sf: StructuralFeatures,
@@ -240,7 +316,7 @@ def finalize_features(sf: StructuralFeatures,
                            axis=1)
     open_banks = jnp.sum(sf.open_before.astype(jnp.float32), axis=1)
     return TraceFeatures(sf.is_rw, sf.op, sf.il_mode, sf.ones, sf.toggles,
-                         open_banks, bg_delta_sum, sf.powered_down,
+                         open_banks, bg_delta_sum, sf.bg_state,
                          sf.row_ones)
 
 
@@ -299,7 +375,8 @@ def integrate_charges(trace: CommandTrace, feats: TraceFeatures,
     path).  Returns per-command (N,) charges in mA*cycles; a dt=0 pad
     slot contributes exactly zero."""
     dt = trace.dt.astype(jnp.float32)
-    i_bg = jnp.where(feats.powered_down, pp.i_pd, pp.i2n + feats.bg_delta_sum)
+    i_bg = background_current(pp, feats.bg_state,
+                              pp.i2n + feats.bg_delta_sum)
     charge = i_bg * dt
 
     # RD/WR burst charge above background
@@ -408,7 +485,10 @@ def per_command_energy(trace: CommandTrace, pp: PowerParams) -> jax.Array:
 # ---------------------------------------------------------------------------
 class _ScanState(NamedTuple):
     bank_open: jax.Array        # (8,) bool
-    powered_down: jax.Array     # () bool
+    # background ENTRY kind: BG_ACTIVE / BG_PDN_FAST / BG_PDN_SLOW / BG_SR;
+    # the fast-vs-active distinction is resolved per step from bank_open
+    # (matching the vectorized lattice's per-slot ``open_before``)
+    bg_mode: jax.Array          # () int32
     prev_data: jax.Array        # (16,) uint32
     has_prev: jax.Array         # () bool
     prev_bank: jax.Array        # () int32
@@ -423,8 +503,11 @@ def trace_charges_scan(trace: CommandTrace, pp: PowerParams) -> jax.Array:
     def step(s: _ScanState, x):
         cmd, bank, row, col, data, dt = x
         dtf = dt.astype(jnp.float32)
-        i_bg = jnp.where(
-            s.powered_down, pp.i_pd,
+        bg_state = jnp.where(
+            (s.bg_mode == BG_PDN_FAST) & jnp.any(s.bank_open),
+            BG_PDN_ACT, s.bg_mode)
+        i_bg = background_current(
+            pp, bg_state,
             pp.i2n + jnp.sum(jnp.where(s.bank_open, pp.bank_open_delta, 0.0)))
         charge = i_bg * dtf
 
@@ -454,11 +537,14 @@ def trace_charges_scan(trace: CommandTrace, pp: PowerParams) -> jax.Array:
         bank_open = jnp.where(cmd == ACT, s.bank_open | bank_oh, s.bank_open)
         bank_open = jnp.where(cmd == PRE, bank_open & ~bank_oh, bank_open)
         bank_open = jnp.where(cmd == PREA, jnp.zeros_like(bank_open), bank_open)
-        pd = jnp.where(cmd == PDE, True, jnp.where(cmd == PDX, False,
-                                                   s.powered_down))
+        bg_mode = s.bg_mode
+        bg_mode = jnp.where(cmd == PDE, BG_PDN_FAST, bg_mode)
+        bg_mode = jnp.where(cmd == PDE_SLOW, BG_PDN_SLOW, bg_mode)
+        bg_mode = jnp.where(cmd == SRE, BG_SR, bg_mode)
+        bg_mode = jnp.where((cmd == PDX) | (cmd == SRX), BG_ACTIVE, bg_mode)
         new = _ScanState(
             bank_open=bank_open,
-            powered_down=pd,
+            bg_mode=bg_mode.astype(jnp.int32),
             prev_data=jnp.where(is_rw, data, s.prev_data),
             has_prev=s.has_prev | is_rw,
             prev_bank=jnp.where(is_rw, bank, s.prev_bank),
@@ -470,7 +556,7 @@ def trace_charges_scan(trace: CommandTrace, pp: PowerParams) -> jax.Array:
     n = trace.n
     init = _ScanState(
         bank_open=jnp.zeros(N_BANKS, dtype=jnp.bool_),
-        powered_down=jnp.asarray(False),
+        bg_mode=jnp.asarray(BG_ACTIVE, dtype=jnp.int32),
         prev_data=jnp.zeros(dram.LINE_WORDS, dtype=jnp.uint32),
         has_prev=jnp.asarray(False),
         prev_bank=jnp.asarray(-1, dtype=jnp.int32),

@@ -62,7 +62,11 @@ def synth_datasheet_freq_table(i_at_800: float, slope_frac: float = 4.2e-4,
     base = i_at_800 * (1.0 + slope_frac * (f - TARGET_FREQ_MT))
     bend = 1.0 + curvature * ((f - f.mean()) / np.ptp(f)) ** 2
     vals = base * bend * (1.0 + rng.normal(0, 0.004, size=f.shape))
-    return np.round(vals, 0)  # datasheets publish integer mA
+    # datasheets publish integer mA; the small low-power currents (IDD2P0,
+    # IDD6) get half-mA steps, else quantization alone drags the
+    # extrapolation R^2 under the paper's observed floor
+    step = 0.5 if i_at_800 < 18.0 else 1.0
+    return np.round(vals / step) * step
 
 
 def extrapolate_idd_to_800(freq_values: np.ndarray) -> tuple[float, float]:

@@ -10,7 +10,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import dram
-from repro.core.dram import (ACT, PRE, PREA, RD, WR, REF, PDE, NOP,
+from repro.core.dram import (ACT, PRE, PREA, RD, WR, REF, PDE, PDX,
+                             PDE_SLOW, SRE, SRX, NOP,
                              CommandTrace, TIMING, line_from_byte,
                              line_with_n_ones, make_trace, tile_trace)
 
@@ -121,10 +122,34 @@ def idd2p1(reps=4) -> CommandTrace:
                  [_T.tRP, _T.tCKE, IDLE_SLOT * 4], reps)
 
 
+def idd2p0(reps=4) -> CommandTrace:
+    """Slow power-down (DLL off), no banks active."""
+    return _loop([PREA, PDE_SLOW, NOP], [0] * 3, [0] * 3, [0] * 3, [_Z] * 3,
+                 [_T.tRP, _T.tCKE, IDLE_SLOT * 4], reps)
+
+
+def idd3p(reps=4) -> CommandTrace:
+    """Active power-down: bank 0 open at entry, exit through PDX + PREA
+    (ACT is illegal during power-down, so the loop must leave the
+    power-down state before re-activating on the next repetition)."""
+    return _loop([ACT, PDE, NOP, PDX, PREA], [0] * 5, [0] * 5, [0] * 5,
+                 [_Z] * 5,
+                 [_T.tRCD, _T.tCKE, IDLE_SLOT * 8, _T.tXP, _T.tRP], reps)
+
+
+def idd6(reps=4) -> CommandTrace:
+    """Self-refresh: all banks precharged, long dwell, tXS exit."""
+    return _loop([PREA, SRE, NOP, SRX], [0] * 4, [0] * 4, [0] * 4, [_Z] * 4,
+                 [_T.tRP, _T.tCKE, IDLE_SLOT * 8, _T.tXS], reps)
+
+
+# NOTE: new keys are appended at the END so existing campaign probe-key
+# indices (and hence the seeded measurement-noise stream) stay stable.
 IDD_LOOPS = {
     "IDD2N": idd2n, "IDD3N": idd3n, "IDD0": idd0, "IDD1": idd1,
     "IDD4R": idd4r, "IDD4W": idd4w, "IDD7": idd7, "IDD5B": idd5b,
     "IDD2P1": idd2p1,
+    "IDD2P0": idd2p0, "IDD3P": idd3p, "IDD6": idd6,
 }
 
 

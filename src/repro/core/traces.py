@@ -191,18 +191,38 @@ def app_trace(app: AppSpec, n_requests: int = 2000,
         op = RD if rd_seq[i] else WR
         gap = int(gap_seq[i])
         if gap > 128:
-            # long idle: finish the burst, precharge, power down for the gap
+            # long idle: finish the burst, precharge, then spend the gap in
+            # the deepest low-power state whose exit latency the gap can
+            # absorb (fast PDN / slow PDN / self-refresh).  The entry slot
+            # bills at the powered-up rate, the dwell rides on a NOP slot,
+            # and the exit slot is the last one billed at the low-power
+            # rate — the integrator's entry/exit billing semantics.
+            if gap > 2048:
+                entry, exit_cmd, exit_dt = dram.SRE, dram.SRX, _T.tXS
+            elif gap > 512:
+                entry, exit_cmd, exit_dt = dram.PDE_SLOW, dram.PDX, \
+                    _T.tXPDLL
+            else:
+                entry, exit_cmd, exit_dt = dram.PDE, dram.PDX, _T.tXP
             cmds.append(op); banks.append(b); rows.append(r)
             cols.append(int(col_seq[i])); datas.append(lines[i])
             dts.append(_T.tBURST)
             cmds.append(dram.PREA); banks.append(0); rows.append(0)
             cols.append(0); datas.append(zline); dts.append(_T.tRP)
-            cmds.append(dram.PDE); banks.append(0); rows.append(0)
-            cols.append(0); datas.append(zline); dts.append(gap)
-            cmds.append(dram.PDX); banks.append(0); rows.append(0)
+            cmds.append(entry); banks.append(0); rows.append(0)
             cols.append(0); datas.append(zline); dts.append(_T.tCKE)
+            cmds.append(dram.NOP); banks.append(0); rows.append(0)
+            cols.append(0); datas.append(zline); dts.append(gap)
+            cmds.append(exit_cmd); banks.append(0); rows.append(0)
+            cols.append(0); datas.append(zline); dts.append(exit_dt)
             open_row[:] = -1
-            cycles_since_ref += _T.tBURST + _T.tRP + gap + _T.tCKE
+            if entry == dram.SRE:
+                # self-refresh maintains cell charge internally: the
+                # refresh deadline restarts at exit
+                cycles_since_ref = 0.0
+            else:
+                cycles_since_ref += (_T.tBURST + _T.tRP + _T.tCKE + gap
+                                     + exit_dt)
             continue
         dt = _T.tBURST + gap
         cmds.append(op); banks.append(b); rows.append(r)
@@ -290,6 +310,8 @@ def reschedule_refresh(trace: CommandTrace,
         elif c == dram.PREA:
             open_row = [-1] * N_BANKS
         emit(c, b, r, col_l[k], src_l[k], dt_l[k])
+        if c == dram.SRX:
+            since = 0  # self-refresh restarted the deadline internally
         if (c == RD or c == WR) and since >= period:
             emit(dram.PREA, 0, 0, 0, -1, _T.tRP)
             emit(REF, 0, 0, 0, -1, _T.tRFC)
@@ -323,6 +345,9 @@ def refresh_deadline_overshoot(trace: CommandTrace,
         if cmd[i] == REF:
             worst = max(worst, since - period)
             since = 0
+            continue
+        if cmd[i] == dram.SRX:
+            since = 0  # self-refresh maintained the cells internally
             continue
         if cmd[i] == dram.PREA and i + 1 < len(cmd) and cmd[i + 1] == REF:
             continue  # the refresh pair's own slots open the next interval

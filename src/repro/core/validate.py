@@ -108,6 +108,34 @@ def render_surface_heatmap(surface: np.ndarray, title: str = "") -> str:
     return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# Measured vs. datasheet (paper Section 4 / Fig 14)
+# ---------------------------------------------------------------------------
+def measured_over_datasheet(model: Vampire) -> dict[int, dict[str, float]]:
+    """Paper Fig 14: per-vendor measured/datasheet ratio of every IDD key
+    the campaign ran — the low-power keys (IDD2P1, IDD2P0, IDD3P, IDD6)
+    included, which is the figure's headline: the low-power states sit
+    far below their worst-case datasheet values (roughly 50-80% of them),
+    so datasheet-driven models overestimate idle-heavy workloads most."""
+    out: dict[int, dict[str, float]] = {}
+    for v, vc in model.by_vendor.items():
+        out[v] = {k: float(np.mean(vc.idd_measured[k])) / ds
+                  for k, ds in vc.idd_datasheet.items()
+                  if k in vc.idd_measured and ds > 0}
+    return out
+
+
+def render_fig14_table(ratios: dict[int, dict[str, float]]) -> str:
+    """ASCII rendering of the Fig 14 ratios, one row per IDD key."""
+    vendors = sorted(ratios)
+    keys = [k for k in ratios[vendors[0]]]
+    lines = ["IDD key   " + " ".join(f"  {'ABC'[v]}  " for v in vendors)]
+    for k in keys:
+        lines.append(f"{k:8s} " + " ".join(
+            f"{ratios[v].get(k, float('nan')):5.2f}" for v in vendors))
+    return "\n".join(lines)
+
+
 def select_validation_modules(fleet_modules=None, seed: int = 42):
     fleet_modules = (device_sim.make_fleet() if fleet_modules is None
                      else fleet_modules)

@@ -10,7 +10,10 @@ cell it reads one (1, BLOCK) slab of per-command planes plus this vendor's
 (1, K) IDD row and writes one masked partial charge sum.
 
 IDD row layout follows ``baselines_power.BASELINE_IDD_KEYS``:
-``(IDD0, IDD2N, IDD2P1, IDD3N, IDD4R, IDD4W, IDD5B)``.
+``(IDD0, IDD2N, IDD2P1, IDD3N, IDD4R, IDD4W, IDD5B, IDD2P0, IDD3P,
+IDD6)`` — the low-power keys appended at the end.  The ``pd`` plane
+carries the background-state code (``energy_model.BG_*``: 0 active,
+1 fast PDN, 2 slow PDN, 3 active PDN, 4 self-refresh) as f32.
 """
 from __future__ import annotations
 
@@ -37,18 +40,26 @@ def _masked_charge(kind: str, dt, is_rd, is_wr, is_act, is_ref, open_banks,
     in mA*cycles."""
     idd0, idd2n, idd2p1, idd3n = idd[0], idd[1], idd[2], idd[3]
     idd4r, idd4w, idd5b = idd[4], idd[5], idd[6]
+    idd2p0, idd3p, idd6 = idd[7], idd[8], idd[9]
+
+    # state-code LUT over the ``pd`` plane — the kernel twin of
+    # ``baselines_power._bg_lut``
+    i_low = jnp.where(pd == 1.0, idd2p1,
+                      jnp.where(pd == 2.0, idd2p0,
+                                jnp.where(pd == 3.0, idd3p, idd6)))
+    active = (pd == 0.0).astype(jnp.float32)
 
     burst = jnp.minimum(dt, float(_T.tBURST))
     q_act = act_pair_charge(idd0, idd2n, idd3n)
     if kind == "micron":
         # worst-case background, spec-rate ACT/PRE, RD/WR stacked on top
-        i_bg = jnp.where(pd > 0, idd2p1, idd3n)
+        i_bg = jnp.where(pd == 0.0, idd3n, i_low)
         charge = i_bg * dt
-        charge = charge + (1.0 - pd) * any_act * q_act * dt / _T.tRC
+        charge = charge + active * any_act * q_act * dt / _T.tRC
         charge = charge + is_rd * idd4r * burst + is_wr * idd4w * burst
     else:                             # drampower: actual timing
         i_bg = jnp.where(
-            pd > 0, idd2p1, idd2n + (idd3n - idd2n) * open_banks / 8.0)
+            pd == 0.0, idd2n + (idd3n - idd2n) * open_banks / 8.0, i_low)
         charge = i_bg * dt
         charge = charge + is_act * q_act
         charge = charge + is_rd * (idd4r - i_bg) * burst

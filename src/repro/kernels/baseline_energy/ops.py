@@ -30,7 +30,7 @@ def _charge_matrix(trace: CommandTrace, weight, table, kind: str,
         "is_act": (trace.cmd == ACT).astype(jnp.float32),
         "is_ref": (trace.cmd == REF).astype(jnp.float32),
         "open_banks": jnp.sum(st.open_before.astype(jnp.float32), axis=2),
-        "pd": st.powered_down.astype(jnp.float32),
+        "pd": st.bg_state.astype(jnp.float32),
         "w": weight.astype(jnp.float32),
     }
     any_act = jnp.any(trace.cmd == ACT, axis=1).astype(jnp.float32)

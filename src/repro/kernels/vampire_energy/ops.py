@@ -70,7 +70,7 @@ def _charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
         "is_rw": st.is_rw.astype(jnp.float32),
         "is_act": (trace.cmd == ACT).astype(jnp.float32),
         "is_ref": (trace.cmd == REF).astype(jnp.float32),
-        "pd": st.powered_down.astype(jnp.float32),
+        "pd": st.bg_state.astype(jnp.float32),
         "row_ones": st.row_ones.astype(jnp.float32),
         "w": weight.astype(jnp.float32),
         "surf": surf.astype(jnp.float32),                        # (V, T, N)

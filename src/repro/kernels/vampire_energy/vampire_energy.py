@@ -52,15 +52,18 @@ BLOCK_N = 512
 LINE_BITS = 512.0
 _T_BURST = float(TIMING.tBURST)
 
-# layout of the packed per-vendor scalar row (see pack_param_blocks)
+# layout of the packed per-vendor scalar row (see pack_param_blocks);
+# the low-power LUT entries are appended at the END so the first eight
+# slots keep their historical positions
 _SCAL_FIELDS = ("i2n", "q_actpre", "row_ones_slope", "q_ref", "i_pd",
-                "io_read_ma_per_one", "io_write_ma_per_zero", "ones_quad")
+                "io_read_ma_per_one", "io_write_ma_per_zero", "ones_quad",
+                "i_pd_slow", "i_actpd", "i_sr")
 
 
 def pack_param_blocks(stacked):
     """Pack a stacked (leading vendor axis) ``PowerParams`` into the three
     fixed-shape blocks the energy kernel tiles over the vendor grid axis:
-    ``coeffs (V,4,2,3)``, ``scal (V,8)`` (order ``_SCAL_FIELDS``), and
+    ``coeffs (V,4,2,3)``, ``scal (V,11)`` (order ``_SCAL_FIELDS``), and
     ``bvec (V,3,8)`` (open-bank delta, read factor, write factor)."""
     coeffs = stacked.datadep.astype(jnp.float32)
     scal = jnp.stack([getattr(stacked, f).astype(jnp.float32)
@@ -126,10 +129,17 @@ def _masked_charge(ones, togg, op, mode, dt, is_rw, is_act, is_ref, pd,
     (B,) charge vector in mA*cycles."""
     i2n, q_actpre, slope, q_ref_chg = scal[0], scal[1], scal[2], scal[3]
     i_pd, io_r, io_w, ones_quad = scal[4], scal[5], scal[6], scal[7]
+    i_pd_slow, i_actpd, i_sr = scal[8], scal[9], scal[10]
 
-    # background current from the bank/power-down state
+    # background current from the bank state and the background-state code
+    # carried in the ``pd`` plane (energy_model.BG_*: 0 active, 1 fast PDN,
+    # 2 slow PDN, 3 active PDN, 4 self-refresh) — the kernel twin of
+    # ``energy_model.background_current``
     bg_delta = jnp.sum(open_t * bvec[0][:, None], axis=0)        # (B,)
-    i_bg = jnp.where(pd > 0, i_pd, i2n + bg_delta)
+    i_low = jnp.where(pd == 1.0, i_pd,
+                      jnp.where(pd == 2.0, i_pd_slow,
+                                jnp.where(pd == 3.0, i_actpd, i_sr)))
+    i_bg = jnp.where(pd == 0.0, i2n + bg_delta, i_low)
 
     # paper Eq. 2: masked (mode, op) coefficient select + quad curvature
     cur = jnp.zeros_like(ones)
@@ -211,7 +221,8 @@ def batched_energy_pallas(feats: dict, coeffs, scal, bvec,
     spec_surf = pl.BlockSpec((1, 1, block_n), lambda v, t, i: (v, t, i))
     spec_8 = pl.BlockSpec((1, 8, block_n), lambda v, t, i: (t, 0, i))
     param_specs = [pl.BlockSpec((1, 4, 2, 3), lambda v, t, i: (v, 0, 0, 0)),
-                   pl.BlockSpec((1, 8), lambda v, t, i: (v, 0)),
+                   pl.BlockSpec((1, len(_SCAL_FIELDS)),
+                                lambda v, t, i: (v, 0)),
                    pl.BlockSpec((1, 3, 8), lambda v, t, i: (v, 0, 0))]
     args = [padded[n] for n in FEATURE_PLANES] + [padded["surf"]]
     if cell_t is None:

@@ -15,7 +15,8 @@ import pytest
 pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 from repro.core import device_sim, dram, estimate_batch, idd_loops, traces
-from repro.core.dram import ACT, PDE, PDX, PRE, PREA, RD, WR, TIMING
+from repro.core.dram import (ACT, NOP, PDE, PDE_SLOW, PDX, PRE, PREA, RD,
+                             SRE, SRX, WR, TIMING)
 from repro.core.energy_model import (trace_energy_scan,
                                      trace_energy_vectorized)
 
@@ -34,12 +35,27 @@ def _pde_trace():
          _T.tRCD, _T.tBURST, _T.tRP])
 
 
+def _lowpower_trace():
+    """Slow power-down and self-refresh windows mid-trace (the background
+    states the original PDE/PDX fixture cannot reach)."""
+    return dram.make_trace(
+        [ACT, RD, PREA, PDE_SLOW, NOP, PDX, SRE, NOP, SRX, ACT, WR, PRE],
+        [0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1],
+        [5, 5, 0, 0, 0, 0, 0, 0, 0, 2, 2, 0],
+        [0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 3, 0],
+        None,
+        [_T.tRCD, _T.tBURST, _T.tRP, _T.tCKE, 250, _T.tXPDLL,
+         _T.tCKE, 800, _T.tXS, _T.tRCD, _T.tBURST, _T.tRP])
+
+
 def _ragged_traces():
     trs = [traces.app_trace(traces.SPEC_APPS[i], n_requests=n)
            for i, n in ((0, 120), (3, 220), (7, 60))]
     trs.append(idd_loops.idd2p1())          # power-down loop
+    trs.append(idd_loops.idd6())            # self-refresh loop
     trs.append(idd_loops.validation_sweep(16))
     trs.append(_pde_trace())                # PDE/PDX mid-trace
+    trs.append(_lowpower_trace())           # slow PDN + SR mid-trace
     return trs
 
 

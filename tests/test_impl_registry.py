@@ -11,7 +11,8 @@ import pytest
 
 from repro.core import dram, idd_loops, model_api, traces
 from repro.core.baselines_power import DRAMPowerModel, MicronModel
-from repro.core.dram import ACT, PDE, PDX, PRE, PREA, RD, WR, TIMING
+from repro.core.dram import (ACT, NOP, PDE, PDE_SLOW, PDX, PRE, PREA, RD,
+                             SRE, SRX, WR, TIMING)
 from repro.kernels import common as kcommon
 
 _T = TIMING
@@ -32,12 +33,40 @@ def _pde_trace():
          _T.tRCD, _T.tBURST, _T.tRP])
 
 
+def _lowpower_trace():
+    """Every background state in one trace: fast PDN, slow PDN (DLL off),
+    active PDN (bank open across the window), and self-refresh."""
+    return dram.make_trace(
+        [ACT, RD, PREA, PDE, NOP, PDX,
+         PDE_SLOW, NOP, PDX,
+         ACT, PDE, NOP, PDX, PREA,
+         SRE, NOP, SRX, ACT, WR, PRE],
+        [0, 0, 0, 0, 0, 0,
+         0, 0, 0,
+         3, 3, 3, 3, 3,
+         0, 0, 0, 1, 1, 1],
+        [5, 5, 0, 0, 0, 0,
+         0, 0, 0,
+         9, 9, 9, 9, 0,
+         0, 0, 0, 2, 2, 0],
+        [0, 1, 0, 0, 0, 0,
+         0, 0, 0,
+         0, 0, 0, 0, 0,
+         0, 0, 0, 0, 3, 0],
+        None,
+        [_T.tRCD, _T.tBURST, _T.tRP, _T.tCKE, 120, _T.tXP,
+         _T.tCKE, 300, _T.tXPDLL,
+         _T.tRCD, _T.tCKE, 180, _T.tXP, _T.tRP,
+         _T.tCKE, 900, _T.tXS, _T.tRCD, _T.tBURST, _T.tRP])
+
+
 @pytest.fixture(scope="module")
 def ragged():
     trs = [traces.app_trace(traces.SPEC_APPS[i], n_requests=n)
            for i, n in ((0, 90), (4, 150))]
     trs.append(idd_loops.validation_sweep(24))
     trs.append(_pde_trace())
+    trs.append(_lowpower_trace())
     return trs
 
 

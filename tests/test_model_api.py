@@ -355,6 +355,14 @@ def test_v1_pickle_migrates_with_warning(quick_vampire, ragged_traces,
                 np.testing.assert_array_equal(np.asarray(a),
                                               np.ones_like(np.asarray(a)))
                 continue
+            if name in ("i_pd_slow", "i_actpd", "i_sr"):
+                # the v1 format also predates the background-state
+                # lattice: migrated models fall back to the fast
+                # power-down current for the deeper states
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(migrated.params(v).i_pd),
+                    err_msg=f"vendor {v} leaf {name}")
+                continue
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                           err_msg=f"vendor {v} leaf {name}")
         assert migrated.variation_band[v] == quick_vampire.variation_band[v]
