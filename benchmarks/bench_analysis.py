@@ -1,0 +1,94 @@
+"""Batched vs reference linter throughput (ours): the JEDEC trace linter
+must stay cheap enough to run on every generator construction and on every
+serving ingestion, so this benchmark times the jitted batched engine
+against the per-command Python reference walk over a (traces x commands)
+grid and emits the ``BENCH_analysis.json`` artifact the regression gate
+checks.  The gated ratio is a collapse guard: on CPU the vectorized
+engine roughly matches the lean single-pass Python walk (the 8-bank
+cummax tables are memory-bound), but a shape-unstable dispatch that
+recompiles per call — or a silent fallback to per-trace serial linting —
+drops the ratio by one to two orders of magnitude."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import ARTIFACTS, row
+from repro.analysis import trace_lint
+from repro.core import idd_loops, traces
+
+ARTIFACT = os.path.join(ARTIFACTS, "BENCH_analysis.json")
+
+#: (n_traces, approx commands per trace) measurement grid
+GRID = [(8, 128), (32, 512), (64, 2048)]
+
+
+def _fleet(n_traces: int, n_commands: int):
+    """Ragged lint corpus around the requested command count."""
+    out = []
+    for i in range(n_traces):
+        app = traces.SPEC_APPS[i % len(traces.SPEC_APPS)]
+        # ~2 commands per request (ACT/RD/PRE amortized + refresh)
+        tr = traces.app_trace(app, n_requests=max(n_commands // 2, 4))
+        out.append(tr)
+    return out
+
+
+def run() -> list[str]:
+    rows, grids = [], []
+    for n_traces, n_commands in GRID:
+        trs = _fleet(n_traces, n_commands)
+        total_cmds = sum(int(t.n) for t in trs)
+
+        t0 = time.perf_counter()
+        diags = trace_lint.lint_traces(trs)   # compile + first run
+        cold_s = time.perf_counter() - t0
+        batched_s = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            diags = trace_lint.lint_traces(trs)
+            batched_s = min(batched_s, time.perf_counter() - t0)
+
+        # reference walk over a subsample (the full grid would dominate
+        # bench wall-clock), scaled to the fleet size
+        sample = trs[:max(len(trs) // 8, 1)]
+        t0 = time.perf_counter()
+        ref_diags = []
+        for i, tr in enumerate(sample):
+            ref_diags.extend(trace_lint.reference_lint(tr, trace_index=i))
+        reference_s = (time.perf_counter() - t0) * (len(trs) / len(sample))
+
+        # both engines agree the fleet is clean (generators self-check)
+        assert diags == [] and ref_diags == []
+
+        speedup = reference_s / batched_s
+        grids.append({
+            "n_traces": n_traces,
+            "commands_per_trace": n_commands,
+            "total_commands": total_cmds,
+            "batched_s": batched_s,
+            "batched_cold_s": cold_s,
+            "reference_s": reference_s,
+            "batched_commands_per_s": total_cmds / batched_s,
+            "batched_speedup_vs_reference": speedup,
+        })
+        rows.append(row(
+            f"analysis.lint[{n_traces}x{n_commands}]", batched_s * 1e6,
+            f"cmds={total_cmds};cmds_per_s={total_cmds/batched_s:.0f};"
+            f"speedup_vs_reference={speedup:.1f}x"))
+
+    blob = {
+        "bench": "analysis",
+        "n_rules": len(trace_lint.RULES),
+        "grids": grids,
+        "batched_speedup_vs_reference": min(
+            g["batched_speedup_vs_reference"] for g in grids),
+    }
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(blob, f, indent=2)
+    rows[-1] += ";artifact=BENCH_analysis.json"
+    return rows

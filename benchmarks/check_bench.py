@@ -62,6 +62,14 @@ CHECKS: dict[str, tuple[RatioCheck, ...]] = {
     "BENCH_structural.json": (
         RatioCheck(("surface_speedup_vs_python_sweep",), floor=3.0),
     ),
+    "BENCH_analysis.json": (
+        # the jitted batched linter vs the per-command Python reference
+        # walk.  On CPU CI the vectorized engine only roughly matches the
+        # lean Python walk (healthy ~0.5-1.0; accelerators pull well
+        # ahead), so the bar is a COLLAPSE guard: a per-call recompile or
+        # a serialized per-trace fallback drops this ratio by 10-100x.
+        RatioCheck(("batched_speedup_vs_reference",), floor=0.15),
+    ),
     "BENCH_idd.json": (
         # Section 4 / Fig 14 physics, hardware-independent by construction:
         # frequency extrapolation must stay a good fit (paper worst R^2 =
@@ -130,11 +138,56 @@ def check_artifact(name: str, fresh: dict, baseline: dict | None,
     return failures
 
 
+def validate_baselines(baseline_dir: str,
+                       checks: dict[str, tuple[RatioCheck, ...]] = CHECKS
+                       ) -> list[str]:
+    """Schema-validate the committed baseline snapshots themselves, so a
+    malformed or orphaned baseline fails the gate loudly instead of
+    silently disabling its relative bar (a missing/unparseable baseline
+    would otherwise just fall back to the absolute floor)."""
+    failures = []
+    import glob
+    for path in sorted(glob.glob(os.path.join(baseline_dir,
+                                              "BENCH_*.json"))):
+        name = os.path.basename(path)
+        if name not in checks:
+            failures.append(f"{name}: committed baseline has no CHECKS "
+                            f"entry (add its gated ratios or delete it)")
+            continue
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+        except (OSError, ValueError) as exc:
+            failures.append(f"{name}: baseline unreadable: {exc}")
+            continue
+        if not isinstance(blob, dict):
+            failures.append(f"{name}: baseline root is "
+                            f"{type(blob).__name__}, expected object")
+            continue
+        for chk in checks[name]:
+            label = f"{name}:{'.'.join(chk.path)}"
+            if chk.applies_if is not None:
+                try:
+                    if not bool(lookup(blob, chk.applies_if)):
+                        continue
+                except (KeyError, IndexError, TypeError):
+                    pass  # missing flag: still require the metric
+            try:
+                value = float(lookup(blob, chk.path))
+            except (KeyError, IndexError, TypeError, ValueError):
+                failures.append(f"{label}: baseline metric missing or "
+                                f"non-numeric")
+                continue
+            if not (value == value and abs(value) != float("inf")):
+                failures.append(f"{label}: baseline metric is {value}")
+    return failures
+
+
 def run_gate(fresh_dir: str, baseline_dir: str,
              checks: dict[str, tuple[RatioCheck, ...]] = CHECKS
              ) -> list[str]:
     """All failure messages across the artifact set."""
-    failures = []
+    failures = validate_baselines(baseline_dir, checks)
     for name, artifact_checks in sorted(checks.items()):
         fresh_path = os.path.join(fresh_dir, name)
         base_path = os.path.join(baseline_dir, name)

@@ -15,10 +15,10 @@ import time
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 CACHE = os.path.join(ARTIFACTS, "vampire_fit.npz")
 FIT_KW = dict(probe_modules=5, probe_reps=128, n_rows=16)
-# v6: the background-state lattice (low-power IDD loops + i_pd_slow/
-# i_actpd/i_sr leaves) changed the fitted state — pre-lattice caches
-# must refit
-_CACHE_META = {"cache": "bench-fit", "rev": "v6", "engine": "batched",
+# v7: the protocol linter forced legal IDD3N/IDD7 schedules (shared
+# all-banks setup, staggered precharges), so the probe traces — and with
+# them the fitted state — changed; pre-linter caches must refit
+_CACHE_META = {"cache": "bench-fit", "rev": "v7", "engine": "batched",
                "fit_kw": {k: int(v) for k, v in sorted(FIT_KW.items())}}
 
 _model = None

@@ -23,6 +23,7 @@ MODULES = [
     ("estimate", "benchmarks.bench_estimate"),          # ours (PR 2)
     ("model_api", "benchmarks.bench_model_api"),        # ours (PR 3)
     ("kernels", "benchmarks.bench_kernels"),            # ours (PR 4)
+    ("analysis", "benchmarks.bench_analysis"),          # ours (PR 7)
     ("roofline", "benchmarks.bench_roofline"),          # deliverable (g)
 ]
 

@@ -103,6 +103,26 @@ def main():
             validate.measured_over_datasheet(model)).splitlines():
         print(f"    {line}")
 
+    print("== 3e. the protocol linter: every trace is JEDEC-checked ==")
+    # Every generator self-checks through repro.analysis.trace_lint (21
+    # declarative JEDEC rules — tRCD/tRP/tRAS, tFAW, bank & background
+    # state, refresh cadence), and serving ingestion rejects illegal
+    # traces with structured diagnostics:
+    from repro.analysis import trace_lint
+    from repro.core import dram
+    legal = idd_loops.idd0(reps=4)
+    print(f"  idd0 loop: {len(trace_lint.lint_trace(legal))} violations")
+    rushed = dram.CommandTrace(legal.cmd, legal.bank, legal.row, legal.col,
+                               legal.data,
+                               legal.dt.at[0].set(2))  # ACT->PRE in 2 cyc
+    try:
+        trace_lint.check_generated(rushed, "quickstart")
+    except trace_lint.TraceProtocolError as e:
+        d = e.diagnostics[0]
+        print(f"  corrupted copy rejected: rule={d.rule} "
+              f"command #{d.cmd_index} bank {d.bank} "
+              f"(short by {d.margin} cycles)")
+
     print("== 4. validation vs baselines (paper Fig 24) ==")
     res = run_validation(model, fleet=fleet,
                          n_values=(0, 2, 8, 32, 128, 512, 764))

@@ -1,0 +1,22 @@
+"""Static verification layer: trace protocol linting, compile-time dispatch
+auditing, and repo-invariant AST linting.
+
+Three passes, all runnable as ``python -m repro.analysis`` (the CI gate):
+
+* :mod:`repro.analysis.trace_lint` — a declarative JEDEC-style timing/state
+  rule engine over :class:`~repro.core.dram.CommandTrace`; every trace
+  producer in the repo (IDD loops, ``app_trace``, encodings, the power-down
+  policy) and the serving ingestion path run it.
+* :mod:`repro.analysis.dispatch_audit` — walks the jaxpr / lowered HLO of
+  every registered (estimator kind x impl x mode) dispatch and flags
+  float64 promotion, host callbacks, missing pad-row masking, and jit
+  recompilation hazards.
+* :mod:`repro.analysis.repo_lint` — an AST pass enforcing the Model API
+  invariants the ROADMAP states in prose (no deprecated-shim calls, impls
+  declare their modes, call-time ``interpret_default()``, serialization
+  schema covers every ``PowerParams`` field).
+"""
+from repro.analysis.trace_lint import (Diagnostic, TimingRule,  # noqa: F401
+                                       TraceProtocolError, check_generated,
+                                       lint_batch, lint_trace, lint_traces,
+                                       reference_lint)

@@ -1,0 +1,123 @@
+"""``python -m repro.analysis`` — the static-analysis CI gate.
+
+Runs the three passes over a representative corpus and exits non-zero on
+any ERROR finding:
+
+1. **trace lint** — every generator in the repo (IDD loops, probes,
+   validation sweeps, SPEC application traces, encoded traces,
+   power-down policy traces) linted against the full JEDEC rule set
+   with the batched engine;
+2. **dispatch audit** — every registered (estimator kind x impl x mode)
+   combination traced + lowered and checked for float64 promotion, host
+   callbacks, dead pad-masking, and recompilation hazards;
+3. **repo lint** — the AST invariants over ``src/repro``.
+
+Pass ``--skip-dispatch`` to run only the cheap static passes (the
+dispatch audit fits a quick model and jit-compiles every combination,
+which dominates the runtime).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _corpus():
+    """(label, CommandTrace) pairs covering every generator family."""
+    import numpy as np
+
+    from repro.core import applications, dram, encodings, idd_loops, traces
+
+    out = []
+
+    def add(label, obj):
+        # several generators return (trace, skip) pairs
+        tr = obj if isinstance(obj, dram.CommandTrace) else obj[0]
+        out.append((label, tr))
+
+    for name, fn in idd_loops.IDD_LOOPS.items():
+        add(f"idd_loops.{name}", fn())
+    add("idd_loops.ones_sweep_point(8)", idd_loops.ones_sweep_point(8))
+    add("idd_loops.interleave_sweep_point",
+        idd_loops.interleave_sweep_point(
+            np.zeros(dram.LINE_WORDS, np.uint32),
+            np.full(dram.LINE_WORDS, 0xFFFFFFFF, np.uint32), "bankcol"))
+    add("idd_loops.bank_idle_probe(3)", idd_loops.bank_idle_probe(3))
+    add("idd_loops.bank_read_probe(5)", idd_loops.bank_read_probe(5))
+    add("idd_loops.row_act_probe(7)", idd_loops.row_act_probe(7))
+    add("idd_loops.column_read_probe(9)", idd_loops.column_read_probe(9))
+    for n in (0, 1, 4, 16):
+        add(f"idd_loops.validation_sweep({n})",
+            idd_loops.validation_sweep(n))
+
+    apps = {}
+    for app in traces.SPEC_APPS:
+        tr = traces.app_trace(app, n_requests=256)
+        apps[app.name] = tr
+        add(f"traces.app_trace({app.name})", tr)
+
+    demo = apps[traces.SPEC_APPS[3].name]
+    for enc in encodings.ENCODINGS:
+        add(f"encodings.encode_trace({enc})",
+            encodings.encode_trace(demo, enc))
+    for timeout in (32, 256):
+        add(f"applications.apply_powerdown_policy(t={timeout})",
+            applications.apply_powerdown_policy(demo, timeout))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--skip-dispatch", action="store_true",
+                    help="skip the (slow) compile-time dispatch audit")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import dispatch_audit, repo_lint, trace_lint
+
+    n_errors = 0
+
+    corpus = _corpus()
+    diags = trace_lint.lint_traces([tr for _, tr in corpus])
+    labels = [label for label, _ in corpus]
+    errs = trace_lint.errors_of(diags)
+    n_errors += len(errs)
+    for d in diags:
+        stream = sys.stderr if d.severity == trace_lint.ERROR else sys.stdout
+        print(f"trace_lint[{labels[d.trace_index]}]: {d}", file=stream)
+    print(f"trace lint: {len(corpus)} traces, "
+          f"{len(errs)} errors, {len(diags) - len(errs)} warnings")
+
+    if not args.skip_dispatch:
+        from repro.core import vampire as V
+        findings = dispatch_audit.audit_all(V.reference_vampire())
+        errs = dispatch_audit.errors_of(findings)
+        n_errors += len(errs)
+        for f in findings:
+            print(f"dispatch_audit: {f}",
+                  file=sys.stderr if f.severity == dispatch_audit.ERROR
+                  else sys.stdout)
+        print(f"dispatch audit: {len(errs)} errors, "
+              f"{len(findings) - len(errs)} warnings")
+    else:
+        print("dispatch audit: skipped")
+
+    findings = repo_lint.run_repo_lint()
+    errs = repo_lint.errors_of(findings)
+    n_errors += len(errs)
+    for f in findings:
+        print(f"repo_lint: {f}",
+              file=sys.stderr if f.severity == repo_lint.ERROR
+              else sys.stdout)
+    print(f"repo lint: {len(errs)} errors, "
+          f"{len(findings) - len(errs)} warnings")
+
+    if n_errors:
+        print(f"FAILED: {n_errors} error(s)", file=sys.stderr)
+        return 1
+    print("analysis clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

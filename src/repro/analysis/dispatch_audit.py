@@ -1,0 +1,305 @@
+"""Compile-time dispatch auditor: prove every registered (estimator kind x
+impl x mode) combination is jit-clean WITHOUT running the integrator.
+
+For each combination the auditor traces the ``estimate`` dispatch to a
+jaxpr and lowers it to StableHLO text (the same artifact
+``launch/hlo_analysis.py`` mines for cost totals), then checks:
+
+* **float64 promotion** — no ``f64``/``c128`` buffers anywhere in the
+  lowered module: the energy pipeline is a float32 contract end to end,
+  and a stray Python float in the wrong place silently doubles every
+  buffer;
+* **host callbacks** — no ``pure_callback`` / ``io_callback`` / debug
+  primitives inside the traced dispatch: a host round-trip per call would
+  serialize the batched engine;
+* **pad-row masking** — the :class:`~repro.core.estimate_batch.TraceBatch`
+  validity ``weight`` must survive dead-code elimination, i.e. the
+  result really depends on the mask (a dispatch that drops it bills
+  padding rows);
+* **recompilation hazards** — repeated calls, same-shape re-pads of a
+  different ragged trace set, and equal-size vendor subsets must hit the
+  jit cache of the shared batched dispatchers (``_cache_size`` growth
+  probes, generalizing the PR 3 regression test into a pass).
+
+Findings are structured (:class:`AuditFinding`); ``python -m
+repro.analysis`` fails the CI gate on any ERROR severity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+ERROR = "error"
+WARNING = "warning"
+
+#: substrings of primitive names that imply a host round-trip
+_CALLBACK_MARKERS = ("callback", "outside_call", "infeed", "outfeed",
+                    "debug_print")
+
+# HLO spells the dtype inside the shape ("tensor<4xf64>"), so a plain \b
+# never fires after the 'x' — accept either a word boundary or that 'x'.
+_F64_RE = re.compile(r"(?:\b|x)(?:f64|c128)\b")
+
+#: impls whose batched dispatch consumes the padded batch directly and must
+#: therefore consume the validity mask (the reference oracle instead slices
+#: per ragged trace, where a dt=0 NOP pad row is exact by construction)
+_MASKED_IMPLS = ("vectorized", "pallas")
+
+_MODES = ("mean", "range", "distribution", "surface")
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditFinding:
+    """One dispatch-audit diagnostic."""
+    kind: str       # estimator kind ('vampire' | 'micron' | 'drampower')
+    impl: str       # registry impl name
+    mode: str       # estimate mode
+    check: str      # 'float64' | 'host_callback' | 'pad_masking' |
+                    # 'recompile' | 'audit_trace'
+    severity: str   # 'error' | 'warning'
+    detail: str
+
+    def __str__(self):  # pragma: no cover - formatting
+        return (f"[{self.severity.upper()}] {self.check}: "
+                f"kind={self.kind} impl={self.impl} mode={self.mode} — "
+                f"{self.detail}")
+
+
+def errors_of(findings: Iterable[AuditFinding]) -> list[AuditFinding]:
+    return [f for f in findings if f.severity == ERROR]
+
+
+# ---------------------------------------------------------------------------
+# Shared probe inputs
+# ---------------------------------------------------------------------------
+def default_audit_batch():
+    """A small heterogeneous TraceBatch (real padding rows present, so the
+    pad-masking check is not vacuous)."""
+    from repro.core import idd_loops, traces
+    from repro.core.estimate_batch import TraceBatch
+    trs = [idd_loops.idd0(reps=4),
+           idd_loops.idd4r(reps=2),
+           traces.app_trace(traces.SPEC_APPS[0], n_requests=24)]
+    return TraceBatch.from_traces(trs)
+
+
+def _estimate_fn(model, impl: str, mode: str) -> Callable:
+    """The (trace, weight) -> report function the audit traces: exactly the
+    production dispatch, model params closed over as constants."""
+    from repro.core.estimate_batch import TraceBatch
+
+    def fn(trace, weight):
+        kwargs = {}
+        if mode == "distribution":
+            kwargs = dict(ones_frac=0.5, toggle_frac=0.25)
+        return model.estimate(TraceBatch(trace, weight), mode=mode,
+                              impl=impl, **kwargs)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# jaxpr helpers
+# ---------------------------------------------------------------------------
+def _iter_jaxprs(jaxpr):
+    """The jaxpr and every sub-jaxpr reachable through equation params
+    (pjit bodies, scan/while carries, cond branches, pallas kernels)."""
+    import jax.extend as jex  # noqa: F401  (presence varies by version)
+    seen = []
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        seen.append(j)
+        for eqn in j.eqns:
+            for val in eqn.params.values():
+                for sub in _as_jaxprs(val):
+                    stack.append(sub)
+    return seen
+
+
+def _as_jaxprs(val):
+    out = []
+    vals = val if isinstance(val, (list, tuple)) else (val,)
+    for v in vals:
+        inner = getattr(v, "jaxpr", None)
+        if inner is not None and hasattr(inner, "eqns"):
+            out.append(inner)          # ClosedJaxpr
+        elif hasattr(v, "eqns") and hasattr(v, "invars"):
+            out.append(v)              # raw Jaxpr
+    return out
+
+
+def _primitive_names(jaxpr) -> set[str]:
+    return {eqn.primitive.name for j in _iter_jaxprs(jaxpr)
+            for eqn in j.eqns}
+
+
+def _dce_used_invars(jaxpr) -> list[bool] | None:
+    """Which top-level invars survive DCE (None when the partial-eval API
+    is unavailable in this jax version — callers then skip the check
+    rather than report a false positive)."""
+    try:
+        from jax._src.interpreters import partial_eval as pe
+        _, used = pe.dce_jaxpr(jaxpr, [True] * len(jaxpr.outvars))
+        return list(used)
+    except Exception:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# The per-combination audit
+# ---------------------------------------------------------------------------
+def audit_combination(model, impl: str, mode: str,
+                      tb=None) -> list[AuditFinding]:
+    """Trace + lower one (kind, impl, mode) dispatch and run the static
+    checks. Returns findings (empty when clean)."""
+    import jax
+
+    if tb is None:
+        tb = default_audit_batch()
+    kind = model.kind
+    fn = _estimate_fn(model, impl, mode)
+    findings: list[AuditFinding] = []
+
+    try:
+        closed = jax.make_jaxpr(fn)(tb.trace, tb.weight)
+    except Exception as exc:  # infra failure, not a verified dispatch bug
+        return [AuditFinding(kind, impl, mode, "audit_trace", ERROR,
+                             f"dispatch failed to trace: {exc!r}")]
+
+    prims = _primitive_names(closed.jaxpr)
+    hits = sorted(p for p in prims
+                  if any(m in p for m in _CALLBACK_MARKERS))
+    if hits:
+        findings.append(AuditFinding(
+            kind, impl, mode, "host_callback", ERROR,
+            f"host-callback primitives in traced dispatch: {hits}"))
+
+    if impl in _MASKED_IMPLS:
+        used = _dce_used_invars(closed.jaxpr)
+        if used is not None and not used[-1]:  # weight flattens last
+            findings.append(AuditFinding(
+                kind, impl, mode, "pad_masking", ERROR,
+                "the TraceBatch validity weight is dead code: padding "
+                "rows would be billed as real commands"))
+
+    try:
+        text = jax.jit(fn).lower(tb.trace, tb.weight).as_text()
+    except Exception as exc:
+        findings.append(AuditFinding(
+            kind, impl, mode, "audit_trace", WARNING,
+            f"dispatch traced but failed to lower: {exc!r}"))
+        return findings
+
+    m = _F64_RE.search(text)
+    if m:
+        findings.append(AuditFinding(
+            kind, impl, mode, "float64", ERROR,
+            f"lowered HLO contains {m.group(0)} buffers (float32 contract "
+            f"violated)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Recompilation-hazard probes (vectorized impl: the @jax.jit dispatchers)
+# ---------------------------------------------------------------------------
+def _mode_dispatcher(mode: str):
+    from repro.core import estimate_batch as EB
+    return {"mean": EB.batched_reports,
+            "range": EB.batched_range_reports,
+            "distribution": EB.batched_distribution_reports,
+            "surface": EB.batched_surface_reports}[mode]
+
+
+def audit_recompilation(model, modes: Sequence[str] = _MODES,
+                        tb=None, tb_same_shape=None) -> list[AuditFinding]:
+    """Drive the production ``estimate`` path and assert the shared jitted
+    dispatchers stop compiling once warm: repeated calls, a same-shape
+    re-pad of a DIFFERENT ragged trace set, and equal-size vendor subsets
+    must all hit the cache."""
+    if tb is None:
+        tb = default_audit_batch()
+    if tb_same_shape is None:
+        from repro.core import dram
+        from repro.core.estimate_batch import TraceBatch
+        # different ragged content, identical padded shape
+        perm = list(range(tb.n_traces))[::-1]
+        import jax
+        trace = jax.tree_util.tree_map(lambda x: x[np.asarray(perm)],
+                                       tb.trace)
+        tb_same_shape = TraceBatch(trace, tb.weight[np.asarray(perm)])
+    kind = model.kind
+    vendors = list(model.vendors)
+    findings: list[AuditFinding] = []
+
+    for mode in modes:
+        fn = _mode_dispatcher(mode)
+        kwargs = ({"ones_frac": 0.5, "toggle_frac": 0.25}
+                  if mode == "distribution" else {})
+
+        def call(batch, vs):
+            model.estimate(batch, vs, mode=mode, impl="vectorized",
+                           **kwargs)
+
+        call(tb, vendors)                       # warm
+        base = fn._cache_size()
+        call(tb, vendors)                       # repeat: must hit
+        if fn._cache_size() != base:
+            findings.append(AuditFinding(
+                kind, "vectorized", mode, "recompile", ERROR,
+                "repeated estimate over an identical TraceBatch "
+                "recompiled the batched dispatcher"))
+        call(tb_same_shape, vendors)            # same shape, new content
+        if fn._cache_size() != base:
+            findings.append(AuditFinding(
+                kind, "vectorized", mode, "recompile", ERROR,
+                "a same-shape re-pad of a different ragged trace set "
+                "recompiled the batched dispatcher"))
+        if len(vendors) >= 3:
+            call(tb, vendors[:2])               # first subset of size 2
+            grown = fn._cache_size()
+            if grown > base + 1:
+                findings.append(AuditFinding(
+                    kind, "vectorized", mode, "recompile", ERROR,
+                    "a vendor subset compiled more than one new program"))
+            call(tb, vendors[1:])               # same-size subset: must hit
+            if fn._cache_size() != grown:
+                findings.append(AuditFinding(
+                    kind, "vectorized", mode, "recompile", ERROR,
+                    "an equal-size vendor subset recompiled the batched "
+                    "dispatcher (subset slicing is shape-unstable)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Whole-registry sweep
+# ---------------------------------------------------------------------------
+def audit_model(model, impls: Sequence[str] | None = None,
+                modes: Sequence[str] | None = None,
+                tb=None, recompile: bool = True) -> list[AuditFinding]:
+    """Audit every (impl x mode) dispatch of one estimator."""
+    from repro.core import model_api
+    if tb is None:
+        tb = default_audit_batch()
+    findings: list[AuditFinding] = []
+    for impl in (impls if impls is not None else model_api.registered_impls()):
+        for mode in (modes if modes is not None else
+                     model_api.resolve_impl(impl).modes):
+            findings.extend(audit_combination(model, impl, mode, tb))
+    if recompile:
+        findings.extend(audit_recompilation(
+            model, modes if modes is not None else _MODES, tb))
+    return findings
+
+
+def audit_all(vampire, kinds: Sequence[str] | None = None,
+              **kwargs) -> list[AuditFinding]:
+    """Audit every registered estimator kind built from one fitted model."""
+    from repro.core import model_api
+    findings: list[AuditFinding] = []
+    for kind in (kinds if kinds is not None else model_api.ESTIMATOR_KINDS):
+        model = model_api.make_estimator(kind, vampire)
+        findings.extend(audit_model(model, **kwargs))
+    return findings

@@ -1,0 +1,247 @@
+"""AST lint: the Model API invariants the ROADMAP states in prose, made
+machine-checkable.
+
+Four rules over ``src/repro`` (reported as :class:`RepoFinding`; the CI
+gate fails on any ERROR):
+
+* **R1 no-deprecated-shims** — no internal call sites of the deprecated
+  ``Vampire.estimate_range`` / ``estimate_distribution`` /
+  ``estimate_many`` / ``estimate_range_many`` /
+  ``estimate_distribution_many`` shims (their def sites in ``vampire.py``
+  are the one allowed home; everything else goes through the unified
+  ``estimate(traces, vendors, mode=..., impl=...)``).
+* **R2 impls-declare-modes** — every ``register_impl(EstimateImpl(...))``
+  passes an explicit ``modes=`` tuple: an impl that silently inherits
+  "all modes" would advertise capabilities nobody wired a dispatch for.
+* **R3 call-time-interpret** — kernel modules resolve Pallas
+  interpret-vs-compiled PER CALL via ``interpret_default()``: no
+  module-level ``*INTERPRET*`` flag assignments (a module-level read of
+  the env var freezes the choice at import time and breaks the CI
+  pallas-interpret job), and every module invoking ``pallas_call`` must
+  reference ``interpret_default``.
+* **R4 params-serialization-covered** — every ``PowerParams`` field is
+  either in the v2 serialization field list (``model_api._FITTED_FIELDS``)
+  or derived at load time (a keyword of the ``PowerParams(...)``
+  construction in ``characterize.build_params``); and every serialized
+  field added after the legacy v1 schema carries a NamedTuple backfill
+  default, so pre-existing blobs keep loading.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Iterable
+
+ERROR = "error"
+WARNING = "warning"
+
+DEPRECATED_SHIMS = ("estimate_range", "estimate_distribution",
+                    "estimate_many", "estimate_range_many",
+                    "estimate_distribution_many")
+
+#: files allowed to mention the shims: their definitions and this linter
+_SHIM_DEF_FILES = ("core/vampire.py", "analysis/repo_lint.py")
+
+
+@dataclasses.dataclass(frozen=True)
+class RepoFinding:
+    rule: str       # 'no-deprecated-shims' | 'impls-declare-modes' |
+                    # 'call-time-interpret' | 'params-serialization-covered'
+    severity: str
+    path: str       # repo-relative
+    line: int
+    message: str
+
+    def __str__(self):  # pragma: no cover - formatting
+        return (f"[{self.severity.upper()}] {self.rule}: "
+                f"{self.path}:{self.line} — {self.message}")
+
+
+def errors_of(findings: Iterable[RepoFinding]) -> list[RepoFinding]:
+    return [f for f in findings if f.severity == ERROR]
+
+
+def _repo_src() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[1]  # src/repro
+
+
+def _parse(path: pathlib.Path) -> ast.Module:
+    return ast.parse(path.read_text(), filename=str(path))
+
+
+def _iter_sources(root: pathlib.Path | None = None):
+    root = root or _repo_src()
+    for path in sorted(root.rglob("*.py")):
+        yield path.relative_to(root).as_posix(), _parse(path)
+
+
+# ---------------------------------------------------------------------------
+# R1 — no internal deprecated-shim calls
+# ---------------------------------------------------------------------------
+def check_no_deprecated_shims(sources=None) -> list[RepoFinding]:
+    findings = []
+    for rel, tree in (sources if sources is not None else _iter_sources()):
+        if rel in _SHIM_DEF_FILES:
+            continue
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in DEPRECATED_SHIMS):
+                findings.append(RepoFinding(
+                    "no-deprecated-shims", ERROR, rel, node.lineno,
+                    f"internal call of deprecated shim "
+                    f".{node.func.attr}(); use estimate(..., mode=...)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R2 — register_impl declares modes
+# ---------------------------------------------------------------------------
+def check_impls_declare_modes(sources=None) -> list[RepoFinding]:
+    findings = []
+    for rel, tree in (sources if sources is not None else _iter_sources()):
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "register_impl" and node.args):
+                continue
+            arg = node.args[0]
+            if not (isinstance(arg, ast.Call)
+                    and isinstance(arg.func, ast.Name)
+                    and arg.func.id == "EstimateImpl"):
+                continue  # re-registration of an existing constant: fine
+            if not any(kw.arg == "modes" for kw in arg.keywords):
+                findings.append(RepoFinding(
+                    "impls-declare-modes", ERROR, rel, node.lineno,
+                    "register_impl(EstimateImpl(...)) without an explicit "
+                    "modes= declaration"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R3 — kernels resolve interpret mode per call
+# ---------------------------------------------------------------------------
+def _module_names(tree: ast.Module) -> set[str]:
+    return {n.id for n in ast.walk(tree) if isinstance(n, ast.Name)} | \
+           {n.attr for n in ast.walk(tree) if isinstance(n, ast.Attribute)}
+
+
+def check_call_time_interpret(sources=None) -> list[RepoFinding]:
+    findings = []
+    if sources is None:
+        root = _repo_src() / "kernels"
+        sources = [(f"kernels/{rel}", tree)
+                   for rel, tree in _iter_sources(root)]
+    for rel, tree in sources:
+        # (a) no module-level *INTERPRET* flag assignment
+        for node in tree.body:
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign):
+                targets = [node.target]
+            for t in targets:
+                if isinstance(t, ast.Name) and "INTERPRET" in t.id.upper():
+                    findings.append(RepoFinding(
+                        "call-time-interpret", ERROR, rel, node.lineno,
+                        f"module-level interpret flag {t.id!r}: the mode "
+                        f"must resolve per call via interpret_default()"))
+        # (b) pallas_call users must reference interpret_default
+        names = _module_names(tree)
+        if "pallas_call" in names and "interpret_default" not in names \
+                and not rel.endswith("common.py"):
+            findings.append(RepoFinding(
+                "call-time-interpret", ERROR, rel, 1,
+                "module invokes pallas_call but never references "
+                "interpret_default()"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R4 — PowerParams fields covered by the v2 serialization schema
+# ---------------------------------------------------------------------------
+def _class_fields(tree: ast.Module, cls: str) -> list[tuple[str, bool]]:
+    """(field, has_default) per AnnAssign of the class, in order."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls:
+            return [(s.target.id, s.value is not None) for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)]
+    raise ValueError(f"class {cls} not found")
+
+
+def _tuple_literal(tree: ast.Module, name: str) -> list[str]:
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == name
+                and isinstance(node.value, (ast.Tuple, ast.List))):
+            return [ast.literal_eval(e) for e in node.value.elts]
+    raise ValueError(f"tuple literal {name} not found")
+
+
+def _v1_anchor_fields(tree: ast.Module) -> set[str]:
+    """The legacy schema-v1 blob keys, read from ``_save_v1_pickle``'s dict
+    literal — fields beyond this set must carry backfill defaults."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "_save_v1_pickle":
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Dict) and len(sub.keys) >= 5:
+                    return {k.value for k in sub.keys
+                            if isinstance(k, ast.Constant)}
+    return set()
+
+
+def _constructor_keywords(tree: ast.Module, func: str, cls: str) -> set[str]:
+    """Keywords passed to ``cls(...)`` anywhere inside method/func ``func``."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == func:
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Name)
+                        and sub.func.id == cls):
+                    out |= {kw.arg for kw in sub.keywords if kw.arg}
+    return out
+
+
+def check_params_serialization(src_root: pathlib.Path | None = None
+                               ) -> list[RepoFinding]:
+    root = src_root or _repo_src()
+    em = _parse(root / "core" / "energy_model.py")
+    ma = _parse(root / "core" / "model_api.py")
+    ch = _parse(root / "core" / "characterize.py")
+
+    fields = _class_fields(em, "PowerParams")
+    fitted = set(_tuple_literal(ma, "_FITTED_FIELDS"))
+    derived = _constructor_keywords(ch, "build_params", "PowerParams")
+    v1 = _v1_anchor_fields(ma)
+
+    findings = []
+    for name, has_default in fields:
+        if name not in fitted and name not in derived:
+            findings.append(RepoFinding(
+                "params-serialization-covered", ERROR,
+                "core/energy_model.py", 1,
+                f"PowerParams.{name} is neither serialized "
+                f"(_FITTED_FIELDS) nor derived in characterize."
+                f"build_params: save/load would drop it"))
+        if name in fitted and name not in v1 and not has_default:
+            findings.append(RepoFinding(
+                "params-serialization-covered", ERROR,
+                "core/energy_model.py", 1,
+                f"PowerParams.{name} is serialized but post-v1 and has no "
+                f"backfill default: legacy blobs would fail to load"))
+    return findings
+
+
+def run_repo_lint() -> list[RepoFinding]:
+    """All four rules over the live repo tree."""
+    sources = list(_iter_sources())
+    findings = []
+    findings += check_no_deprecated_shims(sources)
+    findings += check_impls_declare_modes(sources)
+    findings += check_call_time_interpret()
+    findings += check_params_serialization()
+    return findings

@@ -152,55 +152,62 @@ def apply_powerdown_policy(trace, timeout_cycles: int):
     """Insert {PREA, entry, NOP-dwell, exit} into idle gaps >= timeout (a
     classic timeout policy), picking the low-power state per gap length
     via :func:`select_idle_state`; gaps already powered down are left
-    untouched."""
-    import jax.numpy as jnp
-    cmd = list(np.asarray(trace.cmd))
-    bank = list(np.asarray(trace.bank))
-    row = list(np.asarray(trace.row))
-    col = list(np.asarray(trace.col))
-    data = list(np.asarray(trace.data))
-    dt = list(np.asarray(trace.dt))
-    z = np.zeros(dram.LINE_WORDS, dtype=np.uint32)
+    untouched.
 
-    out = {k: [] for k in ("cmd", "bank", "row", "col", "data", "dt")}
+    The rewrite goes through :class:`traces.TraceBuilder`, so the inserted
+    PREA lands only once tRAS/tWR allow it and accesses to banks a window
+    closed lazily re-activate first; when the trace carries refreshes they
+    are re-placed afterwards (windows push the original schedule past
+    tREFI), and the result is protocol-linted."""
+    cmd = np.asarray(trace.cmd).tolist()
+    bank = np.asarray(trace.bank).tolist()
+    row = np.asarray(trace.row).tolist()
+    col = np.asarray(trace.col).tolist()
+    dt = np.asarray(trace.dt).tolist()
+    data = np.asarray(trace.data)
 
-    def emit(c, b, r, co, d, t):
-        out["cmd"].append(c); out["bank"].append(b); out["row"].append(r)
-        out["col"].append(co); out["data"].append(d); out["dt"].append(t)
-
-    i = 0
+    bld = traces.TraceBuilder(pad_nop=True)
+    n = len(cmd)
     in_lp = False  # inside a low-power window the trace already has
-    while i < len(cmd):
+    for i in range(n):
         c = cmd[i]
+        b = bank[i]
+        r = row[i]
         if c in _ENTRY_CMDS:
             in_lp = True
         elif c in (PDX, dram.SRX):
             in_lp = False
-        gap = int(dt[i]) - (_T.tBURST if c in (RD, WR) else 0)
+        if c in (RD, WR):
+            # an inserted window may have closed this bank since the
+            # original schedule opened it
+            bld.require_open(b, r)
+        if c == ACT:
+            if bld.open_row[b] == r:
+                continue  # a lazy re-activation already opened it
+            if bld.open_row[b] >= 0:
+                bld.emit(PRE, b, dt=_T.tRP)
+        gap = dt[i] - (_T.tBURST if c in (RD, WR) else 0)
         if not in_lp and c in (RD, WR, NOP) and gap >= timeout_cycles \
-                and (i + 1 >= len(cmd) or cmd[i + 1] not in _ENTRY_CMDS):
+                and (i + 1 >= n or cmd[i + 1] not in _ENTRY_CMDS):
             # truncate this slot to its busy part, spend the gap in the
             # selected state: entry bills powered-up, the dwell rides a
             # NOP slot, the exit slot is the last billed at low power
             entry, exit_cmd, exit_dt = select_idle_state(gap)
-            busy = int(dt[i]) - gap
+            busy = dt[i] - gap
             dwell = max(gap - _T.tRP - _T.tCKE - exit_dt, 1)
-            emit(c, bank[i], row[i], col[i], data[i], max(busy, 1))
-            emit(PREA, 0, 0, 0, z, _T.tRP)
-            emit(entry, 0, 0, 0, z, _T.tCKE)
-            emit(NOP, 0, 0, 0, z, dwell)
-            emit(exit_cmd, 0, 0, 0, z, exit_dt)
+            bld.emit(c, b, r, col[i], data[i], max(busy, 1))
+            bld.emit(PREA, dt=_T.tRP)
+            bld.emit(entry, dt=_T.tCKE)
+            bld.emit(NOP, dt=dwell)
+            bld.emit(exit_cmd, dt=exit_dt)
         else:
-            emit(c, bank[i], row[i], col[i], data[i], int(dt[i]))
-        i += 1
+            bld.emit(c, b, r, col[i], data[i], dt[i])
 
-    return trace.__class__(
-        jnp.asarray(out["cmd"], jnp.int32),
-        jnp.asarray(out["bank"], jnp.int32),
-        jnp.asarray(out["row"], jnp.int32),
-        jnp.asarray(out["col"], jnp.int32),
-        jnp.asarray(np.stack(out["data"]).astype(np.uint32)),
-        jnp.asarray(out["dt"], jnp.int32))
+    if any(c == dram.REF for c in cmd):
+        # the windows stretched wall-clock time between the original
+        # refreshes: rebuild the refresh schedule (lints its output)
+        return traces.reschedule_refresh(bld.build())
+    return bld.build("applications.apply_powerdown_policy")
 
 
 def powerdown_study(model, app: traces.AppSpec, vendor: int,

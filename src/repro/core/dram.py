@@ -51,6 +51,11 @@ class Timing(NamedTuple):
     tXP: int = 5     # exit from a (fast/active) power-down to a command
     tXPDLL: int = 24  # exit from slow power-down (DLL relock), 10 ns+
     tXS: int = 74    # exit from self-refresh to a command (tRFC + margin)
+    # NOTE: new fields append at the END (positional Timing() constructions
+    # and the analysis linter's rule table both rely on field order).
+    tRRD: int = 4    # ACT-to-ACT, different banks (rolling)
+    tFAW: int = 16   # four-activate window: at most 4 ACTs per tFAW
+    tWTR: int = 4    # write-to-read turnaround (after the write burst)
 
 TIMING = Timing()
 
@@ -157,7 +162,14 @@ def make_trace(cmds, banks=None, rows=None, cols=None, data=None, dts=None,
     """Build a CommandTrace from (possibly python-list) fields.
 
     Concrete (non-traced) command streams are checked against the
-    low-power transition rules (:func:`validate_low_power_transitions`)."""
+    low-power transition rules (:func:`validate_low_power_transitions`).
+    The full protocol linter (``repro.analysis.trace_lint`` — every JEDEC
+    timing rule, bank-state and background-state legality) additionally
+    runs on every concrete construction when ``REPRO_TRACE_LINT`` is set
+    to ``warn`` or ``strict``; it is off by default here because unit
+    tests legitimately build toy traces with symbolic 1-cycle slots.  The
+    repo's own generators (``idd_loops``, ``traces.app_trace``, encodings,
+    the power-down policy) lint their outputs unconditionally."""
     try:
         validate_low_power_transitions(cmds)
     except ValueError:
@@ -178,7 +190,13 @@ def make_trace(cmds, banks=None, rows=None, cols=None, data=None, dts=None,
             dat = jnp.broadcast_to(dat[None, :], (n, LINE_WORDS))
     dt = (jnp.full(n, default_dt, dtype=jnp.int32) if dts is None
           else jnp.asarray(dts, dtype=jnp.int32))
-    return CommandTrace(cmd, bank, row, col, dat, dt)
+    trace = CommandTrace(cmd, bank, row, col, dat, dt)
+    import os
+    if os.environ.get("REPRO_TRACE_LINT", "off") != "off":
+        from repro.analysis import trace_lint
+        trace_lint.check_trace(trace, origin="make_trace",
+                               mode=os.environ["REPRO_TRACE_LINT"])
+    return trace
 
 
 def concat_traces(*traces: CommandTrace) -> CommandTrace:

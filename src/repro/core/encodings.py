@@ -189,7 +189,9 @@ def encode_trace(trace: CommandTrace, encoding: str,
                          dt=jnp.asarray(dt, dtype=jnp.int32))
     if lut_latency and conform_refresh:
         from repro.core import traces as traces_lib
+        from repro.analysis import trace_lint
         out = traces_lib.reschedule_refresh(out)
+        trace_lint.check_generated(out, "encodings.encode_trace")
     return out
 
 

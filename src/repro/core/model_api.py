@@ -199,16 +199,20 @@ def require_impl_path(kind: str, impl: str,
 VECTORIZED_IMPL = register_impl(EstimateImpl(
     "vectorized",
     "fused-elementwise jnp over the (traces, vendors) grid, one jitted "
-    "vmap(vmap) dispatch (the XLA production path)"))
+    "vmap(vmap) dispatch (the XLA production path)",
+    modes=("mean", "range", "distribution", "surface")))
 PALLAS_IMPL = register_impl(EstimateImpl(
     "pallas",
     "fused Pallas kernel family: one param-independent popcount/toggle "
     "feature kernel per batch + a per-vendor current/energy kernel gridded "
-    "over (vendors, traces, blocks); compiled on TPU, interpret elsewhere"))
+    "over (vendors, traces, blocks); compiled on TPU, interpret elsewhere",
+    modes=("mean", "range", "distribution", "surface")))
 REFERENCE_IMPL = register_impl(EstimateImpl(
     "reference",
     "pair-at-a-time per-command oracle (lax.scan state machine for "
-    "measured-data modes), kept for cross-checking", aliases=("scan",)))
+    "measured-data modes), kept for cross-checking",
+    modes=("mean", "range", "distribution", "surface"),
+    aliases=("scan",)))
 
 
 def validate_estimate_args(mode: str, ones_frac, toggle_frac) -> None:

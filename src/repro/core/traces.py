@@ -11,15 +11,160 @@ traces, which is how the TPU/HBM adaptation feeds the model.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import numpy as np
 
 from repro.core import dram
-from repro.core.dram import (ACT, PRE, RD, WR, REF, CommandTrace, TIMING,
+from repro.core.dram import (ACT, NOP, PDE, PDE_SLOW, PDX, PRE, PREA, RD,
+                             REF, SRE, SRX, WR, CommandTrace, TIMING,
                              LINE_BYTES, LINE_WORDS, N_BANKS)
 
 _T = TIMING
+_NEG = -(1 << 30)   # "never happened" sentinel time
+
+
+class TraceBuilder:
+    """Emit-order command builder that lands every command on a
+    protocol-legal cycle by stretching the *previous* slot's ``dt`` (never
+    reordering): the generator states WHAT happens, the builder owns WHEN.
+
+    It tracks the same state the protocol linter
+    (``repro.analysis.trace_lint``) checks — per-bank open rows and
+    ACT/PRE/RD/WR times, the rolling four-activate window, global
+    write-to-read turnaround, and the refresh / power-down-exit lockouts —
+    and is a no-op (zero stretched cycles) on schedules that are already
+    legal.  Exit lockouts are applied conservatively to every non-NOP
+    command (tXPDLL formally binds only RD/WR), which can only lengthen a
+    schedule, never break one.
+
+    With ``pad_nop=True`` required lead time rides on an inserted NOP slot
+    instead of stretching the previous slot's dt — for rewrites
+    (:func:`reschedule_refresh`, the power-down policy) whose contract is
+    that the source trace's slot durations are preserved."""
+
+    def __init__(self, pad_nop: bool = False):
+        self.pad_nop = pad_nop
+        self.cmds: list[int] = []
+        self.banks: list[int] = []
+        self.rows: list[int] = []
+        self.cols: list[int] = []
+        self.datas: list = []
+        self.dts: list[int] = []
+        self.t = 0
+        self.stretched = 0                # total cycles added by waits
+        self.open_row = [-1] * N_BANKS
+        self._act_t = [_NEG] * N_BANKS
+        self._close_t = [_NEG] * N_BANKS
+        self._wr_t = [_NEG] * N_BANKS
+        self._rd_t = [_NEG] * N_BANKS
+        self._acts = collections.deque(maxlen=4)
+        self._last_act = self._last_wr = self._last_rw = _NEG
+        self._busy_until = 0              # tRFC / tXP / tXPDLL / tXS
+        self._slow_entry = False
+
+    def _earliest(self, c: int, b: int) -> int:
+        t = _NEG
+        if c != NOP:
+            t = max(t, self._busy_until)
+        if c == ACT:
+            t = max(t, self._close_t[b] + _T.tRP, self._act_t[b] + _T.tRC,
+                    self._last_act + _T.tRRD)
+            if len(self._acts) == 4:
+                t = max(t, self._acts[0] + _T.tFAW)
+        elif c == RD or c == WR:
+            t = max(t, self._act_t[b] + _T.tRCD, self._last_rw + _T.tCCD)
+            if c == RD:
+                t = max(t, self._last_wr + _T.tBURST + _T.tWTR)
+        elif c == PRE or c == PREA:
+            for tb in (range(N_BANKS) if c == PREA else (b,)):
+                if self.open_row[tb] >= 0:
+                    t = max(t, self._act_t[tb] + _T.tRAS,
+                            self._wr_t[tb] + _T.tBURST + _T.tWR,
+                            self._rd_t[tb] + _T.tRTP)
+        return t
+
+    def emit(self, c, b=0, r=0, co=0, data=None, dt=0) -> None:
+        c, b, r = int(c), int(b), int(r)
+        need = self._earliest(c, b)
+        if need > self.t:
+            self.stretched += need - self.t
+            if self.pad_nop or not self.dts:
+                self.cmds.append(NOP)
+                self.banks.append(0)
+                self.rows.append(0)
+                self.cols.append(0)
+                self.datas.append(None)
+                self.dts.append(need - self.t)
+            else:
+                self.dts[-1] += need - self.t
+            self.t = need
+        self.cmds.append(c)
+        self.banks.append(b)
+        self.rows.append(r)
+        self.cols.append(int(co))
+        self.datas.append(data)
+        self.dts.append(int(dt))
+        if c == ACT:
+            self._act_t[b] = self.t
+            self.open_row[b] = r
+            self._acts.append(self.t)
+            self._last_act = self.t
+        elif c == PRE:
+            self._close_t[b] = self.t
+            self.open_row[b] = -1
+        elif c == PREA:
+            for tb in range(N_BANKS):
+                self._close_t[tb] = self.t
+                self.open_row[tb] = -1
+        elif c == RD:
+            self._rd_t[b] = self.t
+            self._last_rw = self.t
+        elif c == WR:
+            self._wr_t[b] = self.t
+            self._last_wr = self.t
+            self._last_rw = self.t
+        elif c == REF:
+            self._busy_until = max(self._busy_until, self.t + _T.tRFC)
+        elif c == PDE:
+            self._slow_entry = False
+        elif c == PDE_SLOW:
+            self._slow_entry = True
+        elif c == PDX:
+            exit_lat = _T.tXPDLL if self._slow_entry else _T.tXP
+            self._busy_until = max(self._busy_until, self.t + exit_lat)
+        elif c == SRX:
+            self._busy_until = max(self._busy_until, self.t + _T.tXS)
+        self.t += int(dt)
+
+    def require_open(self, b: int, r: int) -> None:
+        """PRE (when another row is open) + ACT so row ``r`` of bank ``b``
+        is open — the lazy re-activation every post-refresh / post-window
+        access needs."""
+        b, r = int(b), int(r)
+        if self.open_row[b] == r:
+            return
+        if self.open_row[b] >= 0:
+            self.emit(PRE, b, dt=_T.tRP)
+        self.emit(ACT, b, r, dt=_T.tRCD)
+
+    def build(self, origin: str | None = None) -> CommandTrace:
+        """Materialize the trace (and lint it when ``origin`` is given)."""
+        n = len(self.cmds)
+        data = np.zeros((n, LINE_WORDS), dtype=np.uint32)
+        for i, d in enumerate(self.datas):
+            if d is not None:
+                data[i] = d
+        out = dram.make_trace(np.asarray(self.cmds, np.int32),
+                              np.asarray(self.banks, np.int32),
+                              np.asarray(self.rows, np.int32),
+                              np.asarray(self.cols, np.int32), data,
+                              dts=np.asarray(self.dts, np.int32))
+        if origin is not None:
+            from repro.analysis import trace_lint
+            trace_lint.check_generated(out, origin)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -154,18 +299,22 @@ def lines_from_bytes(buf: bytes | np.ndarray) -> np.ndarray:
 
 def app_trace(app: AppSpec, n_requests: int = 2000,
               lines: np.ndarray | None = None) -> CommandTrace:
-    """Generate the command trace for one synthetic application."""
+    """Generate the command trace for one synthetic application.
+
+    Commands are emitted through :class:`TraceBuilder`, so every request
+    lands on a protocol-legal cycle (the builder stretches the previous
+    slot when a back-to-back random schedule would violate e.g. tWTR or
+    tRAS), and the result is linted before it is returned.
+    """
     rng = np.random.default_rng(np.random.SeedSequence([29, app.seed]))
     if lines is None:
         lines = sample_lines(app.data_dist, n_requests, rng)
     n_requests = min(n_requests, lines.shape[0])
 
-    cmds, banks, rows, cols, datas, dts = [], [], [], [], [], []
-    open_row = -np.ones(N_BANKS, dtype=np.int64)
+    bld = TraceBuilder()
+    ref_anchor = 0  # builder time when the current refresh interval began
     # gap model: mean bus idle cycles between requests from intensity
     mean_gap = _T.tBURST * (1.0 - app.intensity) / max(app.intensity, 0.01)
-    cycles_since_ref = 0.0
-    zline = np.zeros(LINE_WORDS, dtype=np.uint32)
 
     bank_seq = rng.integers(0, N_BANKS, size=n_requests)
     hit_seq = rng.random(n_requests) < app.row_hit
@@ -176,18 +325,13 @@ def app_trace(app: AppSpec, n_requests: int = 2000,
 
     for i in range(n_requests):
         b = int(bank_seq[i])
-        if hit_seq[i] and open_row[b] >= 0:
-            r = int(open_row[b])
+        if hit_seq[i] and bld.open_row[b] >= 0:
+            r = bld.open_row[b]
         else:
             r = int(row_seq[i])
-            if open_row[b] >= 0:
-                cmds.append(PRE); banks.append(b); rows.append(0)
-                cols.append(0); datas.append(zline); dts.append(_T.tRP)
-                cycles_since_ref += _T.tRP
-            cmds.append(ACT); banks.append(b); rows.append(r)
-            cols.append(0); datas.append(zline); dts.append(_T.tRCD)
-            cycles_since_ref += _T.tRCD
-            open_row[b] = r
+            if bld.open_row[b] >= 0:
+                bld.emit(PRE, b, dt=_T.tRP)
+            bld.emit(ACT, b, r, dt=_T.tRCD)
         op = RD if rd_seq[i] else WR
         gap = int(gap_seq[i])
         if gap > 128:
@@ -204,41 +348,34 @@ def app_trace(app: AppSpec, n_requests: int = 2000,
                     _T.tXPDLL
             else:
                 entry, exit_cmd, exit_dt = dram.PDE, dram.PDX, _T.tXP
-            cmds.append(op); banks.append(b); rows.append(r)
-            cols.append(int(col_seq[i])); datas.append(lines[i])
-            dts.append(_T.tBURST)
-            cmds.append(dram.PREA); banks.append(0); rows.append(0)
-            cols.append(0); datas.append(zline); dts.append(_T.tRP)
-            cmds.append(entry); banks.append(0); rows.append(0)
-            cols.append(0); datas.append(zline); dts.append(_T.tCKE)
-            cmds.append(dram.NOP); banks.append(0); rows.append(0)
-            cols.append(0); datas.append(zline); dts.append(gap)
-            cmds.append(exit_cmd); banks.append(0); rows.append(0)
-            cols.append(0); datas.append(zline); dts.append(exit_dt)
-            open_row[:] = -1
+            bld.emit(op, b, r, int(col_seq[i]), lines[i], dt=_T.tBURST)
+            bld.emit(PREA, dt=_T.tRP)
+            if (entry != dram.SRE
+                    and bld.t - ref_anchor + _T.tCKE + gap + exit_dt
+                    >= _T.tREFI):
+                # no refresh can be issued inside the power-down window, so
+                # when the window would cross the deadline, refresh now
+                # (re-stating PREA after keeps the [PREA, entry] adjacency
+                # every power-down consumer in the repo expects)
+                bld.emit(REF, dt=_T.tRFC)
+                bld.emit(PREA, dt=0)
+                ref_anchor = bld.t
+            bld.emit(entry, dt=_T.tCKE)
+            bld.emit(NOP, dt=gap)
+            bld.emit(exit_cmd, dt=exit_dt)
             if entry == dram.SRE:
                 # self-refresh maintains cell charge internally: the
                 # refresh deadline restarts at exit
-                cycles_since_ref = 0.0
-            else:
-                cycles_since_ref += (_T.tBURST + _T.tRP + _T.tCKE + gap
-                                     + exit_dt)
+                ref_anchor = bld.t
             continue
-        dt = _T.tBURST + gap
-        cmds.append(op); banks.append(b); rows.append(r)
-        cols.append(int(col_seq[i])); datas.append(lines[i]); dts.append(dt)
-        cycles_since_ref += dt
-        if cycles_since_ref >= _T.tREFI:
+        bld.emit(op, b, r, int(col_seq[i]), lines[i], dt=_T.tBURST + gap)
+        if bld.t - ref_anchor >= _T.tREFI:
             # refresh: close all banks, REF, reopen lazily
-            cmds.append(dram.PREA); banks.append(0); rows.append(0)
-            cols.append(0); datas.append(zline); dts.append(_T.tRP)
-            cmds.append(REF); banks.append(0); rows.append(0); cols.append(0)
-            datas.append(zline); dts.append(_T.tRFC)
-            open_row[:] = -1
-            cycles_since_ref = 0.0
+            bld.emit(PREA, dt=_T.tRP)
+            bld.emit(REF, dt=_T.tRFC)
+            ref_anchor = bld.t
 
-    return dram.make_trace(cmds, banks, rows, cols,
-                           np.stack(datas).astype(np.uint32), dts)
+    return bld.build("traces.app_trace")
 
 
 def reschedule_refresh(trace: CommandTrace,
@@ -254,7 +391,9 @@ def reschedule_refresh(trace: CommandTrace,
     commands counting every slot's dt, refresh after the RD/WR that crosses
     the deadline, and lazily re-ACT banks the moved refresh closed (with a
     PRE first when a different row is open). RD/WR order, data, and slot
-    durations are preserved; traces without REF pass through unchanged.
+    durations are preserved — the :class:`TraceBuilder` walk adds a NOP
+    wait slot when an inserted refresh pair needs lead time (e.g. tWR
+    before its PREA); traces without REF pass through unchanged.
     """
     cmd = np.asarray(trace.cmd)
     if not (cmd == REF).any():
@@ -269,66 +408,59 @@ def reschedule_refresh(trace: CommandTrace,
     keep[prea_before_ref] = False
 
     # plain-int working lists: the walk is a Python loop, so per-element
-    # numpy scalar access would dominate its cost; data lines are carried
-    # as source-row indices and gathered once at the end
+    # numpy scalar access would dominate its cost
     kept = np.flatnonzero(keep)
     cmd_l = cmd[kept].tolist()
     bank_l = np.asarray(trace.bank)[kept].tolist()
     row_l = np.asarray(trace.row)[kept].tolist()
     col_l = np.asarray(trace.col)[kept].tolist()
     dt_l = np.asarray(trace.dt)[kept].tolist()
-    src_l = kept.tolist()
+    data_l = [data[s] for s in kept]
 
-    cmds, banks, rows, cols, srcs, dts = [], [], [], [], [], []
-    open_row = [-1] * N_BANKS
-    since = 0
+    bld = TraceBuilder(pad_nop=True)
+    anchor = 0
+    n_kept = len(cmd_l)
 
-    def emit(c, b, r, co, src, t):
-        nonlocal since
-        cmds.append(c); banks.append(b); rows.append(r)
-        cols.append(co); srcs.append(src); dts.append(t)
-        since += t
-
-    for k in range(len(cmd_l)):
+    for k in range(n_kept):
         c = cmd_l[k]
         b = bank_l[k]
         r = row_l[k]
-        if (c == RD or c == WR) and open_row[b] != r:
-            # the moved refresh closed this bank (or another row is open)
-            if open_row[b] >= 0:
-                emit(PRE, b, 0, 0, -1, _T.tRP)
-            emit(ACT, b, r, 0, -1, _T.tRCD)
-            open_row[b] = r
+        if c == RD or c == WR:
+            # the moved refresh may have closed this bank (or left another
+            # row open): lazily re-open before replaying the access
+            bld.require_open(b, r)
         if c == ACT:
-            if open_row[b] == r:
+            if bld.open_row[b] == r:
                 continue  # bank already open at this row: redundant
-            if open_row[b] >= 0:
-                emit(PRE, b, 0, 0, -1, _T.tRP)
-            open_row[b] = r
-        elif c == PRE:
-            open_row[b] = -1
-        elif c == dram.PREA:
-            open_row = [-1] * N_BANKS
-        emit(c, b, r, col_l[k], src_l[k], dt_l[k])
-        if c == dram.SRX:
-            since = 0  # self-refresh restarted the deadline internally
-        if (c == RD or c == WR) and since >= period:
-            emit(dram.PREA, 0, 0, 0, -1, _T.tRP)
-            emit(REF, 0, 0, 0, -1, _T.tRFC)
-            open_row = [-1] * N_BANKS
-            since = 0
+            if bld.open_row[b] >= 0:
+                bld.emit(PRE, b, dt=_T.tRP)
+        if c == PDE or c == PDE_SLOW:
+            # no refresh can be issued inside the power-down window: when
+            # dwelling through it would cross the deadline, refresh first
+            win = dt_l[k]
+            j = k + 1
+            while j < n_kept:
+                win += dt_l[j]
+                if cmd_l[j] == PDX:
+                    break
+                j += 1
+            if bld.t - anchor + win >= period:
+                if any(o >= 0 for o in bld.open_row):
+                    bld.emit(PREA, dt=_T.tRP)
+                bld.emit(REF, dt=_T.tRFC)
+                # re-state PREA so the [PREA, entry] adjacency every
+                # power-down consumer expects survives the inserted REF
+                bld.emit(PREA, dt=0)
+                anchor = bld.t
+        bld.emit(c, b, r, col_l[k], data_l[k], dt_l[k])
+        if c == SRX:
+            anchor = bld.t  # self-refresh restarted the deadline internally
+        if (c == RD or c == WR) and bld.t - anchor >= period:
+            bld.emit(PREA, dt=_T.tRP)
+            bld.emit(REF, dt=_T.tRFC)
+            anchor = bld.t
 
-    src = np.asarray(srcs)
-    out_data = np.zeros((len(src), LINE_WORDS), dtype=np.uint32)
-    has_data = src >= 0
-    out_data[has_data] = data[src[has_data]]
-    # hand make_trace numpy arrays: jnp.asarray on a large Python list
-    # walks it element by element and would dominate the whole pass
-    return dram.make_trace(np.asarray(cmds, np.int32),
-                           np.asarray(banks, np.int32),
-                           np.asarray(rows, np.int32),
-                           np.asarray(cols, np.int32), out_data,
-                           dts=np.asarray(dts, np.int32))
+    return bld.build("traces.reschedule_refresh")
 
 
 def refresh_deadline_overshoot(trace: CommandTrace,

@@ -179,6 +179,16 @@ def _load_estimator(job: ServeJob):
     return model_api.make_estimator(job.power_model, model)
 
 
+def lint_ingested(seq_traces) -> None:
+    """Batched protocol lint of the traces the power report is about to
+    bill.  Raises :class:`repro.analysis.TraceProtocolError` carrying the
+    structured diagnostics (rule id, trace + command index, bank) when any
+    ingested trace is protocol-illegal — a corrupt external trace must be
+    rejected, not silently priced."""
+    from repro.analysis import trace_lint
+    trace_lint.lint_ingested(seq_traces, origin="serve.power_report")
+
+
 def power_report(job: ServeJob, compiled_decode, logits, tokens, *,
                  n_data: int, step_seconds: float) -> dict:
     """Score one decode batch's HBM traffic through the batched estimator.
@@ -216,6 +226,10 @@ def power_report(job: ServeJob, compiled_decode, logits, tokens, *,
                               seed=job.seed + b)
         seq_traces.append(traces.app_trace(spec, n_requests=n_req,
                                            lines=lines))
+
+    # ingestion guard: never bill a protocol-illegal trace — reject with
+    # the linter's structured diagnostics (rule id + command index)
+    lint_ingested(seq_traces)
 
     rep = model.estimate(seq_traces, vendors,
                          impl=job.power_impl)            # (B, V) reports

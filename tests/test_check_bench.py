@@ -80,3 +80,44 @@ def test_gate_passes_on_committed_artifacts_identity():
     failures = run_gate(ARTIFACTS, ARTIFACTS,
                         {n: CHECKS[n] for n in present})
     assert failures == [], failures
+
+
+def test_baseline_schema_malformed_json_fails(tmp_path):
+    """Satellite: a corrupt committed baseline must fail the gate loudly
+    instead of silently downgrading its checks to the absolute floor."""
+    from benchmarks.check_bench import validate_baselines
+    (tmp_path / "BENCH_estimate.json").write_text("{not json")
+    failures = validate_baselines(str(tmp_path))
+    assert len(failures) == 1 and "unreadable" in failures[0]
+
+
+def test_baseline_schema_missing_metric_fails(tmp_path):
+    from benchmarks.check_bench import validate_baselines
+    (tmp_path / "BENCH_estimate.json").write_text(
+        json.dumps({"speedup_warm": 30.0}))  # speedup_cold missing
+    failures = validate_baselines(str(tmp_path))
+    assert len(failures) == 1 and "speedup_cold" in failures[0]
+    (tmp_path / "BENCH_estimate.json").write_text(
+        json.dumps({"speedup_warm": 30.0, "speedup_cold": "fast"}))
+    failures = validate_baselines(str(tmp_path))
+    assert len(failures) == 1 and "non-numeric" in failures[0]
+
+
+def test_baseline_schema_orphan_artifact_fails(tmp_path):
+    """A committed BENCH_*.json nobody gates is a silent coverage hole."""
+    from benchmarks.check_bench import validate_baselines
+    (tmp_path / "BENCH_mystery.json").write_text("{}")
+    failures = validate_baselines(str(tmp_path))
+    assert len(failures) == 1 and "no CHECKS entry" in failures[0]
+
+
+def test_baseline_schema_non_object_root_fails(tmp_path):
+    from benchmarks.check_bench import validate_baselines
+    (tmp_path / "BENCH_estimate.json").write_text("[1, 2]")
+    failures = validate_baselines(str(tmp_path))
+    assert len(failures) == 1 and "root is list" in failures[0]
+
+
+def test_committed_baselines_satisfy_schema():
+    from benchmarks.check_bench import validate_baselines
+    assert validate_baselines(ARTIFACTS) == []
