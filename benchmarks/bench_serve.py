@@ -1,0 +1,141 @@
+"""Continuously batched serving vs the per-request estimation loop (ours):
+the sustained-throughput win of ``repro.serving`` — ring-bucketed pad
+shapes, resident model, windowed dispatch — over the request-at-a-time
+``estimate([trace])`` loop the old ``serve.power_report`` path embodied,
+measured on a ragged 256-trace arrival mix.  Emits ``BENCH_serve.json``
+(speedup + batch fill gated by ``check_bench``; absolute traces/s and
+latency percentiles recorded but hardware-exempt) and cross-checks every
+service result against the one-shot batched ``estimate()`` dispatch."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ARTIFACTS, fitted_vampire, row
+from repro.core import estimate_batch, traces
+from repro.serving import EstimationService, ServiceConfig
+
+N_TRACES = 256
+N_SHAPES = 32          # distinct (app, n_requests) combos in the mix
+BURST = 32             # arrival burst size (one dispatch window each)
+ARTIFACT = os.path.join(ARTIFACTS, "BENCH_serve.json")
+
+
+def _arrival_mix():
+    """256 ragged traces drawn from 32 distinct shapes, interleaved the
+    way traffic arrives (no sorted-by-length convenience): raggedness is
+    real, but the per-request baseline's compile count stays bounded."""
+    shapes = [(traces.SPEC_APPS[i % len(traces.SPEC_APPS)],
+               40 + 9 * i) for i in range(N_SHAPES)]
+    return [traces.app_trace(app, n_requests=n)
+            for i in range(N_TRACES)
+            for app, n in [shapes[(i * 7) % N_SHAPES]]]
+
+
+def _service_run(svc, trs):
+    """Drive one arrival sweep: bursts in, a dispatch tick per burst, a
+    drain at the end (the shutdown flush)."""
+    tickets = []
+    for i in range(0, len(trs), BURST):
+        tk, _ = svc.submit_many(trs[i:i + BURST])
+        tickets.extend(tk)
+        svc.step()
+    svc.drain()
+    return tickets
+
+
+def run() -> list[str]:
+    model = fitted_vampire()
+    vendors = list(model.vendors)
+    trs = _arrival_mix()
+
+    # The HEADLINE metric is the sustained single-pass time: the arrival
+    # mix streamed once, end to end, compiles included.  Serving traffic's
+    # shape stream is unbounded, so the per-request loop keeps compiling —
+    # one program per distinct arrival shape — while the ring's bucketing
+    # bounds the service at one program per bucket shape.  Capping the mix
+    # at 32 distinct shapes (8 arrivals amortize each compile) is already
+    # GENEROUS to the per-request baseline; warm-cache times, where the
+    # loop's whole shape vocabulary magically pre-exists, are recorded as
+    # informational only.
+
+    # ---- the service: bucketed windows, resident model -----------------
+    svc = EstimationService(model, ServiceConfig())
+    t0 = time.perf_counter()
+    _service_run(svc, trs)
+    service_sustained_s = time.perf_counter() - t0
+    service_warm_s = float("inf")
+    for _ in range(3):
+        warm = EstimationService(config=ServiceConfig(), engine=svc.engine)
+        t0 = time.perf_counter()
+        tickets = _service_run(warm, trs)
+        service_warm_s = min(service_warm_s, time.perf_counter() - t0)
+    rows = np.stack([np.asarray(warm.result(t).energy_pj) for t in tickets])
+    metrics = warm.metrics()
+
+    # ---- per-request loop: one exact-shape estimate([tr]) per arrival --
+    t0 = time.perf_counter()
+    per_request = np.stack(
+        [np.asarray(model.estimate([tr], vendors).energy_pj)[0]
+         for tr in trs])
+    loop_sustained_s = time.perf_counter() - t0
+    loop_warm_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for tr in trs:
+            jax.block_until_ready(model.estimate([tr], vendors).energy_pj)
+        loop_warm_s = min(loop_warm_s, time.perf_counter() - t0)
+
+    # acceptance bar: both paths ≡ the one-shot batched dispatch
+    tb = estimate_batch.TraceBatch.from_traces(trs)
+    oneshot = np.asarray(model.estimate(tb, vendors).energy_pj)
+    np.testing.assert_allclose(rows, oneshot, rtol=1e-4)
+    np.testing.assert_allclose(per_request, oneshot, rtol=1e-4)
+
+    speedup = loop_sustained_s / service_sustained_s
+    blob = {
+        "bench": "serve",
+        "n_traces": N_TRACES,
+        "n_shapes": N_SHAPES,
+        "n_vendors": len(vendors),
+        "burst": BURST,
+        "trace_commands_min": int(min(t.n for t in trs)),
+        "trace_commands_max": int(max(t.n for t in trs)),
+        "per_request_sustained_s": loop_sustained_s,
+        "per_request_warm_s": loop_warm_s,
+        "service_sustained_s": service_sustained_s,
+        "service_warm_s": service_warm_s,
+        "per_request_traces_per_s": N_TRACES / loop_sustained_s,
+        "service_traces_per_s": N_TRACES / service_sustained_s,
+        "service_speedup_vs_per_request": speedup,
+        "speedup_warm": loop_warm_s / service_warm_s,
+        "batch_fill": metrics.batch_fill,
+        "dispatches": metrics.dispatches,
+        "engine_programs": metrics.engine_programs,
+        "latency_p50_ms": metrics.latency_p50_ms,
+        "latency_p99_ms": metrics.latency_p99_ms,
+        "dispatch_p50_ms": metrics.dispatch_p50_ms,
+        "dispatch_p99_ms": metrics.dispatch_p99_ms,
+    }
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(blob, f, indent=2)
+
+    return [
+        row("serve.per_request", loop_sustained_s * 1e6,
+            f"traces={N_TRACES};shapes={N_SHAPES};"
+            f"traces_per_s={N_TRACES/loop_sustained_s:.1f};"
+            f"warm_s={loop_warm_s:.2f}"),
+        row("serve.service", service_sustained_s * 1e6,
+            f"traces={N_TRACES};dispatches={metrics.dispatches};"
+            f"fill={metrics.batch_fill:.2f};"
+            f"traces_per_s={N_TRACES/service_sustained_s:.1f};"
+            f"p50={metrics.latency_p50_ms:.0f}ms;"
+            f"p99={metrics.latency_p99_ms:.0f}ms;"
+            f"speedup_vs_per_request={speedup:.1f}x;"
+            f"artifact=BENCH_serve.json"),
+    ]

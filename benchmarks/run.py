@@ -24,6 +24,7 @@ MODULES = [
     ("model_api", "benchmarks.bench_model_api"),        # ours (PR 3)
     ("kernels", "benchmarks.bench_kernels"),            # ours (PR 4)
     ("analysis", "benchmarks.bench_analysis"),          # ours (PR 7)
+    ("serve", "benchmarks.bench_serve"),                # ours (PR 8)
     ("roofline", "benchmarks.bench_roofline"),          # deliverable (g)
 ]
 

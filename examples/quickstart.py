@@ -123,6 +123,29 @@ def main():
               f"command #{d.cmd_index} bank {d.bank} "
               f"(short by {d.margin} cycles)")
 
+    print("== 3f. estimation-as-a-service: the serving loop ==")
+    # repro.serving turns the per-request loop into a continuously
+    # batched service: ragged arrivals land in a bucketed TraceBatch
+    # ring (re-padded in place, so the jit cache stays bounded), the
+    # engine keeps the model device-resident (shard_map'd when a
+    # multi-device mesh is passed), and admission routes every trace
+    # through the 3e linter gate — illegal ones come back as structured
+    # rejections, never silently priced.
+    from repro.serving import EstimationService, ServiceConfig
+    svc = EstimationService(model, ServiceConfig())
+    arrivals = [idd_loops.validation_sweep(n) for n in (1, 4, 8, 16)]
+    tickets, _ = svc.submit_many(arrivals)
+    bad = svc.submit(rushed)                 # the corrupted trace from 3e
+    print(f"  corrupted arrival rejected at admission: rules={bad.rules}")
+    svc.close()                              # drain + refuse new traffic
+    rows = [svc.result(t) for t in tickets]
+    print(f"  {len(rows)} results; arrival 2, vendor A: "
+          f"{float(rows[2].avg_current_ma[0]):.1f} mA")
+    m = svc.metrics()
+    print(f"  metrics: admitted={m.admitted} dispatches={m.dispatches} "
+          f"fill={m.batch_fill:.2f} programs={m.engine_programs} "
+          f"p50={m.latency_p50_ms:.0f}ms")
+
     print("== 4. validation vs baselines (paper Fig 24) ==")
     res = run_validation(model, fleet=fleet,
                          n_values=(0, 2, 8, 32, 128, 512, 764))

@@ -90,7 +90,9 @@ def main(argv=None) -> int:
 
     if not args.skip_dispatch:
         from repro.core import vampire as V
-        findings = dispatch_audit.audit_all(V.reference_vampire())
+        model = V.reference_vampire()
+        findings = dispatch_audit.audit_all(model)
+        findings.extend(dispatch_audit.audit_serving(model))
         errs = dispatch_audit.errors_of(findings)
         n_errors += len(errs)
         for f in findings:

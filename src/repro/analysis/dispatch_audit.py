@@ -19,7 +19,9 @@ jaxpr and lowers it to StableHLO text (the same artifact
 * **recompilation hazards** — repeated calls, same-shape re-pads of a
   different ragged trace set, and equal-size vendor subsets must hit the
   jit cache of the shared batched dispatchers (``_cache_size`` growth
-  probes, generalizing the PR 3 regression test into a pass).
+  probes, generalizing the PR 3 regression test into a pass); the
+  serving stack gets its own probe (:func:`audit_serving`) asserting the
+  ring's pad-shape bucketing bounds the engine's compiled-program count.
 
 Findings are structured (:class:`AuditFinding`); ``python -m
 repro.analysis`` fails the CI gate on any ERROR severity.
@@ -270,6 +272,56 @@ def audit_recompilation(model, modes: Sequence[str] = _MODES,
                     kind, "vectorized", mode, "recompile", ERROR,
                     "an equal-size vendor subset recompiled the batched "
                     "dispatcher (subset slicing is shape-unstable)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Serving-path recompile probe (the ring's bucketing contract)
+# ---------------------------------------------------------------------------
+def audit_serving(model, impl: str = "vectorized") -> list[AuditFinding]:
+    """Drive the serving stack's dispatch path and assert the ring's
+    pad-shape bucketing bounds the engine's compiled-program count:
+    arrival mixes that vary WITHIN one (count, length) bucket must hit
+    the cache, and crossing into a new bucket compiles exactly one new
+    program.  This is the serving twin of :func:`audit_recompilation` —
+    it guards the property that made ``serve.power_report``'s
+    exact-request-shape re-pads a bug."""
+    from repro.core import idd_loops
+    from repro.serving import EstimationService, RingConfig, ServiceConfig
+
+    kind = model.kind
+    findings: list[AuditFinding] = []
+    short = [idd_loops.idd0(reps=2), idd_loops.idd0(reps=3),
+             idd_loops.idd4r(reps=2)]
+    long = idd_loops.validation_sweep(64)
+    b1 = 1 << (max(int(tr.n) for tr in short) - 1).bit_length()
+    b2 = max(1 << (int(long.n) - 1).bit_length(), b1 * 2)
+    svc = EstimationService(model, ServiceConfig(
+        ring=RingConfig(length_buckets=(b1, b2), count_buckets=(4, 8)),
+        impl=impl, lint=False))
+
+    def run(traces):
+        svc.submit_many(traces)
+        svc.drain()
+        return svc.engine.cache_size()
+
+    base = run(short)                          # warm: one (4, b1) program
+    if run(short[:2]) != base or run(short + short[:1]) != base:
+        findings.append(AuditFinding(
+            kind, impl, "mean", "recompile", ERROR,
+            "varying arrival mixes within one (count, length) bucket "
+            "recompiled the serving dispatch (ring bucketing broken)"))
+    crossed = run([long])                      # new length bucket: (4, b2)
+    if crossed > base + 1:
+        findings.append(AuditFinding(
+            kind, impl, "mean", "recompile", ERROR,
+            "crossing one length bucket compiled more than one new "
+            "serving program"))
+    if run([long] + short[:1]) != crossed:     # mixed window, known bucket
+        findings.append(AuditFinding(
+            kind, impl, "mean", "recompile", ERROR,
+            "a mixed-length window landing in an already-compiled bucket "
+            "recompiled the serving dispatch"))
     return findings
 
 

@@ -82,6 +82,40 @@ def as_trace_batch(traces) -> TraceBatch:
     return TraceBatch.from_traces(list(traces))
 
 
+def bucketed_trace_batch(traces: Sequence[CommandTrace], n_slots: int,
+                         length: int) -> TraceBatch:
+    """Pad ragged traces into a FIXED ``(n_slots, length)`` batch shape.
+
+    ``TraceBatch.from_traces`` pads to the request's own max length/count,
+    so every distinct request shape is a fresh compile of the batched
+    dispatches; this builder instead targets a caller-chosen bucket shape
+    (the serving ring's vocabulary): the command axis NOP/dt=0-pads to
+    ``length`` and whole zero-weight pad rows fill the trace axis up to
+    ``n_slots``.  Both paddings are exact — pad commands draw no charge
+    and move no state, pad rows contribute neither charge nor cycles."""
+    if not traces:
+        raise ValueError("bucketed_trace_batch needs at least one trace")
+    if len(traces) > n_slots:
+        raise ValueError(f"{len(traces)} traces exceed {n_slots} slots")
+    longest = max(int(tr.n) for tr in traces)
+    if longest > length:
+        raise ValueError(f"longest trace ({longest} commands) exceeds the "
+                         f"length bucket ({length})")
+    from repro.core.dram import pad_trace
+    padded = [pad_trace(tr, length) for tr in traces]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+    weight = jnp.stack([(jnp.arange(length) < int(tr.n)).astype(jnp.float32)
+                        for tr in traces])
+    pad_rows = n_slots - len(traces)
+    if pad_rows:
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.concatenate(
+                [x, jnp.zeros((pad_rows,) + x.shape[1:], x.dtype)]), stacked)
+        weight = jnp.concatenate(
+            [weight, jnp.zeros((pad_rows, length), jnp.float32)])
+    return TraceBatch(stacked, weight)
+
+
 def original_traces(traces, tb: TraceBatch) -> list[CommandTrace]:
     """The caller's ragged traces when recoverable from the ``estimate``
     argument, else the padded batch rows — exact either way (a dt=0 NOP

@@ -21,6 +21,7 @@ campaign collapses into a handful of fixed-shape batched dispatches:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax
@@ -108,23 +109,57 @@ def fleet_measure_current_pallas(trace: CommandTrace, weight: jax.Array,
 
 
 def fleet_surface_energy(modules, trace: CommandTrace, weight: jax.Array,
-                         impl: str = "vectorized"):
+                         impl: str = "vectorized", *, mesh=None):
     """Ground-truth structural-variation surfaces of the WHOLE module
     fleet in one batched dispatch (paper Figs 19-22 as fleet-wide maps):
     an :class:`~repro.core.energy_model.EnergyReport` whose leaves are
     ``(traces, modules, banks, row_bands)``-shaped — the estimation
     engine's surface dispatch with the stacked per-module *true* params on
-    the vendor axis.  ``impl`` is ``'vectorized'`` or ``'pallas'``."""
+    the vendor axis.  ``impl`` is ``'vectorized'`` or ``'pallas'``.
+
+    With a ``(data, model)`` ``mesh`` (``launch.mesh.make_local_mesh``),
+    the dispatch ``shard_map``\\ s the trace axis over ``data`` and the
+    module axis over ``model`` — every (trace, module) pair is independent,
+    so the sharded result is bitwise identical to the single-device one.
+    Falls back to the plain dispatch when the axes don't divide the mesh
+    (or the mesh is a single device), with identical numerics either way.
+    """
     from repro.core import estimate_batch, model_api
     impl = model_api.resolve_impl(impl, mode="surface").name
     if impl == "reference":
         raise ValueError("impl='reference' for the fleet surface is the "
                          "per-command oracle; score modules one at a time")
     stacked = stack_params([m.params for m in modules])
+    if mesh is not None:
+        n_data = mesh.shape.get("data", 1)
+        n_model = mesh.shape.get("model", 1)
+        if (n_data * n_model > 1
+                and trace.cmd.shape[0] % n_data == 0
+                and len(modules) % n_model == 0):
+            return _sharded_surface_fn(mesh, impl == "pallas")(
+                trace, weight, stacked)
     dispatch = (estimate_batch.pallas_batched_surface_reports
                 if impl == "pallas"
                 else estimate_batch.batched_surface_reports)
     return dispatch(trace, weight, stacked)
+
+
+@functools.lru_cache(maxsize=8)
+def _sharded_surface_fn(mesh, pallas: bool):
+    """The jitted shard_map'd surface dispatch for one (mesh, impl) pair:
+    traces over 'data', modules over 'model'.  Memoized so repeat calls on
+    the same mesh reuse the compiled program."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import estimate_batch
+    dispatch = (estimate_batch.pallas_batched_surface_reports if pallas
+                else estimate_batch.batched_surface_reports)
+    return jax.jit(shard_map(
+        dispatch, mesh=mesh,
+        in_specs=(P("data"), P("data"), P("model")),
+        out_specs=P("data", "model"),
+        check_rep=False))
 
 
 def run_probes(modules, points: Sequence[ProbePoint], *,

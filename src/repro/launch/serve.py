@@ -12,8 +12,10 @@ smoke path exercises the production layout (trivially, on one device).
 ``--power-report`` turns on the power side: the compiled decode step's
 HBM traffic (execution-count-weighted HLO analysis, as in the dry run) is
 apportioned per sequence, wrapped into DRAM command traces carrying the
-decode batch's actual output bytes, and scored against every requested
-vendor in ONE batched ``estimate`` dispatch per batch — plus the
+decode batch's actual output bytes, and scored through the estimation
+service (``repro.serving``): lint-gated admission, ring-bucketed pad
+shapes (bounded jit cache across ``--batch`` sizes), the model
+device-resident, one batched dispatch per window — plus the
 HBM2e-anchored extrapolation (``repro.core.hbm``).  The scorer is any
 unified-protocol estimator (``repro.core.model_api``): ``--power-model
 vampire|micron|drampower`` picks the physics, ``--power-impl
@@ -140,7 +142,8 @@ def run(job: ServeJob) -> dict:
         res["power"] = power_report(job, decode, logits, tokens,
                                     n_data=n_data,
                                     step_seconds=float(np.median(lat))
-                                    if lat.size else 1e-3)
+                                    if lat.size else 1e-3,
+                                    mesh=mesh)
     return res
 
 
@@ -180,23 +183,33 @@ def _load_estimator(job: ServeJob):
 
 
 def lint_ingested(seq_traces) -> None:
-    """Batched protocol lint of the traces the power report is about to
-    bill.  Raises :class:`repro.analysis.TraceProtocolError` carrying the
+    """Batched protocol lint of traces bound for the power report.
+    Raises :class:`repro.analysis.TraceProtocolError` carrying the
     structured diagnostics (rule id, trace + command index, bank) when any
     ingested trace is protocol-illegal — a corrupt external trace must be
-    rejected, not silently priced."""
+    rejected, not silently priced.
+
+    ``power_report`` itself now admits through the
+    :class:`~repro.serving.EstimationService` (whose gate runs the same
+    linter and raises with the same origin); this standalone hook remains
+    for callers linting traces without standing up a service."""
     from repro.analysis import trace_lint
     trace_lint.lint_ingested(seq_traces, origin="serve.power_report")
 
 
 def power_report(job: ServeJob, compiled_decode, logits, tokens, *,
-                 n_data: int, step_seconds: float) -> dict:
-    """Score one decode batch's HBM traffic through the batched estimator.
+                 n_data: int, step_seconds: float, mesh=None) -> dict:
+    """Score one decode batch's HBM traffic through the estimation service.
 
     One DRAM command trace per sequence (carrying that sequence's actual
-    logits/token bytes as line data), one unified-protocol ``estimate``
-    dispatch for the whole (sequences x vendors) matrix, energies scaled
-    from the trace's modeled bytes to the step's measured traffic share."""
+    logits/token bytes as line data), admitted through the
+    :class:`~repro.serving.EstimationService` — lint-gated ingestion, the
+    ring's bucketed pad shapes (so varying ``--batch`` sizes stop growing
+    the jit cache: windows land on a small fixed shape vocabulary), the
+    model kept device-resident, and the dispatch sharded over ``mesh``
+    when it has more than one device.  Energies scale from each trace's
+    modeled bytes to the step's measured traffic share; the service's
+    metrics snapshot rides along under ``"serving"``."""
     from repro.core import hbm, traces
     from repro.core.dram import LINE_BYTES
 
@@ -227,17 +240,27 @@ def power_report(job: ServeJob, compiled_decode, logits, tokens, *,
         seq_traces.append(traces.app_trace(spec, n_requests=n_req,
                                            lines=lines))
 
-    # ingestion guard: never bill a protocol-illegal trace — reject with
-    # the linter's structured diagnostics (rule id + command index)
-    lint_ingested(seq_traces)
+    # ingestion + scoring through the serving stack: the service lints on
+    # admission (never bill a protocol-illegal trace) and dispatches the
+    # whole batch on the ring's bucketed pad shapes
+    from repro.analysis import trace_lint
+    from repro.serving import EstimationService, ServiceConfig
+    svc = EstimationService(model, ServiceConfig(impl=job.power_impl),
+                            mesh=mesh)
+    tickets, rejections = svc.submit_many(seq_traces, vendors)
+    if rejections:
+        raise trace_lint.TraceProtocolError(
+            [d for r in rejections for d in r.diagnostics],
+            origin="serve.power_report")
+    svc.close()
+    rows = [svc.result(t) for t in tickets]               # B vendor-rows
 
-    rep = model.estimate(seq_traces, vendors,
-                         impl=job.power_impl)            # (B, V) reports
     modeled_bytes = np.asarray(
         [traces.trace_request_lines(tr).shape[0] * LINE_BYTES
          for tr in seq_traces], np.float64)
     scale = (bytes_per_seq / np.maximum(modeled_bytes, 1.0))[:, None]
-    energy_pj = np.asarray(rep.energy_pj, np.float64) * scale  # per step
+    energy_pj = np.asarray([r.energy_pj for r in rows],
+                           np.float64) * scale            # (B, V) per step
 
     out = {
         "vendors": list(vendors),
@@ -246,6 +269,7 @@ def power_report(job: ServeJob, compiled_decode, logits, tokens, *,
         "bytes_per_seq_per_step": bytes_per_seq,
         "ddr_energy_pj_per_seq_step": energy_pj,          # (B, V)
         "ddr_energy_uj_per_token_mean": float(energy_pj.mean() * 1e-6),
+        "serving": dataclasses.asdict(svc.metrics()),
     }
     # the HBM2e-anchored extrapolation needs fitted VAMPIRE PowerParams;
     # the datasheet baselines have none (no data dependency to anchor)

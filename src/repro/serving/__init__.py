@@ -1,0 +1,36 @@
+"""Sharded, continuously batched estimation-as-a-service.
+
+The serving stack the ROADMAP's backbone item names, in three layers:
+
+* :mod:`repro.serving.ring` — the persistent :class:`TraceRing`:
+  continuous ragged admission, re-padded in place into a small fixed
+  vocabulary of bucketed pad shapes, dispatched on a cadence (bounded
+  jit cache by construction);
+* :mod:`repro.serving.engine` — the :class:`ServingEngine`: the model
+  pytree ``device_put`` once and kept resident, dispatches ``shard_map``-
+  sharded over a ``make_local_mesh(data, model)`` mesh with graceful
+  single-device fallback (identical numerics);
+* :mod:`repro.serving.service` — the :class:`EstimationService`:
+  ``trace_lint``-gated admission with structured :class:`Rejection`\\ s,
+  per-ticket results, and per-dispatch metrics (queue depth, batch fill,
+  traces/s, p50/p99 latency, rejection counts).
+
+Quick loop::
+
+    svc = EstimationService(model, ServiceConfig(), mesh=mesh)
+    tickets, rejections = svc.submit_many(traces)
+    svc.drain()
+    rows = [svc.result(t) for t in tickets if t is not None]
+    print(svc.metrics())
+"""
+from repro.serving.engine import ServingEngine
+from repro.serving.ring import (RingBatch, RingConfig, TraceRing,
+                                TraceTooLongError)
+from repro.serving.service import (EstimationService, MetricsSnapshot,
+                                   Rejection, ServiceConfig)
+
+__all__ = [
+    "EstimationService", "MetricsSnapshot", "Rejection", "RingBatch",
+    "RingConfig", "ServiceConfig", "ServingEngine", "TraceRing",
+    "TraceTooLongError",
+]
