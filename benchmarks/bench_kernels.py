@@ -19,9 +19,15 @@ import numpy as np
 
 from benchmarks.common import ARTIFACTS, fitted_vampire, row
 from repro.core import estimate_batch, model_api, traces
+from repro.kernels import autotune
 
 ARTIFACT = os.path.join(ARTIFACTS, "BENCH_kernels.json")
 GRIDS = ((8, 1), (8, 3), (32, 3), (128, 3))   # (traces, vendors)
+# interpret mode runs each grid cell as a Python-loop iteration, so the
+# wide trace row degrades superlinearly (~160x the vectorized path at 128
+# traces) while adding nothing the 32-trace row doesn't already cover —
+# the sweep caps there and records the cap in the artifact
+INTERPRET_MAX_TRACES = 32
 N_REQUESTS = 120
 WARM_REPEATS = {"vectorized": 8, "pallas": 3, "reference": 2}
 
@@ -49,9 +55,11 @@ def _time_impl(model, tb, vendors, impl: str):
 def run() -> list[str]:
     model = fitted_vampire()
     pallas_exec = model_api.impl_execution_mode("pallas")
+    sweep_grids = (GRIDS if pallas_exec == "compiled" else
+                   tuple(g for g in GRIDS if g[0] <= INTERPRET_MAX_TRACES))
     grids = []
     lines = []
-    for n_traces, n_vendors in GRIDS:
+    for n_traces, n_vendors in sweep_grids:
         vendors = list(model.vendors)[:n_vendors]
         trs = _trace_fleet(n_traces)
         tb = estimate_batch.TraceBatch.from_traces(trs)
@@ -86,6 +94,18 @@ def run() -> list[str]:
         "bench": "kernels",
         "backend": jax.default_backend(),
         "pallas_execution": pallas_exec,
+        "interpret_max_traces": (None if pallas_exec == "compiled"
+                                 else INTERPRET_MAX_TRACES),
+        # the autotuned launch configs these timings actually ran with
+        "autotune": {
+            "backend_key": autotune.backend_key(),
+            "table": autotune.choices(),
+            "per_grid": {
+                f"{e['traces']}x{e['vendors']}": autotune.best_config(
+                    "vampire_energy", e["traces"],
+                    e["commands_per_trace"])
+                for e in grids},
+        },
         "grids": grids,
         # the acceptance bar tracks the COMPILED fused path; interpret mode
         # (any non-TPU backend) is parity-checked but speed-exempt

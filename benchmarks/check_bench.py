@@ -79,6 +79,16 @@ CHECKS: dict[str, tuple[RatioCheck, ...]] = {
         RatioCheck(("service_speedup_vs_per_request",), floor=5.0),
         RatioCheck(("batch_fill",), floor=0.5),
     ),
+    "BENCH_fleetscale.json": (
+        # fleet-scale surface map, hardware-normalized: the chunked
+        # zero-restack dispatch must hold a wide modules/s margin over the
+        # legacy per-module restack loop (healthy ~100x+ on CPU), and the
+        # chunked result must stay BITWISE equal to the one-shot surface
+        # (the paths share one charge program by construction; 1.0 = every
+        # report leaf array-equal at the 1k-module parity point).
+        RatioCheck(("speedup_vs_restack",), floor=5.0),
+        RatioCheck(("parity_exact",), floor=1.0, rel_slack=0.0),
+    ),
     "BENCH_idd.json": (
         # Section 4 / Fig 14 physics, hardware-independent by construction:
         # frequency extrapolation must stay a good fit (paper worst R^2 =

@@ -26,6 +26,7 @@ MODULES = [
     ("analysis", "benchmarks.bench_analysis"),          # ours (PR 7)
     ("serve", "benchmarks.bench_serve"),                # ours (PR 8)
     ("roofline", "benchmarks.bench_roofline"),          # deliverable (g)
+    ("fleetscale", "benchmarks.bench_fleetscale"),      # ours (PR 9)
 ]
 
 

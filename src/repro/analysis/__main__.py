@@ -93,6 +93,7 @@ def main(argv=None) -> int:
         model = V.reference_vampire()
         findings = dispatch_audit.audit_all(model)
         findings.extend(dispatch_audit.audit_serving(model))
+        findings.extend(dispatch_audit.audit_fleet_chunked())
         errs = dispatch_audit.errors_of(findings)
         n_errors += len(errs)
         for f in findings:

@@ -209,10 +209,12 @@ def audit_combination(model, impl: str, mode: str,
 # ---------------------------------------------------------------------------
 def _mode_dispatcher(mode: str):
     from repro.core import estimate_batch as EB
+    # surface's jitted core is the shared chunk-charge program (the public
+    # wrapper is a plain function so the chunked dispatch can reuse it)
     return {"mean": EB.batched_reports,
             "range": EB.batched_range_reports,
             "distribution": EB.batched_distribution_reports,
-            "surface": EB.batched_surface_reports}[mode]
+            "surface": EB._surface_chunk_charge}[mode]
 
 
 def audit_recompilation(model, modes: Sequence[str] = _MODES,
@@ -322,6 +324,74 @@ def audit_serving(model, impl: str = "vectorized") -> list[AuditFinding]:
             kind, impl, "mean", "recompile", ERROR,
             "a mixed-length window landing in an already-compiled bucket "
             "recompiled the serving dispatch"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale chunked-dispatch probe (the zero-restack scaling contract)
+# ---------------------------------------------------------------------------
+def audit_fleet_chunked(tb=None, module_chunk: int = 4
+                        ) -> list[AuditFinding]:
+    """Drive the fleet-scale chunked surface dispatch and assert its
+    scaling contract: the compiled-program count of the chunk charge
+    program depends on the chunk SIZE, never the chunk COUNT — growing
+    the fleet at a fixed chunk size must reuse the warm program (the
+    property that makes a 50k-module surface map cost one compile), and
+    the donated scatter carry must stay float32 (a stray f64 in the
+    accumulator doubles the one buffer the chunked path exists to
+    bound)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import device_sim
+    from repro.core import estimate_batch as EB
+    from repro.core.dram import N_BANKS, N_ROW_BANDS
+
+    if tb is None:
+        tb = default_audit_batch()
+    findings: list[AuditFinding] = []
+
+    _, small = device_sim.synth_fleet_params(2 * module_chunk)
+    _, big = device_sim.synth_fleet_params(4 * module_chunk)
+    EB.chunked_surface_reports(tb.trace, tb.weight, small,
+                               module_chunk=module_chunk)        # warm
+    base = EB._surface_chunk_charge._cache_size()
+    EB.chunked_surface_reports(tb.trace, tb.weight, big,
+                               module_chunk=module_chunk)        # 2x chunks
+    if EB._surface_chunk_charge._cache_size() != base:
+        findings.append(AuditFinding(
+            "fleet", "vectorized", "surface", "recompile", ERROR,
+            "growing the fleet at a fixed module_chunk recompiled the "
+            "chunk charge program (compiled-program count must depend on "
+            "chunk size, not chunk count)"))
+    EB.chunked_surface_reports(tb.trace, tb.weight, small,
+                               module_chunk=module_chunk)        # revisit
+    if EB._surface_chunk_charge._cache_size() != base:
+        findings.append(AuditFinding(
+            "fleet", "vectorized", "surface", "recompile", ERROR,
+            "revisiting an already-seen fleet size recompiled the chunk "
+            "charge program"))
+
+    # float64 promotion in the donated scatter carry
+    t = tb.trace.cmd.shape[0]
+    acc = jnp.zeros((t, 2 * module_chunk, N_BANKS, N_ROW_BANDS),
+                    jnp.float32)
+    charge = jnp.zeros((t, module_chunk, N_BANKS, N_ROW_BANDS),
+                       jnp.float32)
+    try:
+        text = EB._scatter_chunk.lower(acc, charge, jnp.int32(0),
+                                       jnp.int32(0)).as_text()
+    except Exception as exc:
+        findings.append(AuditFinding(
+            "fleet", "vectorized", "surface", "audit_trace", WARNING,
+            f"chunk scatter failed to lower: {exc!r}"))
+        return findings
+    m = _F64_RE.search(text)
+    if m:
+        findings.append(AuditFinding(
+            "fleet", "vectorized", "surface", "float64", ERROR,
+            f"the donated chunk-scatter carry lowers with {m.group(0)} "
+            f"buffers (float32 contract violated)"))
     return findings
 
 

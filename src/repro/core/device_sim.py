@@ -148,6 +148,98 @@ def true_module_params(spec: P.ModuleSpec) -> PowerParams:
 
 
 # ---------------------------------------------------------------------------
+# Synthetic fleets of arbitrary size: the scale-out twin of the paper's
+# 50-module rig.
+#
+# ``true_module_params`` draws its process variation from a *sequential*
+# numpy stream (order-sensitive by design — see the NOTE there), which is
+# perfect for the 50 bench modules but serializes at fleet scale: 10k-50k
+# modules would mean 10k-50k Python RNG walks.  The synthetic-fleet family
+# below instead derives every module's variation from the counter-based
+# JAX RNG (``fold_in`` on (vendor, module id, year), the same discipline
+# as the measurement noise), so a whole fleet's parameter stack is ONE
+# vmapped draw: vendor-consistent (same per-vendor means, process sigmas,
+# IO-driver sigma and structural surfaces as the rig), seed-stable per
+# module id (module k's params never depend on the fleet size around it),
+# and float32 end to end.  Synthetic modules are a separate seeded family
+# from the rig's numpy stream — fleet-scale studies, not refits of the
+# paper's 50.
+# ---------------------------------------------------------------------------
+_SYNTH_ROOT = 0xF1EE7
+
+#: per-draw sigma scales, mirroring the ``true_module_params`` draw list
+#: (datadep x3, io x2, i2n, bank_open_delta, q_actpre, q_ref, i_pd,
+#: i_pd_slow, i_actpd, i_sr); the i_pd column is vendor-dependent and
+#: patched in-place inside ``_synth_factors``.
+_SYNTH_SCALES = (1.0, 0.6, 1.5, None, None, 1.2, 1.0, 1.0, 0.5, None,
+                 0.6, 0.6, 0.5)
+
+
+@jax.jit
+def _synth_factors(vendors, module_ids, years):
+    """(n,) module identities -> (n, 13) multiplicative lognormal process
+    factors, one counter-based draw per module (vectorized, order-free)."""
+    base = jax.random.key(_SYNTH_ROOT)
+    sig = jnp.asarray(P.PROCESS_SIGMA, jnp.float32)[vendors]      # (n,)
+
+    def draws(v, m, y):
+        k = jax.random.fold_in(
+            jax.random.fold_in(jax.random.fold_in(base, v), m), y)
+        return jax.random.normal(k, (13,), jnp.float32)
+
+    z = jax.vmap(draws)(vendors, module_ids, years)               # (n, 13)
+    io = jnp.full_like(sig, P.IO_DRIVER_SIGMA)
+    i_pd_scale = jnp.where(vendors == 1, 1.5, 0.6) * sig
+    cols = [io if s is None else s * sig for s in _SYNTH_SCALES]
+    cols[3], cols[4], cols[9] = io, io, i_pd_scale
+    return jnp.exp(z * jnp.stack(cols, axis=1))
+
+
+def synth_fleet_params(n_modules: int | None = None, *, year: int = 2015,
+                       vendors=None, module_ids=None):
+    """Ground-truth ``PowerParams`` stack for a synthetic fleet of
+    arbitrary size -> ``((n,) vendor ids, stacked params)`` with a leading
+    module axis on every leaf.
+
+    Vendors default to round-robin over the three rig vendors (so any
+    prefix of a bigger fleet is itself a valid fleet); pass ``vendors``
+    (and optionally ``module_ids``) to pin the mix.  Entirely vectorized:
+    no per-module Python loop anywhere, which is what lets
+    ``benchmarks/bench_fleetscale.py`` stand up 10k-50k module fleets."""
+    if vendors is None:
+        if n_modules is None:
+            raise ValueError("need n_modules or an explicit vendors array")
+        vendors = np.arange(int(n_modules), dtype=np.uint32) % 3
+    vendors = np.asarray(vendors, np.uint32)
+    if module_ids is None:
+        module_ids = np.arange(vendors.shape[0], dtype=np.uint32)
+    module_ids = np.asarray(module_ids, np.uint32)
+    years = np.full(vendors.shape, year, np.uint32)
+
+    base = jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack(leaves),
+        *[true_vendor_params(v, year) for v in range(3)])
+    v_idx = jnp.asarray(vendors, jnp.int32)
+    g = jax.tree_util.tree_map(lambda x: x[v_idx], base)
+    f = _synth_factors(jnp.asarray(vendors), jnp.asarray(module_ids),
+                       jnp.asarray(years))
+    stacked = g._replace(
+        datadep=g.datadep * f[:, None, None, 0:3],
+        i2n=g.i2n * f[:, 5],
+        bank_open_delta=g.bank_open_delta * f[:, 6, None],
+        q_actpre=g.q_actpre * f[:, 7],
+        q_ref=g.q_ref * f[:, 8],
+        i_pd=g.i_pd * f[:, 9],
+        io_read_ma_per_one=g.io_read_ma_per_one * f[:, 3],
+        io_write_ma_per_zero=g.io_write_ma_per_zero * f[:, 4],
+        i_pd_slow=g.i_pd_slow * f[:, 10],
+        i_actpd=g.i_actpd * f[:, 11],
+        i_sr=g.i_sr * f[:, 12],
+    )
+    return vendors, stacked
+
+
+# ---------------------------------------------------------------------------
 # Measurement noise: counter-based, seed-stable, vectorizable.
 #
 # Each measurement's multiplicative noise is a pure function of

@@ -40,12 +40,13 @@ sets (``model_api.TraceBatchCache``).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dram import CommandTrace, batch_traces
+from repro.core.dram import CommandTrace, N_BANKS, N_ROW_BANDS, batch_traces
 from repro.core.energy_model import (EnergyReport, PowerParams, _report,
                                      charge_from_features,
                                      distribution_features,
@@ -189,7 +190,6 @@ def batched_distribution_reports(trace: CommandTrace, weight: jax.Array,
     return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))
 
 
-@jax.jit
 def batched_surface_reports(trace: CommandTrace, weight: jax.Array,
                             stacked: PowerParams) -> EnergyReport:
     """The fleet-wide structural-variation surfaces (``mode='surface'``):
@@ -198,7 +198,50 @@ def batched_surface_reports(trace: CommandTrace, weight: jax.Array,
     :class:`EnergyReport` whose every leaf has shape
     ``(traces, vendors, banks, row_bands)``; summing the cell axes
     recovers :func:`batched_reports` exactly (same integrator, grouped by
-    the structural cell index instead of totalled)."""
+    the structural cell index instead of totalled).
+
+    The charge program is the SAME jitted chunk program the fleet-scale
+    chunked dispatch runs (:func:`_surface_chunk_charge` with the whole
+    module axis as one chunk), so chunked-vs-one-shot parity is bitwise
+    by construction, not merely allclose."""
+    charge = _surface_chunk_charge(trace, weight, stacked, False, False)
+    cycles = _surface_cycles_batch(trace, weight)          # (T, 8, R)
+    return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))
+
+
+# ---------------------------------------------------------------------------
+# Chunked surface dispatch: the fleet-scale twin of
+# ``batched_surface_reports``.
+#
+# The one-shot surface dispatch materializes every (trace, module) pair's
+# per-command intermediates at once — for a 10k-50k module fleet that is
+# tens of GB of finalize/charge planes for a result that is only
+# ``(T, V, 8, R)``.  The chunked path bounds live memory to ONE module
+# chunk's intermediates: a Python loop over fixed-shape chunk programs
+# (the loop is host-side so the compiled-program count depends on the
+# chunk SIZE, never the chunk COUNT — growing the fleet reuses the same
+# program, the property ``analysis.dispatch_audit.audit_fleet_chunked``
+# asserts), each chunk's charge scattered into a DONATED full-width
+# accumulator (``_scatter_chunk`` donates its carry, so XLA updates the
+# surface in place instead of copying it per chunk).  Exact parity with
+# the one-shot path: identical per-(trace, module) math, identical
+# ``_report`` finalization, pad modules (chunk-size remainder) sliced off
+# before the report is built.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("pallas", "interpret"))
+def _surface_chunk_charge(trace: CommandTrace, weight, chunk_pp: PowerParams,
+                          pallas: bool, interpret: bool):
+    """One module chunk's surface charge -> (T, chunk, 8, R) f32.  The
+    per-pair math is verbatim :func:`batched_surface_reports` (vectorized)
+    or the fused surface kernel (pallas), so chunked == one-shot holds
+    leaf-exactly."""
+    if pallas:
+        from repro.kernels.vampire_energy import ops as vops
+        charge, _ = vops.batched_charge_matrix(trace, weight, chunk_pp,
+                                               surface=True,
+                                               interpret=interpret)
+        return charge
+
     def one_trace(tr: CommandTrace, w: jax.Array):
         sf = extract_structural_features(tr)
 
@@ -206,10 +249,86 @@ def batched_surface_reports(trace: CommandTrace, weight: jax.Array,
             charges = charge_from_features(tr, finalize_features(sf, pp), pp)
             return surface_charge(tr, w, charges)          # (8, R)
 
-        charge = jax.vmap(one_paramset)(stacked)           # (V, 8, R)
-        return charge, surface_cycles(tr, w)               # cycles: (8, R)
+        return jax.vmap(one_paramset)(chunk_pp)            # (chunk, 8, R)
 
-    charge, cycles = jax.vmap(one_trace)(trace, weight)    # (T,V,8,R), (T,8,R)
+    return jax.vmap(one_trace)(trace, weight)              # (T, chunk, 8, R)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_chunk(acc, charge, t_start, m_start):
+    """Write one chunk's (t, c, 8, R) charge into the full surface at the
+    (trace, module) offset (traced i32 scalars, so every chunk index
+    reuses one compiled program).  ``acc`` is donated: the accumulator is
+    updated in place across the chunk loop, never copied."""
+    zero = jnp.int32(0)
+    return jax.lax.dynamic_update_slice(
+        acc, charge, (jnp.asarray(t_start, jnp.int32),
+                      jnp.asarray(m_start, jnp.int32), zero, zero))
+
+
+@jax.jit
+def _surface_cycles_batch(trace: CommandTrace, weight) -> jax.Array:
+    return jax.vmap(surface_cycles)(trace, weight)         # (T, 8, R)
+
+
+def _pad_leading(tree, pad: int):
+    """Extend every leaf's leading axis by ``pad`` rows replicating row 0
+    (any valid params work — pad modules are sliced off before the report;
+    replication keeps the chunk numerically well-behaved)."""
+    if pad == 0:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]), tree)
+
+
+def chunked_surface_reports(trace: CommandTrace, weight, stacked: PowerParams,
+                            *, module_chunk: int,
+                            trace_chunk: int | None = None,
+                            impl: str = "vectorized",
+                            interpret: bool | None = None) -> EnergyReport:
+    """Memory-bounded ``mode='surface'`` over a stacked module axis of any
+    size: :func:`batched_surface_reports`' exact result, evaluated
+    ``module_chunk`` modules (and optionally ``trace_chunk`` traces) at a
+    time.  ``impl`` is ``'vectorized'`` or ``'pallas'``."""
+    from repro.kernels.common import interpret_default
+    pallas = impl == "pallas"
+    if interpret is None:
+        interpret = interpret_default()
+    # interpret only steers the pallas lowering; pin it on the vectorized
+    # path so both the one-shot and chunked dispatch share ONE jit entry
+    interpret = bool(interpret) if pallas else False
+    n_modules = stacked.i2n.shape[0]
+    n_traces = trace.cmd.shape[0]
+    module_chunk = min(int(module_chunk), n_modules)
+    trace_chunk = (n_traces if trace_chunk is None
+                   else min(int(trace_chunk), n_traces))
+
+    m_pad = (-n_modules) % module_chunk
+    stacked = _pad_leading(stacked, m_pad)
+    t_pad = (-n_traces) % trace_chunk
+    if t_pad:
+        # zero-weight pad rows are exact by the TraceBatch contract
+        trace = _pad_leading(trace, t_pad)
+        weight = jnp.concatenate(
+            [weight, jnp.zeros((t_pad,) + weight.shape[1:], weight.dtype)])
+
+    acc = jnp.zeros((n_traces + t_pad, n_modules + m_pad, N_BANKS,
+                     N_ROW_BANDS), jnp.float32)
+    for ti in range(0, n_traces + t_pad, trace_chunk):
+        tr_c = jax.tree_util.tree_map(lambda x: x[ti:ti + trace_chunk],
+                                      trace)
+        w_c = weight[ti:ti + trace_chunk]
+        for mi in range(0, n_modules + m_pad, module_chunk):
+            chunk_pp = jax.tree_util.tree_map(
+                lambda x: x[mi:mi + module_chunk], stacked)
+            charge = _surface_chunk_charge(tr_c, w_c, chunk_pp, pallas,
+                                           interpret)
+            acc = _scatter_chunk(acc, charge, jnp.int32(ti), jnp.int32(mi))
+    charge = acc[:n_traces, :n_modules]
+    cycles = _surface_cycles_batch(
+        jax.tree_util.tree_map(lambda x: x[:n_traces], trace),
+        weight[:n_traces])
     return _report(charge, jnp.broadcast_to(cycles[:, None], charge.shape))
 
 

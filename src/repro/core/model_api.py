@@ -320,21 +320,27 @@ class StackedEstimatorMixin:
         return aux
 
 
-def device_resident(model, mesh=None):
-    """``jax.device_put`` a pytree model once, fully replicated, so serving
-    dispatches stop re-transferring parameters per call.
+def device_resident(model, mesh=None, *, axis: str | None = None):
+    """``jax.device_put`` a pytree model once, so repeat dispatches stop
+    re-transferring parameters per call.
 
-    With a mesh, the model lands replicated across every mesh device
-    (``NamedSharding(mesh, PartitionSpec())``) — exactly what a
-    ``shard_map`` over the trace axis wants for its parameter operand.
-    Without one, it lands on the default device.  Either way the treedef
-    is preserved (``device_put`` copies leaves, not aux data, and the aux
-    wrapper hashes by identity), so jit caches keyed on the resident model
-    keep hitting across calls."""
+    With a mesh and no ``axis``, the model lands replicated across every
+    mesh device (``NamedSharding(mesh, PartitionSpec())``) — exactly what
+    a ``shard_map`` over the trace axis wants for its parameter operand.
+    With ``axis`` (e.g. ``'model'``), every leaf's LEADING dimension is
+    sharded over that mesh axis instead
+    (``NamedSharding(mesh, PartitionSpec(axis))``) — the stacked-fleet
+    layout, where the module axis lives distributed and each shard holds
+    only its modules' params.  Without a mesh, it lands on the default
+    device.  Either way the treedef is preserved (``device_put`` copies
+    leaves, not aux data, and the aux wrapper hashes by identity), so jit
+    caches keyed on the resident model keep hitting across calls."""
     import jax
     if mesh is None:
         return jax.device_put(model)
-    sharding = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    spec = (jax.sharding.PartitionSpec() if axis is None
+            else jax.sharding.PartitionSpec(axis))
+    sharding = jax.sharding.NamedSharding(mesh, spec)
     return jax.device_put(model, sharding)
 
 

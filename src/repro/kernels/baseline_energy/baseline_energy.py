@@ -97,12 +97,17 @@ _SURFACE_KERNELS = {kind: _make_surface_kernel(kind)
 def baseline_energy_pallas(kind: str, planes: dict, any_act, table,
                            block_n: int = BLOCK_N,
                            interpret: bool | None = None,
-                           cell_t=None) -> jax.Array:
+                           cell_t=None,
+                           grid_layout: str = "vti") -> jax.Array:
     """(T, V) masked charge matrix of one baseline physics.  ``planes``
     maps :data:`PLANES` to (T, N) f32 arrays; ``any_act`` is (T,) f32;
     ``table`` is the stacked (V, K) datasheet matrix.  Passing ``cell_t``
     (the (T, CELLS, N) one-hot structural cell plane) switches to the
-    surface kernel and returns the (T, V, CELLS) charge decomposition."""
+    surface kernel and returns the (T, V, CELLS) charge decomposition.
+    ``grid_layout`` picks the grid-major order (vendor- vs trace-
+    outermost, ``kernels.vampire_energy._grid_maps``) — pure scheduling,
+    identical partial sums either way."""
+    from repro.kernels.vampire_energy.vampire_energy import _grid_maps
     if interpret is None:
         interpret = interpret_default()
     padded = {}
@@ -112,15 +117,15 @@ def baseline_energy_pallas(kind: str, planes: dict, any_act, table,
     n_traces, n_pad = padded["dt"].shape
     n_vendors, n_keys = table.shape
     grid_n = cdiv(n_pad, block_n)
-    grid = (n_vendors, n_traces, grid_n)
+    grid, as_map = _grid_maps(grid_layout, n_vendors, n_traces, grid_n)
 
-    spec_2d = pl.BlockSpec((1, block_n), lambda v, t, i: (t, i))
-    tail_specs = [pl.BlockSpec((1,), lambda v, t, i: (t,)),
-                  pl.BlockSpec((1, n_keys), lambda v, t, i: (v, 0))]
+    spec_2d = pl.BlockSpec((1, block_n), as_map(lambda v, t, i: (t, i)))
+    tail_specs = [pl.BlockSpec((1,), as_map(lambda v, t, i: (t,))),
+                  pl.BlockSpec((1, n_keys), as_map(lambda v, t, i: (v, 0)))]
     args = [padded[n] for n in PLANES]
     if cell_t is None:
         kernel, cell_specs = _KERNELS[kind], []
-        out_spec = pl.BlockSpec((1, 1, 1), lambda v, t, i: (v, t, i))
+        out_spec = pl.BlockSpec((1, 1, 1), as_map(lambda v, t, i: (v, t, i)))
         out_shape = jax.ShapeDtypeStruct((n_vendors, n_traces, grid_n),
                                          jnp.float32)
     else:
@@ -128,9 +133,9 @@ def baseline_energy_pallas(kind: str, planes: dict, any_act, table,
         padded_cell, _ = pad_to(cell_t.astype(jnp.float32), block_n, axis=2)
         args.append(padded_cell)
         cell_specs = [pl.BlockSpec((1, N_SURFACE_CELLS, block_n),
-                                   lambda v, t, i: (t, 0, i))]
+                                   as_map(lambda v, t, i: (t, 0, i)))]
         out_spec = pl.BlockSpec((1, 1, 1, N_SURFACE_CELLS),
-                                lambda v, t, i: (v, t, i, 0))
+                                as_map(lambda v, t, i: (v, t, i, 0)))
         out_shape = jax.ShapeDtypeStruct(
             (n_vendors, n_traces, grid_n, N_SURFACE_CELLS), jnp.float32)
     partial = pl.pallas_call(

@@ -19,9 +19,10 @@ from repro.kernels.common import interpret_default
 
 @functools.partial(jax.jit,
                    static_argnames=("kind", "surface", "block_n",
-                                    "interpret"))
+                                    "interpret", "grid_layout"))
 def _charge_matrix(trace: CommandTrace, weight, table, kind: str,
-                   surface: bool, block_n: int, interpret: bool):
+                   surface: bool, block_n: int, interpret: bool,
+                   grid_layout: str):
     st = jax.vmap(structural_state)(trace)
     planes = {
         "dt": trace.dt.astype(jnp.float32),
@@ -41,24 +42,37 @@ def _charge_matrix(trace: CommandTrace, weight, table, kind: str,
                                 dtype=jnp.float32).transpose(0, 2, 1)
         charge = baseline_energy_pallas(kind, planes, any_act, table,
                                         block_n=block_n,
-                                        interpret=interpret, cell_t=cell_t)
+                                        interpret=interpret, cell_t=cell_t,
+                                        grid_layout=grid_layout)
         return (charge.reshape(t, -1, N_BANKS, N_ROW_BANDS),
                 jax.vmap(surface_cycles)(trace, weight))
     charge = baseline_energy_pallas(kind, planes, any_act, table,
-                                    block_n=block_n, interpret=interpret)
+                                    block_n=block_n, interpret=interpret,
+                                    grid_layout=grid_layout)
     cycles = jnp.sum(trace.dt * weight.astype(jnp.int32), axis=1,
                      dtype=jnp.int32)
     return charge, cycles
 
 
 def baseline_charge_matrix(trace: CommandTrace, weight, table, kind: str, *,
-                           surface: bool = False, block_n: int = BLOCK_N,
-                           interpret: bool | None = None):
+                           surface: bool = False, block_n: int | None = None,
+                           interpret: bool | None = None,
+                           grid_layout: str | None = None):
     """Masked charge of every (trace, vendor) pair for one baseline kind
     -> ``((T, V) charge in mA*cycles, (T,) masked cycles)``, or with
     ``surface=True`` the per-(bank, row-band) structural decomposition
-    ``((T, V, 8, N_ROW_BANDS) charge, (T, 8, N_ROW_BANDS) cycles)``."""
+    ``((T, V, 8, N_ROW_BANDS) charge, (T, 8, N_ROW_BANDS) cycles)``.
+    ``block_n``/``grid_layout`` default to the autotuner's committed
+    winner for this (backend, shape-bucket)
+    (``kernels.autotune.best_config``)."""
     if interpret is None:
         interpret = interpret_default()
+    if block_n is None or grid_layout is None:
+        from repro.kernels import autotune
+        cfg = autotune.best_config("baseline_energy", trace.cmd.shape[0],
+                                   trace.cmd.shape[1])
+        block_n = cfg["block_n"] if block_n is None else block_n
+        grid_layout = (cfg["layout"] if grid_layout is None
+                       else grid_layout)
     return _charge_matrix(trace, weight, table, kind, surface, block_n,
-                          interpret)
+                          interpret, grid_layout)

@@ -36,10 +36,11 @@ from repro.kernels.vampire_energy.vampire_energy import (
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("surface", "block_n", "interpret"))
+                   static_argnames=("surface", "block_n", "interpret",
+                                    "grid_layout"))
 def _charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
                    ones_frac, toggle_frac, surface: bool, block_n: int,
-                   interpret: bool):
+                   interpret: bool, grid_layout: str):
     st = jax.vmap(structural_state)(trace)
     t, n = trace.cmd.shape
     if ones_frac is None:
@@ -83,11 +84,13 @@ def _charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
                                 dtype=jnp.float32).transpose(0, 2, 1)
         charge = batched_energy_pallas(feats, coeffs, scal, bvec,
                                        block_n=block_n, interpret=interpret,
-                                       cell_t=cell_t)   # (T, V, CELLS)
+                                       cell_t=cell_t,
+                                       grid_layout=grid_layout)
         return (charge.reshape(t, -1, N_BANKS, N_ROW_BANDS),
                 jax.vmap(surface_cycles)(trace, weight))
     charge = batched_energy_pallas(feats, coeffs, scal, bvec,
-                                   block_n=block_n, interpret=interpret)
+                                   block_n=block_n, interpret=interpret,
+                                   grid_layout=grid_layout)
     cycles = jnp.sum(trace.dt * weight.astype(jnp.int32), axis=1,
                      dtype=jnp.int32)
     return charge, cycles
@@ -95,8 +98,9 @@ def _charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
 
 def batched_charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
                           *, ones_frac=None, toggle_frac=None,
-                          surface: bool = False, block_n: int = BLOCK_N,
-                          interpret: bool | None = None):
+                          surface: bool = False, block_n: int | None = None,
+                          interpret: bool | None = None,
+                          grid_layout: str | None = None):
     """Masked charge of every (trace, paramset) pair through the fused
     kernels -> ``((T, V) charge in mA*cycles, (T,) masked cycles)``, or
     with ``surface=True`` the structural decomposition
@@ -105,11 +109,22 @@ def batched_charge_matrix(trace: CommandTrace, weight, stacked: PowerParams,
     ``trace``/``weight`` are a padded TraceBatch's (T, N) fields;
     ``stacked`` carries a leading paramset axis.  ``interpret`` resolves
     per call (compiled on TPU, interpreted elsewhere) BEFORE entering the
-    jitted body, so it participates in the jit cache key."""
+    jitted body, so it participates in the jit cache key.  ``block_n`` /
+    ``grid_layout`` likewise resolve per call: when not pinned by the
+    caller, the autotuner's committed winner for this (backend,
+    shape-bucket) applies (``kernels.autotune.best_config``), defaulting
+    to the historical ``BLOCK_N``/vendor-major grid where untuned."""
     if interpret is None:
         interpret = interpret_default()
+    if block_n is None or grid_layout is None:
+        from repro.kernels import autotune
+        cfg = autotune.best_config("vampire_energy", trace.cmd.shape[0],
+                                   trace.cmd.shape[1])
+        block_n = cfg["block_n"] if block_n is None else block_n
+        grid_layout = (cfg["layout"] if grid_layout is None
+                       else grid_layout)
     return _charge_matrix(trace, weight, stacked, ones_frac, toggle_frac,
-                          surface, block_n, interpret)
+                          surface, block_n, interpret, grid_layout)
 
 
 def trace_energy_kernel(trace: CommandTrace, pp: PowerParams) -> EnergyReport:

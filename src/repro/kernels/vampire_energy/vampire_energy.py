@@ -190,10 +190,38 @@ def _surface_kernel(ones_ref, togg_ref, op_ref, mode_ref, dt_ref, isrw_ref,
     o_ref[0, 0, 0, :] = jnp.sum(cell_ref[0] * cw[None, :], axis=1)
 
 
+def _grid_maps(grid_layout: str, n_vendors: int, n_traces: int,
+               grid_n: int):
+    """The grid tuple plus an index-map builder for one grid-major order.
+
+    ``'vti'`` (the historical order) iterates vendors outermost, keeping
+    one trace's feature planes resident across the vendor sweep of a
+    block; ``'tvi'`` iterates traces outermost, keeping one vendor's
+    parameter blocks resident instead.  The autotuner
+    (``kernels/autotune``) picks per (backend, shape-bucket).  ``as_map``
+    lifts a ``(v, t, i) -> block index`` function into the grid's own
+    coordinate order, so the kernels and BlockSpecs stay layout-agnostic.
+    """
+    if grid_layout == "tvi":
+        grid = (n_traces, n_vendors, grid_n)
+
+        def as_map(sel):
+            return lambda t, v, i: sel(v, t, i)
+    elif grid_layout == "vti":
+        grid = (n_vendors, n_traces, grid_n)
+
+        def as_map(sel):
+            return lambda v, t, i: sel(v, t, i)
+    else:
+        raise ValueError(f"unknown grid_layout {grid_layout!r}")
+    return grid, as_map
+
+
 def batched_energy_pallas(feats: dict, coeffs, scal, bvec,
                           block_n: int = BLOCK_N,
                           interpret: bool | None = None,
-                          cell_t=None) -> jax.Array:
+                          cell_t=None,
+                          grid_layout: str = "vti") -> jax.Array:
     """The (vendors, traces, blocks)-gridded charge reduction.
 
     ``feats`` maps :data:`FEATURE_PLANES` names to (T, N) arrays, plus
@@ -203,7 +231,9 @@ def batched_energy_pallas(feats: dict, coeffs, scal, bvec,
     (T, V) masked charge matrix in mA*cycles — or, when ``cell_t`` (the
     (T, CELLS, N) one-hot structural cell plane) is passed, switches the
     grid to the surface kernel and returns the (T, V, CELLS) charge
-    decomposition of ``mode='surface'``."""
+    decomposition of ``mode='surface'``.  ``grid_layout`` picks the
+    grid-major order (see :func:`_grid_maps`) — pure scheduling, the
+    partial sums are identical either way."""
     if interpret is None:
         interpret = interpret_default()
     padded = {}
@@ -215,19 +245,22 @@ def batched_energy_pallas(feats: dict, coeffs, scal, bvec,
     n_traces, n_pad = padded["ones"].shape
     n_vendors = coeffs.shape[0]
     grid_n = cdiv(n_pad, block_n)
-    grid = (n_vendors, n_traces, grid_n)
+    grid, as_map = _grid_maps(grid_layout, n_vendors, n_traces, grid_n)
 
-    spec_2d = pl.BlockSpec((1, block_n), lambda v, t, i: (t, i))
-    spec_surf = pl.BlockSpec((1, 1, block_n), lambda v, t, i: (v, t, i))
-    spec_8 = pl.BlockSpec((1, 8, block_n), lambda v, t, i: (t, 0, i))
-    param_specs = [pl.BlockSpec((1, 4, 2, 3), lambda v, t, i: (v, 0, 0, 0)),
+    spec_2d = pl.BlockSpec((1, block_n), as_map(lambda v, t, i: (t, i)))
+    spec_surf = pl.BlockSpec((1, 1, block_n),
+                             as_map(lambda v, t, i: (v, t, i)))
+    spec_8 = pl.BlockSpec((1, 8, block_n), as_map(lambda v, t, i: (t, 0, i)))
+    param_specs = [pl.BlockSpec((1, 4, 2, 3),
+                                as_map(lambda v, t, i: (v, 0, 0, 0))),
                    pl.BlockSpec((1, len(_SCAL_FIELDS)),
-                                lambda v, t, i: (v, 0)),
-                   pl.BlockSpec((1, 3, 8), lambda v, t, i: (v, 0, 0))]
+                                as_map(lambda v, t, i: (v, 0))),
+                   pl.BlockSpec((1, 3, 8),
+                                as_map(lambda v, t, i: (v, 0, 0)))]
     args = [padded[n] for n in FEATURE_PLANES] + [padded["surf"]]
     if cell_t is None:
         kernel, cell_specs = _energy_kernel, []
-        out_spec = pl.BlockSpec((1, 1, 1), lambda v, t, i: (v, t, i))
+        out_spec = pl.BlockSpec((1, 1, 1), as_map(lambda v, t, i: (v, t, i)))
         out_shape = jax.ShapeDtypeStruct((n_vendors, n_traces, grid_n),
                                          jnp.float32)
     else:
@@ -235,9 +268,9 @@ def batched_energy_pallas(feats: dict, coeffs, scal, bvec,
         padded_cell, _ = pad_to(cell_t, block_n, axis=2)
         args.append(padded_cell)
         cell_specs = [pl.BlockSpec((1, N_SURFACE_CELLS, block_n),
-                                   lambda v, t, i: (t, 0, i))]
+                                   as_map(lambda v, t, i: (t, 0, i)))]
         out_spec = pl.BlockSpec((1, 1, 1, N_SURFACE_CELLS),
-                                lambda v, t, i: (v, t, i, 0))
+                                as_map(lambda v, t, i: (v, t, i, 0)))
         out_shape = jax.ShapeDtypeStruct(
             (n_vendors, n_traces, grid_n, N_SURFACE_CELLS), jnp.float32)
     args += [padded["bank_t"], padded["open_t"], coeffs, scal, bvec]

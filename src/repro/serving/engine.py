@@ -54,7 +54,10 @@ class ServingEngine:
         self.mesh = mesh
         self.n_shards = (math.prod(mesh.shape.values())
                          if mesh is not None else 1)
-        self.resident = model_api.device_resident(model, mesh)
+        # serving shard_maps the TRACE axis, so the model rides replicated
+        # (axis=None); the module-axis twin — stacked fleet params sharded
+        # over 'model' — lives in fleet.FleetStackCache
+        self.resident = model_api.device_resident(model, mesh, axis=None)
         self._fns: dict[tuple, object] = {}
 
     # ------------------------------------------------------------ dispatch
