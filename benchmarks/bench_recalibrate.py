@@ -1,0 +1,142 @@
+"""Online recalibration from streaming telemetry (ours): the
+``fitter='streaming'`` path of the fitter registry.  Emits the
+``BENCH_recalibrate.json`` artifact CI uploads and gates.
+
+Three stories, on a 6-module drifting fleet over 120 telemetry ticks:
+
+* **tracking** — mean absolute current error of the recalibrated model vs
+  the model left frozen after its one-shot campaign fit, both against the
+  reconstructed drifted ground truth.  Gated:
+  ``frozen_over_recalibrated_mape`` must hold >=5x (the frozen model goes
+  stale the way the paper showed datasheets do), and
+  ``oracle_over_recalibrated_mape`` >=0.4 (the streaming fit stays within
+  ~2x of a full campaign refit run fresh on the final drifted fleet).
+* **update cost** — the per-tick incremental work (fold one telemetry
+  slice into the decayed sufficient statistics + drift score) vs a full
+  campaign refit.  Gated: ``full_refit_over_update`` >=50x — the point of
+  maintaining running moments is that a tick costs a scatter, not a
+  campaign.
+* **detector** — trigger count and peak drift score ride along
+  (informational; TP/FP behavior is gated in the test suite).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ARTIFACTS, row
+from repro.core import device_sim, model_api, recalibrate
+from repro.core import params as P
+
+ARTIFACT = os.path.join(ARTIFACTS, "BENCH_recalibrate.json")
+
+N_VENDORS = 3
+MODULES_PER_VENDOR = 2
+TICKS = 120
+CHECKPOINTS = (30, 60, 90, 120)
+FIT_KW = dict(probe_modules=2, probe_reps=64, n_rows=8)
+CONFIG = recalibrate.RecalConfig(probe_reps=64, n_rows=8, probe_modules=2,
+                                 decay=0.7, slice_size=120)
+DRIFT = device_sim.DriftProcess(temp_amp=0.01, temp_period=64.0,
+                                aging_rate=8e-3, act_aging_rate=5e-3,
+                                noise_sigma=1e-3)
+
+
+def run() -> list[str]:
+    specs = [P.ModuleSpec(v, i, 2015) for v in range(N_VENDORS)
+             for i in range(MODULES_PER_VENDOR)]
+    fleet_mods = device_sim.make_fleet(specs)
+
+    t0 = time.perf_counter()
+    fitter = model_api.fit("vampire", fleet_mods, fitter="streaming",
+                           config=CONFIG)
+    fit_s = time.perf_counter() - t0
+    frozen = fitter.model
+
+    src = recalibrate.TelemetrySource(fleet_mods, CONFIG, drift=DRIFT)
+    tb = src.batch
+    update_s: list[float] = []
+    refit_s: list[float] = []
+    triggers = 0
+    peak_score = 0.0
+    frozen_mape: dict[str, float] = {}
+    recal_mape: dict[str, float] = {}
+    for tick in range(1, TICKS + 1):
+        cur, idx = src.measure(tick)
+        t0 = time.perf_counter()
+        rep = fitter.observe(cur, idx, tick)
+        jax.block_until_ready(fitter.stats.mean)
+        update_s.append(time.perf_counter() - t0)
+        peak_score = max(peak_score, rep.score)
+        if rep.triggered:
+            triggers += 1
+            t0 = time.perf_counter()
+            fitter.refit()
+            refit_s.append(time.perf_counter() - t0)
+        if tick in CHECKPOINTS:
+            truth = src.true_params_at(tick)
+            frozen_mape[str(tick)] = recalibrate.fleet_current_mape(
+                frozen, tb.trace, tb.weight, specs, truth)
+            recal_mape[str(tick)] = recalibrate.fleet_current_mape(
+                fitter.model, tb.trace, tb.weight, specs, truth)
+
+    # the oracle: a full campaign refit, fresh, on the final drifted fleet
+    final = CHECKPOINTS[-1]
+    truth = src.true_params_at(final)
+    drifted = [device_sim.SimulatedModule(
+        s, jax.tree_util.tree_map(lambda x, i=i: x[i], truth))
+        for i, s in enumerate(specs)]
+    t0 = time.perf_counter()
+    oracle = model_api.fit("vampire", drifted, fitter="campaign", **FIT_KW)
+    full_refit_s = time.perf_counter() - t0
+    oracle_mape = recalibrate.fleet_current_mape(
+        oracle, tb.trace, tb.weight, specs, truth)
+
+    update_p50 = float(np.percentile(update_s, 50))
+    blob = {
+        "bench": "recalibrate",
+        "backend": jax.default_backend(),
+        "modules": len(specs),
+        "ticks": TICKS,
+        "slice_size": CONFIG.slice_size,
+        "decay": CONFIG.decay,
+        "drift": {"temp_amp": DRIFT.temp_amp, "aging_rate": DRIFT.aging_rate,
+                  "act_aging_rate": DRIFT.act_aging_rate},
+        "initial_fit_s": fit_s,
+        "frozen_mape": frozen_mape,
+        "recalibrated_mape": recal_mape,
+        "oracle_mape": oracle_mape,
+        "update_ms_p50": update_p50 * 1e3,
+        "streaming_refit_ms_p50": (float(np.percentile(refit_s, 50)) * 1e3
+                                   if refit_s else 0.0),
+        "full_refit_s": full_refit_s,
+        "detector_triggers": triggers,
+        "detector_peak_score": peak_score,
+        # the gated ratios
+        "frozen_over_recalibrated_mape": (frozen_mape[str(final)]
+                                          / recal_mape[str(final)]),
+        "oracle_over_recalibrated_mape": (oracle_mape
+                                          / recal_mape[str(final)]),
+        "full_refit_over_update": full_refit_s / update_p50,
+    }
+
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump(blob, f, indent=2)
+
+    return [
+        row("recalibrate.update_tick", update_p50 * 1e6,
+            f"slice={CONFIG.slice_size};decay={CONFIG.decay}"),
+        row("recalibrate.full_refit", full_refit_s * 1e6,
+            f"refit_over_update={blob['full_refit_over_update']:.0f}x"),
+        row("recalibrate.tracking", blob["recalibrated_mape"][str(final)],
+            f"frozen_over_recal="
+            f"{blob['frozen_over_recalibrated_mape']:.1f}x;"
+            f"oracle_over_recal="
+            f"{blob['oracle_over_recalibrated_mape']:.2f};"
+            f"triggers={triggers};artifact=BENCH_recalibrate.json"),
+    ]

@@ -89,6 +89,19 @@ CHECKS: dict[str, tuple[RatioCheck, ...]] = {
         RatioCheck(("speedup_vs_restack",), floor=5.0),
         RatioCheck(("parity_exact",), floor=1.0, rel_slack=0.0),
     ),
+    "BENCH_recalibrate.json": (
+        # online recalibration from streaming telemetry: the frozen
+        # one-shot fit must go >=5x stale relative to the recalibrated
+        # model under the benchmark's drift (healthy ~8x), the streaming
+        # fit must stay near a fresh full-campaign oracle refit (healthy
+        # oracle/recal ~0.5-0.7; a lagging or broken incremental fit drops
+        # this toward the frozen model's ratio), and the per-tick
+        # incremental update must stay orders of magnitude cheaper than a
+        # full campaign refit (healthy ~1000x+).
+        RatioCheck(("frozen_over_recalibrated_mape",), floor=5.0),
+        RatioCheck(("oracle_over_recalibrated_mape",), floor=0.4),
+        RatioCheck(("full_refit_over_update",), floor=50.0),
+    ),
     "BENCH_idd.json": (
         # Section 4 / Fig 14 physics, hardware-independent by construction:
         # frequency extrapolation must stay a good fit (paper worst R^2 =

@@ -27,6 +27,7 @@ MODULES = [
     ("serve", "benchmarks.bench_serve"),                # ours (PR 8)
     ("roofline", "benchmarks.bench_roofline"),          # deliverable (g)
     ("fleetscale", "benchmarks.bench_fleetscale"),      # ours (PR 9)
+    ("recalibrate", "benchmarks.bench_recalibrate"),    # ours (PR 10)
 ]
 
 

@@ -9,7 +9,10 @@ any ERROR finding:
    with the batched engine;
 2. **dispatch audit** — every registered (estimator kind x impl x mode)
    combination traced + lowered and checked for float64 promotion, host
-   callbacks, dead pad-masking, and recompilation hazards;
+   callbacks, dead pad-masking, and recompilation hazards; plus the
+   online-recalibration probe (the incremental update step compiles
+   once and stays float32, and a streaming refit hot-swapped through
+   ``ServingEngine.update_model`` adds zero new compiled programs);
 3. **repo lint** — the AST invariants over ``src/repro``.
 
 Pass ``--skip-dispatch`` to run only the cheap static passes (the
@@ -94,6 +97,7 @@ def main(argv=None) -> int:
         findings = dispatch_audit.audit_all(model)
         findings.extend(dispatch_audit.audit_serving(model))
         findings.extend(dispatch_audit.audit_fleet_chunked())
+        findings.extend(dispatch_audit.audit_recalibration(model))
         errs = dispatch_audit.errors_of(findings)
         n_errors += len(errs)
         for f in findings:

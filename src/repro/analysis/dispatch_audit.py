@@ -396,6 +396,90 @@ def audit_fleet_chunked(tb=None, module_chunk: int = 4
 
 
 # ---------------------------------------------------------------------------
+# Online-recalibration probe (the fit-while-serving contract)
+# ---------------------------------------------------------------------------
+def audit_recalibration(model=None) -> list[AuditFinding]:
+    """Audit the streaming-fit path (``repro.core.recalibrate``):
+
+    * the ONE incremental update step (``_update_stats``) lowers f64-free
+      (the sufficient statistics are a float32 pytree end to end);
+    * a round-robin telemetry stream — fixed slice width, moving cell
+      window, advancing tick — compiles the update step exactly ONCE;
+    * a streaming refit pushed through ``ServingEngine.update_model`` is
+      treedef-stable: the warm engine re-dispatches with ZERO new
+      compiled programs (the property that makes fit-while-serving free).
+    """
+    import jax.numpy as jnp
+
+    from repro.core import params as P
+    from repro.core import recalibrate
+    from repro.serving.engine import ServingEngine
+
+    if model is None:
+        from repro.core import vampire as V
+        model = V.reference_vampire()
+    cfg = recalibrate.RecalConfig(probe_reps=64, n_rows=8,
+                                  probe_modules=2, slice_size=32)
+    specs = [P.ModuleSpec(v, i, 2015)
+             for v in model.vendors for i in range(2)]
+    fitter = recalibrate.StreamingFitter(model, specs, cfg)
+    findings: list[AuditFinding] = []
+
+    # ---- float64 promotion in the lowered update step --------------------
+    cur = jnp.zeros((len(specs), cfg.slice_size), jnp.float32)
+    idx = jnp.arange(cfg.slice_size, dtype=jnp.int32)
+    try:
+        text = recalibrate._update_stats.lower(
+            fitter.stats, cur, idx, fitter._decay, fitter._predicted,
+            fitter._floor).as_text()
+    except Exception as exc:
+        findings.append(AuditFinding(
+            "recalibrate", "streaming", "fit", "audit_trace", WARNING,
+            f"incremental update step failed to lower: {exc!r}"))
+    else:
+        m = _F64_RE.search(text)
+        if m:
+            findings.append(AuditFinding(
+                "recalibrate", "streaming", "fit", "float64", ERROR,
+                f"the incremental update step lowers with {m.group(0)} "
+                f"buffers (the sufficient statistics must stay float32)"))
+
+    # ---- one compiled program across the telemetry stream ----------------
+    n_cells = fitter.n_cells
+    before = recalibrate._update_stats._cache_size()
+    fitter.observe(np.asarray(fitter._predicted[:, :cfg.slice_size]),
+                   np.arange(cfg.slice_size), tick=1)        # warm
+    base = recalibrate._update_stats._cache_size()
+    if base > before + 1:
+        findings.append(AuditFinding(
+            "recalibrate", "streaming", "fit", "recompile", ERROR,
+            "the first telemetry slice compiled more than one update "
+            "program"))
+    shifted = (np.arange(cfg.slice_size) + cfg.slice_size) % n_cells
+    fitter.observe(
+        np.asarray(fitter._predicted)[:, shifted], shifted, tick=2)
+    if recalibrate._update_stats._cache_size() != base:
+        findings.append(AuditFinding(
+            "recalibrate", "streaming", "fit", "recompile", ERROR,
+            "the round-robin telemetry stream recompiled the update step "
+            "(a fixed-width slice at a new tick must hit the cache)"))
+
+    # ---- streaming refit -> update_model: zero new programs --------------
+    engine = ServingEngine(model)
+    tb = default_audit_batch()
+    engine.dispatch(tb)                                      # warm
+    warm = engine.cache_size()
+    engine.update_model(fitter.refit())
+    engine.dispatch(tb)
+    if engine.cache_size() != warm:
+        findings.append(AuditFinding(
+            "recalibrate", "streaming", "fit", "recompile", ERROR,
+            "a streaming refit pushed through ServingEngine.update_model "
+            "compiled new programs (the refresh is not treedef-stable)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # Whole-registry sweep
 # ---------------------------------------------------------------------------
 def audit_model(model, impls: Sequence[str] | None = None,

@@ -1,7 +1,7 @@
 """AST lint: the Model API invariants the ROADMAP states in prose, made
 machine-checkable.
 
-Four rules over ``src/repro`` (reported as :class:`RepoFinding`; the CI
+Five rules over ``src/repro`` (reported as :class:`RepoFinding`; the CI
 gate fails on any ERROR):
 
 * **R1 no-deprecated-shims** — no internal call sites of the deprecated
@@ -19,6 +19,11 @@ gate fails on any ERROR):
   the env var freezes the choice at import time and breaks the CI
   pallas-interpret job), and every module invoking ``pallas_call`` must
   reference ``interpret_default``.
+* **R5 fitters-declare-streaming** — every
+  ``register_fitter(FitterSpec(...))`` passes an explicit ``streaming=``
+  flag (the fitter-registry twin of R2): whether a fitter consumes a
+  one-shot campaign or a telemetry stream decides which call shapes
+  ``model_api.fit`` accepts, so it must be declared, never defaulted.
 * **R4 params-serialization-covered** — every ``PowerParams`` field is
   either in the v2 serialization field list (``model_api._FITTED_FIELDS``)
   or derived at load time (a keyword of the ``PowerParams(...)``
@@ -116,6 +121,30 @@ def check_impls_declare_modes(sources=None) -> list[RepoFinding]:
                     "impls-declare-modes", ERROR, rel, node.lineno,
                     "register_impl(EstimateImpl(...)) without an explicit "
                     "modes= declaration"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R5 — register_fitter declares streaming
+# ---------------------------------------------------------------------------
+def check_fitters_declare_streaming(sources=None) -> list[RepoFinding]:
+    findings = []
+    for rel, tree in (sources if sources is not None else _iter_sources()):
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "register_fitter" and node.args):
+                continue
+            arg = node.args[0]
+            if not (isinstance(arg, ast.Call)
+                    and isinstance(arg.func, ast.Name)
+                    and arg.func.id == "FitterSpec"):
+                continue  # re-registration of an existing constant: fine
+            if not any(kw.arg == "streaming" for kw in arg.keywords):
+                findings.append(RepoFinding(
+                    "fitters-declare-streaming", ERROR, rel, node.lineno,
+                    "register_fitter(FitterSpec(...)) without an explicit "
+                    "streaming= declaration"))
     return findings
 
 
@@ -237,11 +266,12 @@ def check_params_serialization(src_root: pathlib.Path | None = None
 
 
 def run_repo_lint() -> list[RepoFinding]:
-    """All four rules over the live repo tree."""
+    """All five rules over the live repo tree."""
     sources = list(_iter_sources())
     findings = []
     findings += check_no_deprecated_shims(sources)
     findings += check_impls_declare_modes(sources)
+    findings += check_fitters_declare_streaming(sources)
     findings += check_call_time_interpret()
     findings += check_params_serialization()
     return findings

@@ -294,7 +294,8 @@ class DatasheetModel(model_api.StackedEstimatorMixin):
     # ----------------------------------------------------------- estimate
     def estimate(self, traces, vendors=None, *,
                  mode: model_api.EstimateMode = "mean",
-                 impl: str = "vectorized", ones_frac=None, toggle_frac=None):
+                 impl: str = "vectorized", data=None,
+                 ones_frac=None, toggle_frac=None):
         """Unified protocol entry point.  ``mode='distribution'`` equals
         ``'mean'`` (no data dependency to feed the fractions into) and
         ``mode='range'`` collapses to (mean, mean, mean) — these baselines
@@ -308,9 +309,12 @@ class DatasheetModel(model_api.StackedEstimatorMixin):
         over vendors), ``'reference'`` (the pair-at-a-time per-trace
         functions ``micron_power``/``drampower``)."""
         # one shared argument contract across every estimator: fractions
-        # are required WITH mode='distribution' (even though this physics
-        # ignores their values) and rejected without it
-        model_api.validate_estimate_args(mode, ones_frac, toggle_frac)
+        # (typed DataProfile or the loose kwargs) are required WITH
+        # mode='distribution' (even though this physics ignores their
+        # values) and rejected without it
+        profile = model_api.normalize_data_profile(data, ones_frac,
+                                                   toggle_frac)
+        model_api.validate_data_profile(mode, profile)
         impl = model_api.resolve_impl(impl, mode=mode).name
         model_api.require_impl_path(self.kind, impl,
                                     ("vectorized", "pallas", "reference"))

@@ -326,6 +326,18 @@ def characterize_vendor(modules, vendor: int, *, probe_modules: int = 5,
 
     # ---- 1. IDD loops on every module ------------------------------------
     idd_measured = {key: idd_currents[:, i] for i, key in enumerate(IDD_KEYS)}
+    return invert_campaign(plan, vendor, cur, idd_measured)
+
+
+def invert_campaign(plan: CampaignPlan, vendor: int, cur: dict,
+                    idd_measured: dict) -> VendorCharacterization:
+    """The slot-accounting inversions: per-probe-cell mean currents (the
+    campaign's, or the streaming fitter's decayed sufficient statistics —
+    ``repro.core.recalibrate``) -> one fitted ``VendorCharacterization``.
+
+    ``cur`` maps every probe-point label of ``plan`` to its mean current
+    over the probe modules; ``idd_measured`` maps each IDD key to the
+    per-module current vector of the vendor's whole module population."""
     ds_vals, ds_r2 = extrapolated_datasheets()
 
     # ---- 2. data-dependency fits (Section 5 / Table 5) --------------------

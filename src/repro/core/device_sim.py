@@ -329,3 +329,136 @@ def make_fleet(specs=None) -> list[SimulatedModule]:
 
 def vendor_modules(fleet, vendor: int):
     return [m for m in fleet if m.spec.vendor == vendor]
+
+
+# ---------------------------------------------------------------------------
+# Drift: the planted ground truth does not hold still after the one-shot
+# characterization campaign.  Real modules wander with temperature and age
+# monotonically, which is exactly why a fitted FleetModel goes stale the
+# way the datasheets did (the recalibration story,
+# ``repro.core.recalibrate``).
+#
+# The drift trajectory is a PURE FUNCTION of (vendor, module id, tick) —
+# counter-based ``fold_in`` draws plus closed-form temperature/aging
+# curves, never a random walk — so any tick's ground truth is
+# reconstructible directly (no history to replay), the serial and batched
+# telemetry engines agree bit-for-bit, and a whole fleet's factors at a
+# tick are one vmapped draw.
+# ---------------------------------------------------------------------------
+_DRIFT_ROOT = 0xD81F7
+
+#: PowerParams fields scaled by the background/leakage drift factor
+#: (temperature-sensitive standby and low-power currents + refresh charge).
+DRIFT_BG_FIELDS = ("i2n", "bank_open_delta", "i_pd", "i_pd_slow",
+                   "i_actpd", "i_sr", "q_ref")
+#: PowerParams fields scaled by the activation/data drift factor
+#: (aging-dominated charge and drive currents).
+DRIFT_ACT_FIELDS = ("q_actpre", "datadep")
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftProcess:
+    """Seed-stable temperature/aging drift of the planted parameters.
+
+    * ``temp_amp``/``temp_period`` — a sinusoidal ambient-temperature
+      trajectory (fractional amplitude, ticks per cycle) with a seeded
+      per-module phase: thermal wander, reversible.
+    * ``aging_rate``/``act_aging_rate`` — monotone linear degradation per
+      tick of the background and activation groups: aging, irreversible.
+    * ``noise_sigma`` — per-tick lognormal jitter, counter-based on
+      (vendor, module, tick).
+    * ``step_tick``/``step_frac`` — an optional planted vendor-wide step
+      change (both factor groups) at a known tick: the drift-detector
+      test fixture.
+
+    Frozen + hashable so the factor computation can be jitted with the
+    process as a static argument."""
+    temp_amp: float = 0.03
+    temp_period: float = 96.0
+    aging_rate: float = 1.2e-3
+    act_aging_rate: float = 8e-4
+    noise_sigma: float = 0.002
+    step_tick: int | None = None
+    step_frac: float = 0.0
+
+
+DEFAULT_DRIFT = DriftProcess()
+NO_DRIFT = DriftProcess(temp_amp=0.0, aging_rate=0.0, act_aging_rate=0.0,
+                        noise_sigma=0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("drift",))
+def _drift_factor_arrays(vendors, module_ids, tick, drift: DriftProcess):
+    """(n,) module identities x scalar tick -> ((n,) bg, (n,) act)
+    multiplicative drift factors, straight from the closed form."""
+    base = jax.random.key(_DRIFT_ROOT)
+    t = jnp.asarray(tick, jnp.float32)
+    tick_i = jnp.asarray(tick, jnp.uint32)
+
+    def per_module(v, m):
+        k = jax.random.fold_in(jax.random.fold_in(base, v), m)
+        phase = jax.random.uniform(jax.random.fold_in(k, 0),
+                                   maxval=2.0 * jnp.pi)
+        z = jax.random.normal(jax.random.fold_in(
+            jax.random.fold_in(k, 1), tick_i), (2,), jnp.float32)
+        return phase, z
+
+    phase, z = jax.vmap(per_module)(jnp.asarray(vendors, jnp.uint32),
+                                    jnp.asarray(module_ids, jnp.uint32))
+    season = jnp.sin(2.0 * jnp.pi * t / drift.temp_period + phase)
+    step = jnp.float32(1.0)
+    if drift.step_tick is not None:
+        step = 1.0 + drift.step_frac * (t >= drift.step_tick).astype(
+            jnp.float32)
+    bg = ((1.0 + drift.temp_amp * season)
+          * (1.0 + drift.aging_rate * t)
+          * jnp.exp(drift.noise_sigma * z[:, 0]) * step)
+    act = ((1.0 + 0.5 * drift.temp_amp * season)
+           * (1.0 + drift.act_aging_rate * t)
+           * jnp.exp(drift.noise_sigma * z[:, 1]) * step)
+    return bg, act
+
+
+def drift_factors(vendors, module_ids, tick: int,
+                  drift: DriftProcess = DEFAULT_DRIFT):
+    """Reconstruct the ((n,) bg, (n,) act) drift factors at any tick."""
+    bg, act = _drift_factor_arrays(jnp.atleast_1d(jnp.asarray(vendors)),
+                                   jnp.atleast_1d(jnp.asarray(module_ids)),
+                                   tick, drift)
+    return np.asarray(bg), np.asarray(act)
+
+
+def apply_drift(stacked: PowerParams, vendors, module_ids, tick,
+                drift: DriftProcess = DEFAULT_DRIFT) -> PowerParams:
+    """Drifted ground truth at ``tick`` for a module-stacked params pytree
+    (leading module axis on every leaf, as built by ``fleet.stack_params``
+    or :func:`synth_fleet_params`)."""
+    bg, act = _drift_factor_arrays(jnp.asarray(vendors, jnp.uint32),
+                                   jnp.asarray(module_ids, jnp.uint32),
+                                   tick, drift)
+    updates = {}
+    for field in DRIFT_BG_FIELDS + DRIFT_ACT_FIELDS:
+        leaf = getattr(stacked, field)
+        f = bg if field in DRIFT_BG_FIELDS else act
+        extra = leaf.ndim - f.ndim
+        updates[field] = leaf * f.reshape(f.shape + (1,) * extra)
+    return stacked._replace(**updates)
+
+
+def drifted_module_params(spec: P.ModuleSpec, tick: int,
+                          drift: DriftProcess = DEFAULT_DRIFT) -> PowerParams:
+    """One module's drifted ground truth at ``tick`` (rig family)."""
+    base = true_module_params(spec)
+    stacked = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], base)
+    out = apply_drift(stacked, [spec.vendor], [spec.module_id], tick, drift)
+    return jax.tree_util.tree_map(lambda x: x[0], out)
+
+
+def drifted_fleet(fleet, tick: int,
+                  drift: DriftProcess = DEFAULT_DRIFT):
+    """The rig fleet with every module's params replaced by the drifted
+    ground truth at ``tick`` (fresh ``SimulatedModule`` objects; the input
+    fleet is untouched)."""
+    return [SimulatedModule(m.spec,
+                            drifted_module_params(m.spec, tick, drift))
+            for m in fleet]

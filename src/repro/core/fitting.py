@@ -76,3 +76,25 @@ def extrapolate_idd_to_800(freq_values: np.ndarray) -> tuple[float, float]:
     fit = lstsq_fit(d, np.asarray(freq_values, dtype=np.float64))
     i800 = float(fit.coef[0] + fit.coef[1] * TARGET_FREQ_MT)
     return i800, fit.r2
+
+
+# ---------------------------------------------------------------------------
+# Streaming sufficient statistics (repro.core.recalibrate): decayed running
+# moments per probe cell.  Kept here, next to the batch regressions, so the
+# one numeric definition of "exponentially weighted mean" is shared by the
+# jitted update step and the decay-equivalence tests.
+# ---------------------------------------------------------------------------
+def decayed_moment_update(weight, mean, observed, decay):
+    """One decayed-moment step: old evidence keeps ``decay`` of its mass,
+    the new observation enters with mass 1.
+
+        w' = decay * w + 1
+        m' = (decay * w * m + x) / w'
+
+    With ``decay=1`` this is the exact running mean (from-scratch refit on
+    the whole window); with ``decay<1`` old ticks fade geometrically.
+    Pure elementwise jnp — safe inside jit, float32 in -> float32 out."""
+    old_mass = decay * weight
+    new_weight = old_mass + 1.0
+    new_mean = (old_mass * mean + observed) / new_weight
+    return new_weight, new_mean

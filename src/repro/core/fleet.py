@@ -142,6 +142,21 @@ class ProbeBatch:
         trace, weight = batch_traces([(p.trace, p.skip) for p in points])
         return cls(trace, weight, np.asarray([p.key for p in points]))
 
+    def select(self, idx) -> "ProbeBatch":
+        """Row-gather a sub-batch: the padded trace/weight rows at ``idx``
+        plus their noise keys.  A fixed-size ``idx`` keeps downstream
+        jitted dispatches on one compiled program — the telemetry path
+        (``repro.core.recalibrate``) round-robins fixed-width cell slices
+        through this."""
+        idx = np.asarray(idx)
+        trace = jax.tree_util.tree_map(lambda x: x[idx], self.trace)
+        return ProbeBatch(trace, self.weight[idx], self.keys[idx])
+
+    def with_keys(self, keys: np.ndarray) -> "ProbeBatch":
+        """The same padded batch under different noise keys (each
+        telemetry tick re-keys its slice so the rig draws fresh noise)."""
+        return ProbeBatch(self.trace, self.weight, np.asarray(keys))
+
 
 def batched_pair_totals(tr: CommandTrace, w: jax.Array, sf,
                         stacked: PowerParams):

@@ -5,7 +5,8 @@ datasheet-driven baselines (Micron calculator, DRAMPower) — implements ONE
 entry point:
 
     model.estimate(traces, vendors=None, *, mode='mean'|'range'|'distribution',
-                   impl='vectorized', ones_frac=None, toggle_frac=None)
+                   impl='vectorized', data=DataProfile(...) | None,
+                   ones_frac=None, toggle_frac=None)
 
 * ``traces`` is a single :class:`~repro.core.dram.CommandTrace`, a sequence
   of (ragged) traces, or a prebuilt :class:`~repro.core.estimate_batch.TraceBatch`;
@@ -13,8 +14,10 @@ entry point:
 * every leaf of the returned :class:`~repro.core.energy_model.EnergyReport`
   has shape ``(traces, vendors)`` — ``mode='range'`` returns a
   ``(lo, mean, hi)`` triple of such reports;
-* ``mode='distribution'`` is the paper's no-data-trace mode and takes
-  ``ones_frac``/``toggle_frac`` (scalar or per trace);
+* ``mode='distribution'`` is the paper's no-data-trace mode and takes a
+  :class:`DataProfile` (``data=``) — or the legacy loose
+  ``ones_frac``/``toggle_frac`` kwargs (scalar or per trace), normalized
+  through :func:`normalize_data_profile`;
 * ``mode='surface'`` is the structural-variation decomposition (paper
   Section 6 / Figs 19-22): leaves are ``(traces, vendors, banks,
   row_bands)``-shaped, each command's charge grouped onto its
@@ -34,6 +37,20 @@ engine (``repro.core.estimate_batch``) regardless of which physics it
 implements.  ``validate.run_validation``, the encoding study, and
 ``launch/serve.py --power-report`` all consume the protocol, never a
 concrete class.
+
+Fitting (the ``Fitter`` registry)
+---------------------------------
+HOW a model's parameters are obtained goes through the same
+registry-template as impls: :func:`register_fitter` /
+:func:`resolve_fitter` over :class:`FitterSpec` entries, dispatched by the
+unified :func:`fit` entry point.  Two fitters ship: ``'campaign'`` (the
+one-shot offline characterization campaign — ``repro.core.characterize``,
+behavior-identical to the legacy ``Vampire.fit``) and ``'streaming'`` (the
+incremental decayed-sufficient-statistics fitter in
+``repro.core.recalibrate``, which consumes telemetry ticks and emits
+treedef-stable model refreshes for ``ServingEngine.update_model``).
+``Vampire.fit`` remains as a thin, warning-free shim onto
+``fit('vampire', fleet, fitter='campaign', ...)``.
 
 Serialization (schema v2)
 -------------------------
@@ -83,7 +100,8 @@ class Estimator(Protocol):
         ...
 
     def estimate(self, traces, vendors=None, *, mode: EstimateMode = "mean",
-                 impl: str = "vectorized", ones_frac=None, toggle_frac=None):
+                 impl: str = "vectorized", data: "DataProfile | None" = None,
+                 ones_frac=None, toggle_frac=None):
         ...
 
     def save(self, path: str) -> None:
@@ -215,6 +233,40 @@ REFERENCE_IMPL = register_impl(EstimateImpl(
     aliases=("scan",)))
 
 
+@dataclasses.dataclass(frozen=True)
+class DataProfile:
+    """Typed description of a trace set's data dependence: the fraction of
+    ones on the bus and the fraction of toggling bit lanes (scalar, or one
+    value per trace).  This is the single object the estimate protocol, the
+    serving config, and the telemetry/recalibration path log and fit
+    against — the loose ``ones_frac=``/``toggle_frac=`` kwargs remain
+    accepted everywhere and are mapped onto a profile through
+    :func:`normalize_data_profile`."""
+    ones_frac: object = None
+    toggle_frac: object = None
+
+    @property
+    def empty(self) -> bool:
+        return self.ones_frac is None and self.toggle_frac is None
+
+
+def normalize_data_profile(data: "DataProfile | None" = None,
+                           ones_frac=None,
+                           toggle_frac=None) -> DataProfile:
+    """The one normalization helper between the typed ``data=`` argument
+    and the legacy loose kwargs.  Exactly one spelling may be used per
+    call; the result is always a :class:`DataProfile`."""
+    if data is not None:
+        if not isinstance(data, DataProfile):
+            raise TypeError(f"data= must be a DataProfile, got "
+                            f"{type(data).__name__}")
+        if ones_frac is not None or toggle_frac is not None:
+            raise ValueError("pass data=DataProfile(...) OR the loose "
+                             "ones_frac=/toggle_frac= kwargs, not both")
+        return data
+    return DataProfile(ones_frac=ones_frac, toggle_frac=toggle_frac)
+
+
 def validate_estimate_args(mode: str, ones_frac, toggle_frac) -> None:
     """The one argument contract every estimator's ``estimate`` enforces
     (shared so the implementations cannot drift): fractions are required
@@ -228,6 +280,112 @@ def validate_estimate_args(mode: str, ones_frac, toggle_frac) -> None:
     elif ones_frac is not None or toggle_frac is not None:
         raise ValueError("ones_frac/toggle_frac are only meaningful "
                          "with mode='distribution'")
+
+
+def validate_data_profile(mode: str, profile: DataProfile) -> None:
+    """:func:`validate_estimate_args` over a normalized profile."""
+    validate_estimate_args(mode, profile.ones_frac, profile.toggle_frac)
+
+
+# ---------------------------------------------------------------------------
+# Fitter registry: HOW a model's parameters are obtained, registered with
+# the same template as estimator kinds and impls.  The registry stores no
+# fit callable (mirroring the impl registry); the unified :func:`fit` entry
+# point owns the name-keyed dispatch and errors loudly on a registered
+# fitter it has no branch for.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FitterSpec:
+    """One way of producing fitted model parameters.
+
+    ``streaming=False`` fitters are one-shot: ``fit()`` returns a fitted
+    estimator.  ``streaming=True`` fitters are incremental: ``fit()``
+    returns a stateful fitter object that consumes telemetry ticks
+    (``observe``) and emits treedef-stable model refreshes (``refit``)."""
+    name: str
+    description: str
+    streaming: bool
+    aliases: tuple[str, ...] = ()
+
+
+_FITTERS: dict[str, FitterSpec] = {}
+_FITTER_ALIASES: dict[str, str] = {}
+
+
+def register_fitter(spec: FitterSpec) -> FitterSpec:
+    """Register a fitter (or re-register to override). Returns it, so the
+    definition can double as a module-level constant."""
+    _FITTERS[spec.name] = spec
+    for alias in spec.aliases:
+        _FITTER_ALIASES[alias] = spec.name
+    return spec
+
+
+def registered_fitters() -> tuple[str, ...]:
+    return tuple(sorted(_FITTERS))
+
+
+def resolve_fitter(name: str, *,
+                   streaming: bool | None = None) -> FitterSpec:
+    """Resolve a ``fitter=`` argument (canonical name or alias) against the
+    registry, with the capability check against the requested execution
+    style (``streaming=True`` demands an incremental fitter)."""
+    spec = _FITTERS.get(_FITTER_ALIASES.get(name, name))
+    if spec is None:
+        raise ValueError(f"unknown fitter {name!r}; registered fitters: "
+                         f"{list(registered_fitters())}")
+    if streaming is not None and streaming != spec.streaming:
+        style = "streaming" if spec.streaming else "one-shot"
+        want = "streaming" if streaming else "one-shot"
+        raise ValueError(f"fitter {spec.name!r} is {style}, not {want}")
+    return spec
+
+
+CAMPAIGN_FITTER = register_fitter(FitterSpec(
+    "campaign",
+    "one-shot offline characterization campaign (repro.core.characterize): "
+    "measure every probe cell on the rig, invert the slot accounting once; "
+    "behavior-identical to the legacy Vampire.fit path",
+    streaming=False,
+    aliases=("offline",)))
+STREAMING_FITTER = register_fitter(FitterSpec(
+    "streaming",
+    "incremental fitter (repro.core.recalibrate): decayed per-probe-cell "
+    "sufficient statistics updated from telemetry ticks, re-inverted into "
+    "treedef-stable FleetModel refreshes for ServingEngine.update_model",
+    streaming=True,
+    aliases=("online",)))
+
+
+def fit(kind: str = "vampire", fleet=None, *, fitter: str = "campaign",
+        **kw):
+    """The unified fit entry point (see the module docstring).
+
+    ``fitter='campaign'`` runs the offline campaign and returns a fitted
+    estimator of ``kind`` (extra kwargs go to
+    ``characterize.characterize_fleet``; bit-for-bit the legacy
+    ``Vampire.fit`` result).  ``fitter='streaming'`` returns a
+    :class:`repro.core.recalibrate.StreamingFitter` primed on an initial
+    model (``init_model=``, or a fresh campaign fit when omitted)."""
+    spec = resolve_fitter(fitter)
+    if spec.name == "campaign":
+        from repro.core import characterize
+        from repro.core.vampire import Vampire
+        model = Vampire(by_vendor=characterize.characterize_fleet(fleet,
+                                                                  **kw))
+        model.fleet  # stack the per-vendor params ONCE, at fit time
+        return model if kind == "vampire" else make_estimator(kind, model)
+    if spec.name == "streaming":
+        if kind != "vampire":
+            raise ValueError("fitter='streaming' recalibrates the fitted "
+                             "VAMPIRE model; derive baselines from it via "
+                             "make_estimator")
+        from repro.core import recalibrate
+        return recalibrate.streaming_fitter(fleet, **kw)
+    raise ValueError(
+        f"fitter {spec.name!r} is registered but fit() has no dispatch "
+        f"branch for it; registering a fitter does not give fit() an "
+        f"execution path")
 
 
 def resolve_vendor_indices(order: Sequence[int],

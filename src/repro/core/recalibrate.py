@@ -1,0 +1,338 @@
+"""Online recalibration from streaming telemetry (the ``'streaming'``
+fitter of the ``model_api`` fitter registry).
+
+The offline campaign (``repro.core.characterize``) measures every probe
+cell once and inverts the slot accounting once — and then the planted
+ground truth keeps drifting (``device_sim.DriftProcess``: temperature,
+aging), so the fitted ``FleetModel`` goes stale exactly the way the paper
+showed datasheets do.  This module closes the loop:
+
+* :class:`TelemetrySource` — the drifting rig.  Each tick it measures a
+  fixed-width round-robin SLICE of the campaign's probe cells on the live
+  (drifted) fleet, re-keying the measurement noise per tick.  One jitted
+  dispatch per tick (drift factors + slot integrator fused), one compiled
+  program across all ticks.
+* :class:`StreamingFitter` — the estimation side.  It maintains decayed
+  running sufficient statistics per probe cell (per module x cell moment
+  arrays, a jit-able pytree updated by ONE compiled, f64-free step —
+  :func:`fitting.decayed_moment_update`), scores each incoming slice
+  against the current model's predicted cell currents (per-key
+  standardized residuals — the drift detector), and on demand re-runs the
+  campaign's *exact* inversion (``characterize.invert_campaign``) over the
+  decayed cell means, emitting a TREEDEF-STABLE ``Vampire`` refresh: the
+  new model unflattens against the original treedef (identity-hashed aux),
+  so ``ServingEngine.update_model`` swaps it in with zero new compiled
+  programs.
+* :func:`fleet_current_mape` — the evaluation yardstick tests and
+  ``benchmarks/bench_recalibrate.py`` gate on: model-predicted vs
+  ground-truth loop currents over a validation batch.
+
+Telemetry noise keys live at :data:`_TELEMETRY_KEY_BASE` (1 << 24), far
+above the campaign's ``_IDD_KEY_BASE``/``_PROBE_KEY_BASE`` and the
+simulator's ad-hoc counter base (1 << 20), striding by tick so every tick
+draws fresh, reconstructible noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import characterize, device_sim, fitting, fleet, model_api
+from repro.core import params as P
+from repro.core.characterize import IDD_KEYS
+from repro.core.device_sim import DEFAULT_DRIFT, DriftProcess
+from repro.core.fleet import ProbeBatch
+
+# Per-tick telemetry noise keys: base + tick * stride + campaign key.  The
+# stride clears every campaign key (< _PROBE_KEY_BASE + a few hundred) and
+# the base clears the simulator's ad-hoc counter family (1 << 20), so no
+# (module, key) noise draw ever collides across families or ticks.
+_TELEMETRY_KEY_BASE = 1 << 24
+_TELEMETRY_KEY_STRIDE = 1 << 13
+
+
+@dataclasses.dataclass(frozen=True)
+class RecalConfig:
+    """Shape of the telemetry stream and the incremental fit.
+
+    The campaign-plan knobs (``probe_reps``/``n_rows``/``rng_seed``) pick
+    WHICH probe cells exist — they must match between the telemetry source
+    and the fitter, which is why both take one config.  ``decay`` is the
+    per-observation retention of old evidence per cell (1.0 = plain
+    running mean); ``slice_size`` is the fixed telemetry width per tick;
+    ``drift_threshold`` is the standardized-residual trigger;
+    ``detector_floor`` is the relative systematic-error floor folded into
+    the residual scale (the linear fit cannot reproduce the planted
+    ``ones_quad`` curvature exactly, so pure measurement-noise scaling
+    would false-positive on a healthy model)."""
+    probe_reps: int = 64
+    n_rows: int = 8
+    rng_seed: int = 0
+    probe_modules: int = 2
+    decay: float = 0.9
+    slice_size: int = 64
+    drift_threshold: float = 3.0
+    detector_floor: float = 0.01
+    seed_weight: float = 1.0
+
+
+@functools.lru_cache(maxsize=4)
+def _recal_cells(probe_reps: int, n_rows: int, rng_seed: int):
+    """(plan, points, padded batch) of the full probe-cell set: the
+    campaign's IDD loops first (cells 0..11), then every probe point."""
+    plan = characterize.campaign_plan(probe_reps=probe_reps, n_rows=n_rows,
+                                      rng_seed=rng_seed)
+    points = tuple(plan.idd_points) + tuple(plan.probe_points)
+    return plan, points, ProbeBatch.from_points(points)
+
+
+def recal_cells(config: RecalConfig):
+    return _recal_cells(config.probe_reps, config.n_rows, config.rng_seed)
+
+
+def cell_group(label: tuple) -> str:
+    """The drift detector's per-key grouping of a probe-cell label."""
+    if label[0] == "idd":
+        return f"idd/{label[1]}"
+    return str(label[0])
+
+
+# ---------------------------------------------------------------------------
+# The drifting rig
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("drift",))
+def _drifted_slice_currents(trace, weight, base_stack, vendors, module_ids,
+                            tick, drift: DriftProcess):
+    """Noise-free (modules, slice) currents of the drifted fleet at a
+    tick: drift factors + slot integrator in one compiled program (tick is
+    traced, so every tick reuses it)."""
+    drifted = device_sim.apply_drift(base_stack, vendors, module_ids, tick,
+                                     drift)
+    return fleet.fleet_measure_current(trace, weight, drifted)
+
+
+class TelemetrySource:
+    """Per-tick probe-cell telemetry from a drifting simulated fleet.
+
+    Each tick measures a fixed-width round-robin slice of the cell set on
+    every module, under the seed-stable drifted ground truth
+    (``device_sim.apply_drift``) and fresh per-tick measurement noise —
+    the streaming stand-in for the rig's continuous monitoring loop."""
+
+    def __init__(self, modules, config: RecalConfig | None = None, *,
+                 drift: DriftProcess = DEFAULT_DRIFT, noisy: bool = True):
+        self.modules = list(modules)
+        self.config = RecalConfig() if config is None else config
+        self.drift = drift
+        self.noisy = noisy
+        self.specs = [m.spec for m in self.modules]
+        self.plan, self.points, self.batch = recal_cells(self.config)
+        self.n_cells = len(self.points)
+        self.base_stack = fleet.stack_params(
+            [m.params for m in self.modules])
+        self._v = jnp.asarray([s.vendor for s in self.specs], jnp.uint32)
+        self._m = jnp.asarray([s.module_id for s in self.specs], jnp.uint32)
+
+    def slice_indices(self, tick: int) -> np.ndarray:
+        """The round-robin cell slice of a tick (fixed width, so the
+        measurement and the stats update each stay one program)."""
+        width = min(self.config.slice_size, self.n_cells)
+        return (tick * width + np.arange(width)) % self.n_cells
+
+    def measure(self, tick: int, cell_idx=None):
+        """-> ((modules, cells) currents, cell indices) at ``tick``."""
+        idx = (self.slice_indices(tick) if cell_idx is None
+               else np.asarray(cell_idx))
+        sub = self.batch.select(idx)
+        cur = _drifted_slice_currents(sub.trace, sub.weight,
+                                      self.base_stack, self._v, self._m,
+                                      jnp.uint32(tick), self.drift)
+        cur = np.asarray(cur, np.float64)
+        if self.noisy:
+            keys = (_TELEMETRY_KEY_BASE
+                    + np.int64(tick) * _TELEMETRY_KEY_STRIDE
+                    + np.asarray(sub.keys, np.int64))
+            cur = cur * device_sim.measurement_noise_factors(self.specs,
+                                                             keys)
+        return cur, idx
+
+    def true_params_at(self, tick: int):
+        """The reconstructed ground-truth parameter stack at any tick."""
+        return device_sim.apply_drift(self.base_stack, self._v, self._m,
+                                      jnp.uint32(tick), self.drift)
+
+
+# ---------------------------------------------------------------------------
+# The incremental fitter
+# ---------------------------------------------------------------------------
+class RunningStats(NamedTuple):
+    """Decayed per-(module, cell) sufficient statistics — a jit-able
+    pytree of f32 moment arrays (evidence mass + exponentially weighted
+    mean current)."""
+    weight: jax.Array   # (modules, cells) f32
+    mean: jax.Array     # (modules, cells) f32
+
+
+@jax.jit
+def _update_stats(stats: RunningStats, currents, cell_idx, decay,
+                  predicted, scale_floor):
+    """ONE incremental update step (compiled once, f32 end to end): decay
+    the observed cells' moments into the new observations and score the
+    incoming slice against the current model's predicted cell currents.
+
+    Returns ``(stats', z)`` where ``z`` is the per-cell standardized
+    residual of the slice's module-mean current vs the model prediction —
+    scaled by measurement noise of the mean plus the relative systematic
+    floor (see ``RecalConfig.detector_floor``)."""
+    w = stats.weight[:, cell_idx]
+    m = stats.mean[:, cell_idx]
+    new_w, new_m = fitting.decayed_moment_update(w, m, currents, decay)
+    out = RunningStats(stats.weight.at[:, cell_idx].set(new_w),
+                       stats.mean.at[:, cell_idx].set(new_m))
+    n_modules = currents.shape[0]
+    meas = jnp.mean(currents, axis=0)
+    pred = jnp.mean(predicted[:, cell_idx], axis=0)
+    noise = P.MEASUREMENT_NOISE / np.sqrt(n_modules)
+    scale = jnp.abs(pred) * (noise + scale_floor) + 1e-6
+    return out, (meas - pred) / scale
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftReport:
+    """One telemetry tick's drift verdict."""
+    tick: int
+    score: float                 # worst per-key standardized residual
+    by_key: dict[str, float]     # mean |z| per probe-cell group
+    triggered: bool
+
+
+class StreamingFitter:
+    """The ``'streaming'`` fitter: decayed sufficient statistics per probe
+    cell, a per-key drift detector, and treedef-stable model refreshes.
+
+    Build one via ``model_api.fit(fitter='streaming')`` (or
+    :func:`streaming_fitter`), feed it telemetry with :meth:`observe`, and
+    hand :meth:`refit` results to ``ServingEngine.update_model`` — the
+    refreshed model reuses the original model's treedef (identity-hashed
+    aux), so every warm compiled program keeps hitting."""
+
+    def __init__(self, model, specs, config: RecalConfig | None = None):
+        self.config = RecalConfig() if config is None else config
+        self.specs = list(specs)
+        self.plan, self.points, self.batch = recal_cells(self.config)
+        self.n_cells = len(self.points)
+        self.groups = [cell_group(p.label) for p in self.points]
+        self.model = model
+        self._treedef = jax.tree_util.tree_flatten(model)[1]
+        vendor_order = list(model.vendors)
+        self._vendor_rows = {
+            v: [i for i, s in enumerate(self.specs) if s.vendor == v]
+            for v in vendor_order}
+        self._pred_rows = np.asarray(
+            [vendor_order.index(s.vendor) for s in self.specs])
+        self._decay = jnp.float32(self.config.decay)
+        self._floor = jnp.float32(self.config.detector_floor)
+        self._refresh_predictions()
+        seed_w = jnp.full((len(self.specs), self.n_cells),
+                          self.config.seed_weight, jnp.float32)
+        # seed the moments with the model's own predicted currents: every
+        # cell is defined before its first telemetry arrives, and a refit
+        # with no evidence reproduces (approximately) the current model
+        self.stats = RunningStats(seed_w, self._predicted)
+        self.ticks_observed = 0
+        self.last_report: DriftReport | None = None
+
+    def _refresh_predictions(self) -> None:
+        """(modules, cells) noise-free currents the CURRENT model implies
+        for every probe cell — the drift detector's reference (same
+        compiled integrator as the telemetry source)."""
+        pred_stack = jax.tree_util.tree_map(
+            lambda x: x[self._pred_rows], self.model.fleet.params)
+        self._predicted = jnp.asarray(fleet.fleet_measure_current(
+            self.batch.trace, self.batch.weight, pred_stack), jnp.float32)
+
+    # ------------------------------------------------------------- ingest
+    def observe(self, currents, cell_idx, tick: int) -> DriftReport:
+        """Fold one telemetry slice into the sufficient statistics and
+        score it for drift.  ``currents`` is (modules, cells) over the
+        SAME module order as ``specs``; ``cell_idx`` indexes the cell
+        set."""
+        idx = jnp.asarray(np.asarray(cell_idx), jnp.int32)
+        cur = jnp.asarray(np.asarray(currents), jnp.float32)
+        self.stats, z = _update_stats(self.stats, cur, idx, self._decay,
+                                      self._predicted, self._floor)
+        z = np.abs(np.asarray(z, np.float64))
+        by_key: dict[str, list] = {}
+        for j, cell in enumerate(np.asarray(cell_idx)):
+            by_key.setdefault(self.groups[int(cell)], []).append(z[j])
+        scores = {k: float(np.mean(v)) for k, v in sorted(by_key.items())}
+        score = max(scores.values()) if scores else 0.0
+        self.ticks_observed += 1
+        self.last_report = DriftReport(
+            tick=int(tick), score=score, by_key=scores,
+            triggered=score >= self.config.drift_threshold)
+        return self.last_report
+
+    # -------------------------------------------------------------- refit
+    def refit(self):
+        """Invert the decayed cell means into a fresh parameter stack and
+        emit the treedef-stable model refresh (also adopted as the
+        detector's new reference)."""
+        mean = np.asarray(self.stats.mean, np.float64)
+        fitted = []
+        for v, rows in self._vendor_rows.items():
+            idd = {key: mean[rows, i] for i, key in enumerate(IDD_KEYS)}
+            probe_rows = rows[:self.config.probe_modules]
+            pm = mean[probe_rows, len(IDD_KEYS):].mean(axis=0)
+            cur = {pt.label: float(pm[i])
+                   for i, pt in enumerate(self.plan.probe_points)}
+            vc = characterize.invert_campaign(self.plan, v, cur, idd)
+            fitted.append(vc.fitted)
+        new_fm = self.model.fleet._replace(
+            params=fleet.stack_params(fitted))
+        self.model = jax.tree_util.tree_unflatten(
+            self._treedef, jax.tree_util.tree_leaves(new_fm))
+        self._refresh_predictions()
+        return self.model
+
+
+def streaming_fitter(modules=None, *, init_model=None,
+                     config: RecalConfig | None = None, **campaign_kw):
+    """Factory behind ``model_api.fit(..., fitter='streaming')``: prime a
+    :class:`StreamingFitter` on an initial model (``init_model=``, or a
+    fresh campaign fit of the fleet with the config's plan knobs)."""
+    modules = device_sim.make_fleet() if modules is None else list(modules)
+    config = RecalConfig() if config is None else config
+    if init_model is None:
+        init_model = model_api.fit(
+            "vampire", modules, fitter="campaign",
+            probe_modules=config.probe_modules,
+            probe_reps=config.probe_reps, n_rows=config.n_rows,
+            rng_seed=config.rng_seed, **campaign_kw)
+    return StreamingFitter(init_model, [m.spec for m in modules], config)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation yardstick
+# ---------------------------------------------------------------------------
+def fleet_current_mape(model, trace, weight, specs, true_stacked) -> float:
+    """Mean absolute relative current error of ``model`` against a
+    (possibly drifted) ground-truth parameter stack over a padded
+    validation batch: both sides run through the same compiled integrator
+    (``fleet.fleet_measure_current``), the model's side with each module's
+    vendor-fitted params."""
+    vendor_order = list(model.vendors)
+    rows = np.asarray([vendor_order.index(s.vendor) for s in specs])
+    pred_stack = jax.tree_util.tree_map(lambda x: x[rows],
+                                        model.fleet.params)
+    est = np.asarray(fleet.fleet_measure_current(trace, weight, pred_stack),
+                     np.float64)
+    truth = np.asarray(fleet.fleet_measure_current(trace, weight,
+                                                   true_stacked),
+                       np.float64)
+    return float(np.mean(np.abs(est - truth) / np.maximum(truth, 1e-9)))

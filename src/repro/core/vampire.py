@@ -3,8 +3,12 @@ Experiments (paper Section 9), fitted from the characterization campaign.
 
 Public API (the unified estimator protocol, ``repro.core.model_api``)
 ---------------------------------------------------------------------
-``Vampire.fit(fleet)``       run the campaign and build the model
+``Vampire.fit(fleet)``       run the campaign and build the model — a thin
+    shim onto ``model_api.fit('vampire', fleet, fitter='campaign')``, the
+    registry-routed fitting entry point (``fitter='streaming'`` is the
+    online-recalibration path, ``repro.core.recalibrate``).
 ``model.estimate(traces, vendors=None, *, mode='mean', impl='vectorized',
+                 data=DataProfile(...) | None,
                  ones_frac=None, toggle_frac=None)``
     ONE entry point for every estimation question.  ``traces`` is a single
     trace, a sequence of ragged traces, or a prebuilt
@@ -118,12 +122,14 @@ class Vampire(model_api.StackedEstimatorMixin):
     def fit(cls, fleet=None, **kw) -> "Vampire":
         """Run the characterization campaign and build the model.
 
+        Thin shim onto ``model_api.fit('vampire', fleet,
+        fitter='campaign', **kw)`` — the registry-routed fitting entry
+        point; bit-for-bit identical to the pre-registry fit.
+
         ``engine='batched'`` (default) runs the campaign through the vmapped
         fleet engine (``repro.core.fleet``); ``engine='serial'`` replays it
         one measurement at a time (the correctness oracle)."""
-        model = cls(by_vendor=characterize.characterize_fleet(fleet, **kw))
-        model.fleet  # stack the per-vendor params ONCE, at fit time
-        return model
+        return model_api.fit("vampire", fleet, fitter="campaign", **kw)
 
     @property
     def vendors(self) -> tuple[int, ...]:
@@ -174,7 +180,8 @@ class Vampire(model_api.StackedEstimatorMixin):
     # ------------------------------------------------------------- estimate
     def estimate(self, traces, vendors=None, *legacy_impl,
                  mode: model_api.EstimateMode = "mean",
-                 impl: str = "vectorized", ones_frac=None, toggle_frac=None):
+                 impl: str = "vectorized", data=None,
+                 ones_frac=None, toggle_frac=None):
         """The unified entry point (see the module docstring).
 
         NOTE: portable protocol code must pass ``vendors`` as a sequence
@@ -189,8 +196,8 @@ class Vampire(model_api.StackedEstimatorMixin):
                 raise TypeError("positional impl is only accepted by the "
                                 "legacy estimate(trace, vendor, impl) form "
                                 "(one CommandTrace, one int vendor)")
-            if mode != "mean" or ones_frac is not None \
-                    or toggle_frac is not None:
+            if mode != "mean" or data is not None \
+                    or ones_frac is not None or toggle_frac is not None:
                 # the legacy form is mean-mode only; silently forcing
                 # mode='mean' here would return numerically wrong results
                 raise TypeError(
@@ -203,12 +210,17 @@ class Vampire(model_api.StackedEstimatorMixin):
             return _squeeze_pair(self._estimate(
                 traces, (int(vendors),), mode="mean", impl=impl))
         return self._estimate(traces, vendors, mode=mode, impl=impl,
-                              ones_frac=ones_frac, toggle_frac=toggle_frac)
+                              data=data, ones_frac=ones_frac,
+                              toggle_frac=toggle_frac)
 
     def _estimate(self, traces, vendors=None, *, mode="mean",
-                  impl="vectorized", ones_frac=None, toggle_frac=None):
+                  impl="vectorized", data=None, ones_frac=None,
+                  toggle_frac=None):
         from repro.core import estimate_batch
-        model_api.validate_estimate_args(mode, ones_frac, toggle_frac)
+        profile = model_api.normalize_data_profile(data, ones_frac,
+                                                   toggle_frac)
+        model_api.validate_data_profile(mode, profile)
+        ones_frac, toggle_frac = profile.ones_frac, profile.toggle_frac
         impl = model_api.resolve_impl(impl, mode=mode).name
         model_api.require_impl_path(self.kind, impl,
                                     ("vectorized", "pallas", "reference"))

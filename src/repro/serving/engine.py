@@ -45,12 +45,15 @@ class ServingEngine:
     subset requests are grouped by the ring)."""
 
     def __init__(self, model, *, mesh=None, impl: str = "vectorized",
-                 mode: str = "mean", ones_frac=None, toggle_frac=None):
-        model_api.validate_estimate_args(mode, ones_frac, toggle_frac)
+                 mode: str = "mean", data=None, ones_frac=None,
+                 toggle_frac=None):
+        self.data = model_api.normalize_data_profile(data, ones_frac,
+                                                     toggle_frac)
+        model_api.validate_data_profile(mode, self.data)
         self.impl = model_api.resolve_impl(impl, mode=mode).name
         self.mode = mode
-        self.ones_frac = ones_frac
-        self.toggle_frac = toggle_frac
+        self.ones_frac = self.data.ones_frac
+        self.toggle_frac = self.data.toggle_frac
         self.mesh = mesh
         self.n_shards = (math.prod(mesh.shape.values())
                          if mesh is not None else 1)

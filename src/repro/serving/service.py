@@ -42,13 +42,19 @@ from repro.serving.ring import RingConfig, TraceRing, TraceTooLongError
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
-    """Knobs of one service instance (one estimation configuration)."""
+    """Knobs of one service instance (one estimation configuration).
+
+    ``data`` is the typed :class:`~repro.core.model_api.DataProfile`
+    spelling of the data-dependence fractions; the loose
+    ``ones_frac``/``toggle_frac`` fields remain accepted and both
+    spellings meet in the engine's ``normalize_data_profile`` call."""
     ring: RingConfig = RingConfig()
     mode: str = "mean"
     impl: str = "vectorized"
     lint: bool = True            # the ingestion gate; off only for trusted
     cadence_s: float = 0.0       # maybe_step dispatch period (0 = every call)
     max_batch: int | None = None   # per-window cap (<= ring max_batch)
+    data: object | None = None     # model_api.DataProfile
     ones_frac: float | None = None
     toggle_frac: float | None = None
 
@@ -84,6 +90,11 @@ class MetricsSnapshot:
     dispatch_p50_ms: float       # one engine dispatch, block_until_ready
     dispatch_p99_ms: float
     engine_programs: int         # compiled-program count (bounded by ring)
+    # online-recalibration telemetry (zeros unless a fitter is attached)
+    drift_score: float = 0.0     # last observe_telemetry's detector score
+    drift_peak: float = 0.0      # max score seen since construction
+    drift_by_key: dict[str, float] = dataclasses.field(default_factory=dict)
+    recalibrations: int = 0      # refits pushed through update_model
 
 
 def _pct(samples: list[float], q: float) -> float:
@@ -96,15 +107,24 @@ class EstimationService:
     the concurrency is in the batched dispatch, not in threads)."""
 
     def __init__(self, model=None, config: ServiceConfig | None = None, *,
-                 mesh=None, engine: ServingEngine | None = None):
+                 mesh=None, engine: ServingEngine | None = None,
+                 fitter=None):
         self.config = config or ServiceConfig()
         self.ring = TraceRing(self.config.ring)
         # a prebuilt engine carries its resident model AND its compiled
         # programs into the new service (fresh counters, warm jit cache)
         self.engine = engine if engine is not None else ServingEngine(
             model, mesh=mesh, impl=self.config.impl, mode=self.config.mode,
+            data=self.config.data,
             ones_frac=self.config.ones_frac,
             toggle_frac=self.config.toggle_frac)
+        # optional streaming fitter (repro.core.recalibrate.StreamingFitter):
+        # telemetry flows in through observe_telemetry, refreshed fits flow
+        # out through engine.update_model — fit-while-serving
+        self.fitter = fitter
+        self._drift_last: object | None = None
+        self._drift_peak = 0.0
+        self._recalibrations = 0
         self._results: dict[int, object] = {}
         self._submit_t: dict[int, float] = {}
         self._next_ticket = 0
@@ -227,6 +247,25 @@ class EstimationService:
         self._closed = True
         return n
 
+    # ----------------------------------------------------------- telemetry
+    def observe_telemetry(self, currents, cell_idx, tick: int):
+        """Feed one tick of fleet telemetry to the attached streaming
+        fitter; when its drift detector fires, refit from the accumulated
+        sufficient statistics and hot-swap the refreshed parameters into
+        the engine (treedef-stable, so no dispatch recompiles).  Returns
+        the fitter's :class:`~repro.core.recalibrate.DriftReport`."""
+        if self.fitter is None:
+            raise RuntimeError(
+                "no streaming fitter attached; construct the service with "
+                "fitter=model_api.fit(fitter='streaming', ...)")
+        report = self.fitter.observe(currents, cell_idx, tick)
+        self._drift_last = report
+        self._drift_peak = max(self._drift_peak, report.score)
+        if report.triggered:
+            self.engine.update_model(self.fitter.refit())
+            self._recalibrations += 1
+        return report
+
     # ------------------------------------------------------------- results
     def result(self, ticket: int):
         """Pop one completed ticket's report row (leaves vendor-shaped;
@@ -259,4 +298,10 @@ class EstimationService:
             latency_p99_ms=_pct(self._latency_s, 99),
             dispatch_p50_ms=_pct(self._dispatch_s, 50),
             dispatch_p99_ms=_pct(self._dispatch_s, 99),
-            engine_programs=self.engine.cache_size())
+            engine_programs=self.engine.cache_size(),
+            drift_score=(self._drift_last.score
+                         if self._drift_last is not None else 0.0),
+            drift_peak=self._drift_peak,
+            drift_by_key=(dict(self._drift_last.by_key)
+                          if self._drift_last is not None else {}),
+            recalibrations=self._recalibrations)

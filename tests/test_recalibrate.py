@@ -1,0 +1,348 @@
+"""Online recalibration (repro.core.recalibrate) + the fitter registry.
+
+Covers the ISSUE 10 acceptance gates: seed-stable drift, decayed
+sufficient-statistics equivalence, detector TP/FP on a planted step,
+frozen-vs-recalibrated tracking (frozen grows monotonically >=5x worse,
+recalibrated stays within 2x of a freshly-refit oracle), campaign-fitter
+bit-for-bit equivalence, and fit-while-serving with zero recompiles.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (characterize, device_sim, fitting, fleet,
+                        model_api, recalibrate)
+from repro.core import params as P
+from repro.core.device_sim import NO_DRIFT, DriftProcess
+
+
+@pytest.fixture(scope="module")
+def tiny_specs():
+    return [P.ModuleSpec(v, i, 2015) for v in range(3) for i in range(3)]
+
+
+# ---------------------------------------------------------------------------
+# Drift process
+# ---------------------------------------------------------------------------
+def test_drift_factors_seed_stable(tiny_specs):
+    v = [s.vendor for s in tiny_specs]
+    m = [s.module_id for s in tiny_specs]
+    bg1, act1 = device_sim.drift_factors(v, m, 17)
+    bg2, act2 = device_sim.drift_factors(v, m, 17)
+    np.testing.assert_array_equal(bg1, bg2)
+    np.testing.assert_array_equal(act1, act2)
+    # any tick is reconstructible per module, independent of which other
+    # modules ride in the batch (counter-based, not sequential draws)
+    bg_sub, act_sub = device_sim.drift_factors(v[3:5], m[3:5], 17)
+    np.testing.assert_array_equal(bg_sub, bg1[3:5])
+    np.testing.assert_array_equal(act_sub, act1[3:5])
+    # different ticks draw different jitter
+    bg3, _ = device_sim.drift_factors(v, m, 18)
+    assert not np.array_equal(bg1, bg3)
+
+
+def test_drift_no_drift_is_identity(tiny_specs):
+    v = [s.vendor for s in tiny_specs]
+    m = [s.module_id for s in tiny_specs]
+    bg, act = device_sim.drift_factors(v, m, 123, NO_DRIFT)
+    np.testing.assert_allclose(bg, 1.0, rtol=1e-6)
+    np.testing.assert_allclose(act, 1.0, rtol=1e-6)
+
+
+def test_drift_aging_monotone_and_step():
+    drift = DriftProcess(temp_amp=0.0, aging_rate=2e-3, act_aging_rate=1e-3,
+                         noise_sigma=0.0)
+    bgs = [device_sim.drift_factors([0], [0], t, drift)[0][0]
+           for t in (0, 10, 50, 200)]
+    assert all(b2 > b1 for b1, b2 in zip(bgs, bgs[1:]))
+    step = dataclasses.replace(NO_DRIFT, step_tick=8, step_frac=0.2)
+    before, _ = device_sim.drift_factors([0], [0], 7, step)
+    after, after_act = device_sim.drift_factors([0], [0], 8, step)
+    np.testing.assert_allclose(before, 1.0, rtol=1e-6)
+    np.testing.assert_allclose(after, 1.2, rtol=1e-6)
+    np.testing.assert_allclose(after_act, 1.2, rtol=1e-6)
+
+
+def test_apply_drift_scales_expected_fields(tiny_specs):
+    mods = device_sim.make_fleet(tiny_specs[:2])
+    stacked = fleet.stack_params([m.params for m in mods])
+    drift = DriftProcess(temp_amp=0.0, aging_rate=5e-3, act_aging_rate=0.0,
+                         noise_sigma=0.0)
+    drifted = device_sim.apply_drift(
+        stacked, [s.vendor for s in tiny_specs[:2]],
+        [s.module_id for s in tiny_specs[:2]], 100, drift)
+    np.testing.assert_allclose(np.asarray(drifted.i2n),
+                               np.asarray(stacked.i2n) * 1.5, rtol=1e-5)
+    # act group has zero aging here: untouched
+    np.testing.assert_allclose(np.asarray(drifted.q_actpre),
+                               np.asarray(stacked.q_actpre), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Decayed sufficient statistics
+# ---------------------------------------------------------------------------
+def test_update_stats_matches_numpy_reference(rng):
+    M, C, width = 3, 10, 4
+    stats = recalibrate.RunningStats(
+        np.zeros((M, C), np.float32), np.zeros((M, C), np.float32))
+    w_ref = np.zeros((M, C), np.float32)
+    m_ref = np.zeros((M, C), np.float32)
+    decay = np.float32(0.8)
+    pred = np.zeros((M, C), np.float32)
+    for k in range(6):
+        idx = np.asarray([(k * width + j) % C for j in range(width)])
+        obs = rng.normal(10.0, 1.0, size=(M, width)).astype(np.float32)
+        stats, _ = recalibrate._update_stats(stats, obs, idx, decay, pred,
+                                             np.float32(0.01))
+        old = decay * w_ref[:, idx]
+        w_ref[:, idx] = old + 1.0
+        m_ref[:, idx] = (old * m_ref[:, idx] + obs) / w_ref[:, idx]
+    np.testing.assert_allclose(np.asarray(stats.weight), w_ref, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(stats.mean), m_ref, rtol=1e-5)
+
+
+def test_decay_one_is_exact_running_mean(rng):
+    w = np.float32(0.0)
+    m = np.float32(0.0)
+    xs = rng.normal(5.0, 2.0, size=12).astype(np.float32)
+    for i, x in enumerate(xs):
+        w, m = fitting.decayed_moment_update(w, m, x, 1.0)
+        np.testing.assert_allclose(float(m), np.mean(xs[:i + 1]), rtol=1e-5)
+        assert float(w) == pytest.approx(i + 1)
+
+
+def test_streaming_refit_equals_from_scratch_refit(quick_vampire,
+                                                   tiny_fleet, tiny_specs):
+    """With decay=1 and no seed mass, the streaming refit over the fed
+    telemetry equals ``invert_campaign`` run from scratch on the plain
+    per-cell means of the same stream."""
+    cfg = recalibrate.RecalConfig(decay=1.0, seed_weight=0.0,
+                                  slice_size=10_000)  # one full-set slice
+    fitter = recalibrate.StreamingFitter(quick_vampire, tiny_specs, cfg)
+    src = recalibrate.TelemetrySource(tiny_fleet, cfg, drift=NO_DRIFT,
+                                      noisy=False)
+    for tick in range(2):
+        cur, idx = src.measure(tick)
+        fitter.observe(cur, idx, tick)
+    streamed = fitter.refit()
+
+    mean = np.asarray(fitter.stats.mean, np.float64)
+    plan = fitter.plan
+    fitted = []
+    for v in quick_vampire.vendors:
+        rows = [i for i, s in enumerate(tiny_specs) if s.vendor == v]
+        idd = {key: mean[rows, i]
+               for i, key in enumerate(characterize.IDD_KEYS)}
+        pm = mean[rows[:cfg.probe_modules],
+                  len(characterize.IDD_KEYS):].mean(axis=0)
+        cur = {pt.label: float(pm[i])
+               for i, pt in enumerate(plan.probe_points)}
+        fitted.append(characterize.invert_campaign(plan, v, idd_measured=idd,
+                                                   cur=cur).fitted)
+    scratch = fleet.stack_params(fitted)
+    for got, want in zip(jax.tree_util.tree_leaves(streamed.fleet.params),
+                         jax.tree_util.tree_leaves(scratch)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Fitter registry + campaign equivalence
+# ---------------------------------------------------------------------------
+def test_fitter_registry_resolution():
+    assert set(model_api.registered_fitters()) >= {"campaign", "streaming"}
+    assert model_api.resolve_fitter("campaign").streaming is False
+    assert model_api.resolve_fitter("offline").name == "campaign"
+    assert model_api.resolve_fitter("online").name == "streaming"
+    assert model_api.resolve_fitter("streaming", streaming=True).streaming
+    with pytest.raises(ValueError, match="registered fitters"):
+        model_api.resolve_fitter("nope")
+    with pytest.raises(ValueError, match="one-shot"):
+        model_api.resolve_fitter("campaign", streaming=True)
+    with pytest.raises(ValueError, match="streaming"):
+        model_api.resolve_fitter("streaming", streaming=False)
+
+
+def test_campaign_fitter_bit_for_bit(quick_vampire, tiny_fleet):
+    """``fit(fitter='campaign')`` (and the ``Vampire.fit`` shim onto it)
+    reproduces the pre-registry fit body exactly, leaf for leaf."""
+    from repro.core.vampire import Vampire
+    legacy = Vampire(by_vendor=characterize.characterize_fleet(
+        tiny_fleet, probe_modules=2, probe_reps=64, n_rows=8))
+    legacy.fleet
+    for got, want in zip(jax.tree_util.tree_leaves(quick_vampire),
+                         jax.tree_util.tree_leaves(legacy)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_vampire_fit_shim_warning_free(tiny_fleet, recwarn):
+    from repro.core.vampire import Vampire
+    Vampire.fit(tiny_fleet, probe_modules=2, probe_reps=64, n_rows=8)
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_fit_streaming_requires_vampire(tiny_fleet):
+    with pytest.raises(ValueError, match="VAMPIRE"):
+        model_api.fit("micron", tiny_fleet, fitter="streaming")
+
+
+# ---------------------------------------------------------------------------
+# DataProfile
+# ---------------------------------------------------------------------------
+def test_data_profile_normalization():
+    prof = model_api.DataProfile(ones_frac=0.5, toggle_frac=0.25)
+    assert model_api.normalize_data_profile(prof) is prof
+    loose = model_api.normalize_data_profile(None, 0.5, 0.25)
+    assert loose == prof
+    assert model_api.DataProfile().empty and not prof.empty
+    with pytest.raises(ValueError, match="not both"):
+        model_api.normalize_data_profile(prof, ones_frac=0.5)
+    with pytest.raises(TypeError):
+        model_api.normalize_data_profile({"ones_frac": 0.5})
+
+
+def test_estimate_accepts_data_profile(quick_vampire):
+    from repro.core import idd_loops
+    trs = [idd_loops.idd0(reps=2), idd_loops.idd4r(reps=2)]
+    prof = model_api.DataProfile(ones_frac=0.5, toggle_frac=0.25)
+    a = quick_vampire.estimate(trs, mode="distribution", data=prof)
+    b = quick_vampire.estimate(trs, mode="distribution",
+                               ones_frac=0.5, toggle_frac=0.25)
+    np.testing.assert_array_equal(np.asarray(a.energy_pj),
+                                  np.asarray(b.energy_pj))
+    with pytest.raises(ValueError):
+        quick_vampire.estimate(trs, mode="distribution")  # fractions missing
+    with pytest.raises(ValueError):
+        quick_vampire.estimate(trs, mode="mean", data=prof)  # rejected
+    # the baselines share the same contract
+    baseline = model_api.make_estimator("micron", quick_vampire)
+    c = baseline.estimate(trs, mode="distribution", data=prof)
+    d = baseline.estimate(trs, mode="distribution",
+                          ones_frac=0.5, toggle_frac=0.25)
+    np.testing.assert_array_equal(np.asarray(c.energy_pj),
+                                  np.asarray(d.energy_pj))
+
+
+# ---------------------------------------------------------------------------
+# Drift detector
+# ---------------------------------------------------------------------------
+def test_detector_fires_on_planted_step(quick_vampire, tiny_fleet,
+                                        tiny_specs):
+    cfg = recalibrate.RecalConfig()
+    step = dataclasses.replace(NO_DRIFT, step_tick=4, step_frac=0.15)
+    fitter = recalibrate.StreamingFitter(quick_vampire, tiny_specs, cfg)
+    src = recalibrate.TelemetrySource(tiny_fleet, cfg, drift=step)
+    reports = []
+    for tick in range(1, 7):
+        cur, idx = src.measure(tick)
+        reports.append(fitter.observe(cur, idx, tick))
+    assert not any(r.triggered for r in reports[:3])   # before the step
+    assert all(r.triggered for r in reports[3:])       # from the step on
+    assert reports[3].score > 2 * cfg.drift_threshold
+    assert set(reports[3].by_key)  # per-key scores surfaced
+
+
+def test_detector_quiet_without_drift(quick_vampire, tiny_fleet,
+                                      tiny_specs):
+    cfg = recalibrate.RecalConfig()
+    fitter = recalibrate.StreamingFitter(quick_vampire, tiny_specs, cfg)
+    src = recalibrate.TelemetrySource(tiny_fleet, cfg, drift=NO_DRIFT)
+    scores = []
+    for tick in range(1, 13):
+        cur, idx = src.measure(tick)
+        scores.append(fitter.observe(cur, idx, tick).score)
+    assert max(scores) < cfg.drift_threshold  # no false positives
+
+
+# ---------------------------------------------------------------------------
+# The tracking gate: frozen diverges, recalibrated tracks
+# ---------------------------------------------------------------------------
+def test_frozen_diverges_recalibrated_tracks(quick_vampire, tiny_fleet,
+                                             tiny_specs):
+    cfg = recalibrate.RecalConfig(decay=0.7, slice_size=120)
+    drift = DriftProcess(temp_amp=0.01, temp_period=64.0, aging_rate=8e-3,
+                         act_aging_rate=5e-3, noise_sigma=1e-3)
+    fitter = recalibrate.StreamingFitter(quick_vampire, tiny_specs, cfg)
+    frozen = fitter.model
+    src = recalibrate.TelemetrySource(tiny_fleet, cfg, drift=drift)
+    tb = src.batch
+    ckpts = (30, 60, 90, 120)
+    frozen_err, recal_err = [], []
+    for tick in range(1, ckpts[-1] + 1):
+        cur, idx = src.measure(tick)
+        if fitter.observe(cur, idx, tick).triggered:
+            fitter.refit()
+        if tick in ckpts:
+            truth = src.true_params_at(tick)
+            frozen_err.append(recalibrate.fleet_current_mape(
+                frozen, tb.trace, tb.weight, tiny_specs, truth))
+            recal_err.append(recalibrate.fleet_current_mape(
+                fitter.model, tb.trace, tb.weight, tiny_specs, truth))
+    # frozen error grows monotonically...
+    assert all(b > a for a, b in zip(frozen_err, frozen_err[1:]))
+    # ...to >=5x the recalibrated model's error
+    assert frozen_err[-1] >= 5.0 * recal_err[-1]
+    # the recalibrated model stays within 2x of a freshly-refit oracle
+    final = ckpts[-1]
+    truth = src.true_params_at(final)
+    drifted = [device_sim.SimulatedModule(
+        s, jax.tree_util.tree_map(lambda x, i=i: x[i], truth))
+        for i, s in enumerate(tiny_specs)]
+    oracle = model_api.fit("vampire", drifted, fitter="campaign",
+                           probe_modules=2, probe_reps=64, n_rows=8)
+    oracle_err = recalibrate.fleet_current_mape(
+        oracle, tb.trace, tb.weight, tiny_specs, truth)
+    assert recal_err[-1] <= 2.0 * oracle_err
+
+
+# ---------------------------------------------------------------------------
+# Fit-while-serving
+# ---------------------------------------------------------------------------
+def test_fit_while_serving_zero_recompiles(quick_vampire, tiny_fleet,
+                                           tiny_specs):
+    from repro.core import idd_loops
+    from repro.serving import EstimationService, ServiceConfig
+
+    # full-coverage slices: one tick touches every probe cell, so the
+    # triggered refit moves every inverted parameter (not just the ones
+    # the first round-robin slice happened to revisit)
+    cfg = recalibrate.RecalConfig(slice_size=10_000)
+    step = dataclasses.replace(NO_DRIFT, step_tick=1, step_frac=0.2)
+    fitter = recalibrate.StreamingFitter(quick_vampire, tiny_specs, cfg)
+    svc = EstimationService(quick_vampire, ServiceConfig(lint=False),
+                            fitter=fitter)
+    src = recalibrate.TelemetrySource(tiny_fleet, cfg, drift=step)
+    trs = [idd_loops.idd0(reps=2), idd_loops.idd4r(reps=2)]
+
+    tickets, _ = svc.submit_many(trs)
+    svc.drain()
+    before = svc.engine.cache_size()
+    res_before = np.asarray(svc.result(tickets[0]).energy_pj)
+
+    cur, idx = src.measure(1)
+    report = svc.observe_telemetry(cur, idx, tick=1)
+    assert report.triggered
+
+    tickets2, _ = svc.submit_many(trs)
+    svc.drain()
+    res_after = np.asarray(svc.result(tickets2[0]).energy_pj)
+    m = svc.metrics()
+    assert m.recalibrations == 1
+    assert m.drift_score == pytest.approx(report.score)
+    assert m.drift_peak >= m.drift_score
+    assert m.drift_by_key == report.by_key
+    # the hot-swap is treedef-stable: zero new compiled programs...
+    assert svc.engine.cache_size() == before
+    assert m.engine_programs == before
+    # ...and the refreshed parameters actually changed the answers
+    assert not np.array_equal(res_before, res_after)
+
+
+def test_service_without_fitter_raises(quick_vampire):
+    from repro.serving import EstimationService, ServiceConfig
+    svc = EstimationService(quick_vampire, ServiceConfig(lint=False))
+    with pytest.raises(RuntimeError, match="streaming fitter"):
+        svc.observe_telemetry(np.zeros((1, 1)), [0], tick=0)
